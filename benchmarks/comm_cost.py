@@ -1,0 +1,49 @@
+"""Paper Table 1 + the compression-ratio column of Tables 2/5: wire bytes
+and transmission time per gradient exchange, for the paper's CNNs and for
+the assigned architectures, per method. Both the information-theoretic
+ratio the paper quotes (32/log2 s) and the achievable packed ratio are
+reported; times at the paper's 10 Gbps and at one v5e ICI link."""
+from __future__ import annotations
+
+import math
+
+from benchmarks.common import csv_row
+from repro.configs.base import ASSIGNED_ARCHS, get_config
+from repro.core import make_quantizer
+from repro.models import LM
+from repro.utils.pytree import tree_count
+import jax
+
+PAPER_MODELS = {"AlexNet": 61.1e6, "VGG-19": 143.7e6, "DenseNet-161": 28.7e6,
+                "GoogLeNet": 13.0e6, "ResNet-50": 25.6e6}
+METHODS = ["fp", "signsgd", "bingrad-b", "terngrad", "orq-3", "qsgd-5",
+           "orq-5", "qsgd-9", "orq-9"]
+
+
+def run(emit):
+    # Table 1 reproduction: FP comm time at 10 Gbps
+    for name, n in PAPER_MODELS.items():
+        ms = n * 32 / 10e9 * 1e3
+        emit(csv_row(f"table1_comm/{name}_fp", 0.0,
+                     f"params={n/1e6:.1f}M;time_10gbps={ms:.0f}ms"))
+    # ratios per method (paper quotes info-theoretic)
+    for m in METHODS:
+        qz = make_quantizer(m, bucket_size=512)
+        if qz.is_identity:
+            continue
+        info_ratio = 32 / math.log2(qz.s)
+        n = 25.6e6
+        packed = qz.wire_bytes(int(n))
+        emit(csv_row(f"table1_comm/ratio_{m}", 0.0,
+                     f"info_x{info_ratio:.1f};packed_x{n*4/packed:.1f}"))
+    # assigned archs: one full gradient exchange per method
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        n = tree_count(jax.eval_shape(LM(cfg).init, jax.random.key(0)))
+        for m in ["fp", "terngrad", "orq-9"]:
+            qz = make_quantizer(m, bucket_size=512)
+            wire = qz.wire_bytes(n)
+            t_ici = wire / 50e9
+            emit(csv_row(f"table1_comm/{arch}_{m}", 0.0,
+                         f"params={n/1e9:.1f}B;wire={wire/2**30:.2f}GiB;"
+                         f"t_ici_link={t_ici:.2f}s"))

@@ -1,0 +1,46 @@
+"""Shared benchmark helpers: real-gradient harvesting + timing."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_smoke_config
+from repro.data import SyntheticLM
+from repro.models import LM
+
+
+def harvest_gradient(arch: str = "lm-100m", seq: int = 64, batch: int = 4,
+                     seed: int = 0):
+    """One real backprop gradient (flattened per-leaf dict) from a reduced
+    model — the distribution quantizers are judged on (paper Fig. 1 uses
+    ResNet-110 gradients; ours come from the transformer substrate)."""
+    cfg = get_smoke_config(arch)
+    model = LM(cfg)
+    params = model.init(jax.random.key(seed))
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=seq,
+                       batch_size=batch, seed=seed)
+    grads = jax.jit(jax.grad(lambda p, b: model.loss(p, b)[0]))(
+        params, data.batch(0))
+    flat = jnp.concatenate(
+        [g.reshape(-1).astype(jnp.float32)
+         for g in jax.tree_util.tree_leaves(grads)])
+    return flat
+
+
+def time_call(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall time per call in microseconds (jit-compiled fns)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def csv_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"

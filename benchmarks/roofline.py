@@ -1,0 +1,47 @@
+"""§Roofline: read the dry-run artifacts and print the per-(arch x shape)
+roofline table (compute/memory/collective terms, bottleneck, useful-flops
+ratio). The dry-runs themselves are produced by launch/dryrun.py."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import csv_row
+
+DRYRUN_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "dryrun")
+
+
+def run(emit):
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    if not files:
+        emit(csv_row("roofline/none", 0.0,
+                     "no dry-run artifacts; run launch/dryrun.py --all"))
+        return
+    n_ok = n_skip = n_err = 0
+    for f in files:
+        with open(f) as fh:
+            res = json.load(fh)
+        tag = f"{res['arch']}/{res['shape']}/{res.get('mesh','?')}"
+        if "skipped" in res:
+            n_skip += 1
+            emit(csv_row(f"roofline/{tag}", 0.0, "SKIP:" +
+                         res["skipped"][:60]))
+            continue
+        if "error" in res:
+            n_err += 1
+            emit(csv_row(f"roofline/{tag}", 0.0, "ERROR"))
+            continue
+        n_ok += 1
+        r = res["roofline"]
+        emit(csv_row(
+            f"roofline/{tag}",
+            max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+            f"compute={r['compute_s']:.4f}s;memory={r['memory_s']:.4f}s;"
+            f"collective={r['collective_s']:.4f}s;"
+            f"bottleneck={r['bottleneck'].replace('_s','')};"
+            f"useful={r['useful_flops_ratio']:.2f};"
+            f"mem_GiB={res['memory']['peak_bytes_per_device']/2**30:.1f}"))
+    emit(csv_row("roofline/summary", 0.0,
+                 f"ok={n_ok};skip={n_skip};error={n_err}"))

@@ -1,0 +1,53 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig1,table3]
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    ("fig1_quant_error", "benchmarks.quant_error"),
+    ("table1_comm", "benchmarks.comm_cost"),
+    ("table2_convergence", "benchmarks.convergence"),
+    ("table3_bucket", "benchmarks.bucket_size"),
+    ("table4_clipping", "benchmarks.clipping"),
+    ("table5_distributed", "benchmarks.distributed"),
+    ("roofline", "benchmarks.roofline"),
+]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated prefixes of benchmarks to run")
+    args = ap.parse_args(argv)
+    only = args.only.split(",") if args.only else None
+
+    print("name,us_per_call,derived")
+
+    def emit(row: str) -> None:
+        print(row, flush=True)
+
+    failures = 0
+    for tag, modname in MODULES:
+        if only and not any(tag.startswith(o) for o in only):
+            continue
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            mod.run(emit)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            emit(f"{tag}/ERROR,0.0,{traceback.format_exc(limit=1)!r}"
+                 .replace("\n", " "))
+    if failures:
+        print(f"# {failures} benchmark module(s) failed", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

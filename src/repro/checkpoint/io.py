@@ -1,0 +1,49 @@
+"""Checkpointing: pytree <-> .npz with structure manifest.
+
+Arrays are fetched to host (fully addressable or replicated views) and
+written as a flat npz keyed by the pytree key-path; a JSON manifest records
+the treedef so restore round-trips arbitrary nests of dict/tuple/list and
+NamedTuple-free optimizer states. Scalars and step counters ride along.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {jax.tree_util.keystr(path): np.asarray(leaf)
+            for path, leaf in leaves}
+
+
+def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    order = sorted(flat)
+    np.savez_compressed(path, **{f"arr_{i}": flat[k]
+                                 for i, k in enumerate(order)})
+    manifest = {"keys": order, "step": step}
+    with open(path + ".manifest.json", "w") as f:
+        json.dump(manifest, f)
+
+
+def load_checkpoint(path: str, like: Any):
+    """Restore into the structure of ``like`` (shapes must match)."""
+    with open(path + ".manifest.json") as f:
+        manifest = json.load(f)
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    by_key = {k: data[f"arr_{i}"] for i, k in enumerate(manifest["keys"])}
+
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_, leaf in paths:
+        key = jax.tree_util.keystr(path_)
+        arr = by_key[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["step"]

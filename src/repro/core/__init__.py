@@ -1,0 +1,16 @@
+"""The paper's contribution: optimal gradient quantization (BinGrad / ORQ).
+
+Public surface:
+    QuantConfig, make_quantizer, Quantizer, QuantizedTensor
+    quantized collectives live in repro.core.comm
+"""
+from repro.core.api import ALL_METHODS, QuantConfig, make_quantizer
+from repro.core.quantizers import QuantizedTensor, Quantizer
+
+__all__ = [
+    "ALL_METHODS",
+    "QuantConfig",
+    "make_quantizer",
+    "Quantizer",
+    "QuantizedTensor",
+]

@@ -1,0 +1,60 @@
+"""Public quantization API: config + registry.
+
+``QuantConfig`` is what flows through launcher flags / arch configs;
+``make_quantizer`` turns it into the stateless ``Quantizer`` recipe.
+Names accepted (paper §5 nomenclature):
+
+    fp | orq-3 | orq-5 | orq-9 | orq-17 | bingrad-pb | bingrad-b |
+    terngrad | qsgd-5 | qsgd-9 | linear-5 | linear-9 | signsgd | minmax2
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+from repro.core.quantizers import Quantizer
+
+_NAME_RE = re.compile(r"^([a-z]+[a-z0-9]*?)(?:-(pb|b|\d+))?$")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    name: str = "fp"               # e.g. "orq-9"
+    bucket_size: int = 2048
+    clip_c: Optional[float] = None
+    refine_iters: int = 0
+    lloyd_iters: int = 0
+    server_requant: bool = True    # Algorithm 2 option (b): quantize the
+                                   # averaged gradient on the way back down
+
+    def to_quantizer(self) -> Quantizer:
+        return make_quantizer(
+            self.name,
+            bucket_size=self.bucket_size,
+            clip_c=self.clip_c,
+            refine_iters=self.refine_iters,
+            lloyd_iters=self.lloyd_iters,
+        )
+
+
+def make_quantizer(name: str, **kw) -> Quantizer:
+    m = _NAME_RE.match(name.strip().lower().replace("_", "-"))
+    if not m:
+        raise ValueError(f"bad quantizer name {name!r}")
+    base, suffix = m.group(1), m.group(2)
+    if base == "bingrad":
+        method = f"bingrad_{suffix}"
+        return Quantizer(method=method, **kw)
+    if base in ("orq", "qsgd", "linear"):
+        s = int(suffix) if suffix else {"orq": 9, "qsgd": 9, "linear": 9}[base]
+        return Quantizer(method=base, num_levels=s, **kw)
+    if base in ("fp", "terngrad", "signsgd", "minmax2"):
+        return Quantizer(method=base, **kw)
+    raise ValueError(f"unknown quantizer {name!r}")
+
+
+ALL_METHODS = [
+    "fp", "orq-3", "orq-5", "orq-9", "bingrad-pb", "bingrad-b",
+    "terngrad", "qsgd-5", "qsgd-9", "linear-5", "linear-9", "signsgd",
+]

@@ -1,0 +1,32 @@
+"""Bucket-based gradient layout (paper §5: bucket size d, default 512/2048).
+
+The whole (flattened) gradient is split into buckets of fixed length ``d``;
+each bucket is quantized independently with its own levels. The final,
+possibly ragged bucket is handled with an explicit validity mask so padding
+never contaminates the fitted levels.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def num_buckets(n: int, d: int) -> int:
+    return -(-n // d)
+
+
+def to_buckets(flat: jnp.ndarray, d: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(n,) -> ((nb, d) values, (nb, d) bool mask). Padding value is 0 but masked."""
+    assert flat.ndim == 1, f"to_buckets expects flat input, got {flat.shape}"
+    n = flat.shape[0]
+    nb = num_buckets(n, d)
+    pad = nb * d - n
+    vals = jnp.pad(flat, (0, pad))
+    mask = jnp.arange(nb * d, dtype=jnp.int32) < n
+    return vals.reshape(nb, d), mask.reshape(nb, d)
+
+
+def from_buckets(bkt: jnp.ndarray, n: int) -> jnp.ndarray:
+    """(nb, d) -> (n,) dropping padding."""
+    return bkt.reshape(-1)[:n]

@@ -1,0 +1,25 @@
+"""TernGrad-style gradient clipping (paper §5): clip(v) = sign(v)·min(|v|, c·σ).
+
+σ² is the per-bucket gradient variance; c is a positive constant (paper uses
+2.5, also sweeps 1.7 in Table 4). Applied *before* level fitting/quantization.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def masked_moments(bkt: jnp.ndarray, mask: jnp.ndarray):
+    """Per-bucket (mean, std) over valid elements. Returns ((nb,1), (nb,1))."""
+    m = mask.astype(bkt.dtype)
+    cnt = jnp.maximum(m.sum(axis=-1, keepdims=True), 1.0)
+    mean = (bkt * m).sum(axis=-1, keepdims=True) / cnt
+    var = (((bkt - mean) ** 2) * m).sum(axis=-1, keepdims=True) / cnt
+    return mean, jnp.sqrt(var)
+
+
+def sigma_clip(bkt: jnp.ndarray, mask: jnp.ndarray, c: float) -> jnp.ndarray:
+    """Clip each element to ±c·σ of its bucket (σ computed around 0-mean,
+    matching TernGrad which clips magnitudes)."""
+    _, std = masked_moments(bkt, mask)
+    lim = c * std
+    return jnp.clip(bkt, -lim, lim)

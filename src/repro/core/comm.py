@@ -1,0 +1,352 @@
+"""Quantized collectives: the distributed half of Algorithm 2, TPU-native.
+
+The paper's parameter-server exchange maps onto two collective phases inside
+``shard_map`` (manual axes = the data-parallel mesh axes):
+
+  phase 1 (worker -> server)  ``quantized_reduce_scatter_mean``:
+      each worker fits levels on its *local* gradient (the paper's runtime
+      level selection), quantizes, bit-packs, and ``all_to_all``s the uint32
+      payload + f32 level tables. Every worker then decodes the L received
+      copies of its own chunk and averages — it *is* the server for that
+      chunk. Wire bytes shrink by ~32/bits vs an f32 reduce-scatter.
+
+  phase 2 (server -> worker)  inside ``quantized_all_reduce_mean``:
+      the averaged chunk is re-quantized (fresh levels) and ``all_gather``ed
+      — the paper's §4 option (b) "quantize the averaged gradient that the
+      server sends back". Decoding is deterministic, so all workers
+      reconstruct identical full gradients and replicated parameters stay
+      in sync. ``server_requant=False`` gathers the f32 chunk instead
+      (exact broadcast, 32-bit downlink).
+
+For ZeRO-3 training the exchange rides the FSDP parameter gather:
+``make_fsdp_gather`` returns an all_gather whose custom-VJP backward is the
+phase-1 quantized reduce-scatter — exactly where the data-parallel gradient
+communication lives.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.quantizers import Quantizer
+from repro.kernels import ops
+
+
+def _names(axis_names) -> Tuple[str, ...]:
+    return (axis_names,) if isinstance(axis_names, str) else tuple(axis_names)
+
+
+def axis_size(axis_names) -> int:
+    n = 1
+    for a in _names(axis_names):
+        n *= lax.axis_size(a)
+    return n
+
+
+def _bucket_len(chunk: int, d: int) -> int:
+    return min(d, max(chunk, 1))
+
+
+# ---------------------------------------------------------------------------
+# phase 1 core: quantized reduce-scatter over explicit (L, chunk) parts
+# ---------------------------------------------------------------------------
+
+def _assign(qz: Quantizer, bkt, levels, key, use_kernels: bool):
+    """Rounding dispatch: random-rounding methods go through the Pallas
+    quant_rr kernel (VMEM-tiled; never materializes an (nb, d, s) tensor)."""
+    from repro.core import clipping, rounding as R
+
+    if qz.method in ("orq", "terngrad", "qsgd", "linear", "minmax2",
+                     "bingrad_pb"):
+        if qz.clip_c is not None:
+            mask = jnp.ones(bkt.shape, dtype=bool)
+            bkt = clipping.sigma_clip(bkt, mask, qz.clip_c)
+        bits = R.random_bits(key, bkt.shape)
+        return ops.quant_rr(bkt, levels, bits, use_kernels=use_kernels)
+    return qz.assign(bkt, levels, key)
+
+
+def _rs_mean_parts(parts, valid, qz: Quantizer, key, names, use_kernels):
+    """parts (L, chunk) local contributions, one row per destination worker;
+    valid (L, chunk) bool. Returns this worker's (chunk,) mean slice.
+
+    ``key`` must already be folded per-worker (callers fold in the dp axis
+    index OUTSIDE any nested manual region — axis_index of an outer-manual
+    axis cannot lower inside a nested shard_map)."""
+    L, chunk = parts.shape
+    d_eff = _bucket_len(chunk, qz.bucket_size)
+    pad = -(-chunk // d_eff) * d_eff - chunk
+    parts = jnp.pad(parts.astype(jnp.float32), ((0, 0), (0, pad)))
+    valid = jnp.pad(valid, ((0, 0), (0, pad)))
+    nbc = parts.shape[1] // d_eff
+
+    bkt = parts.reshape(L * nbc, d_eff)
+    mask = valid.reshape(L * nbc, d_eff)
+    levels = qz.fit(bkt, mask)                           # runtime levels
+    idx = jnp.where(mask, _assign(qz, bkt, levels, key, use_kernels), 0)
+
+    bits = qz.wire_bits_per_element
+    words = ops.pack(idx, bits, use_kernels=use_kernels)  # (L*nbc, nw) u32
+    words = words.reshape(L, nbc, -1)
+    levels = levels.reshape(L, nbc, -1)
+    # the wire: uint32 payload + f32 level tables
+    words = lax.all_to_all(words, names, split_axis=0, concat_axis=0)
+    levels = lax.all_to_all(levels, names, split_axis=0, concat_axis=0)
+    idx_all = jax.vmap(
+        lambda w: ops.unpack(w, bits, d_eff, use_kernels=use_kernels)
+    )(words)                                              # (L, nbc, d_eff)
+    mean_bkt = ops.dequant_avg(idx_all, levels, use_kernels=use_kernels)
+    return mean_bkt.reshape(-1)[:chunk]
+
+
+def quantized_reduce_scatter_mean(
+    flat: jnp.ndarray,
+    qz: Quantizer,
+    key: jax.Array,
+    axis_names,
+    *,
+    worker_id=None,
+    use_kernels: bool = True,
+) -> jnp.ndarray:
+    """Each worker holds a full local gradient ``flat`` (n,). Returns this
+    worker's (chunk,) slice of the across-worker *mean*, chunk = ceil(n/L).
+    FP scheme short-circuits to a plain psum_scatter.
+
+    ``worker_id`` defaults to ``axis_index`` of the dp axes; custom-VJP
+    backward callers must pass it explicitly (axis_index cannot lower from
+    transposed/hoisted contexts)."""
+    n = flat.shape[0]
+    names = _names(axis_names)
+    L = axis_size(names)
+    chunk = -(-n // L)
+    padded = jnp.pad(flat, (0, L * chunk - n))
+    if qz.is_identity:
+        return lax.psum_scatter(
+            padded.reshape(L, chunk), names, scatter_dimension=0,
+            tiled=False) / L
+    valid = (jnp.arange(L * chunk) < n).reshape(L, chunk)
+    if worker_id is None:
+        worker_id = lax.axis_index(names)
+    key = jax.random.fold_in(key, worker_id)
+    return _rs_mean_parts(padded.reshape(L, chunk), valid, qz, key, names,
+                          use_kernels)
+
+
+# ---------------------------------------------------------------------------
+# phase 1 + 2: quantized all-reduce (mean), replicated-parameter mode
+# ---------------------------------------------------------------------------
+
+def local_qdq_comm_layout(
+    flat: jnp.ndarray,
+    qz: Quantizer,
+    key: jax.Array,
+    axis_names,
+    *,
+    worker_id=None,
+    use_kernels: bool = True,
+) -> jnp.ndarray:
+    """This worker's own dequantized gradient, bit-identical to what it
+    contributed to ``quantized_reduce_scatter_mean`` (same chunk/bucket
+    layout, same folded key). Used by error feedback: e ← g − Q⁻¹(Q(g))."""
+    n = flat.shape[0]
+    names = _names(axis_names)
+    L = axis_size(names)
+    chunk = -(-n // L)
+    padded = jnp.pad(flat.astype(jnp.float32), (0, L * chunk - n))
+    d_eff = _bucket_len(chunk, qz.bucket_size)
+    pad2 = -(-chunk // d_eff) * d_eff - chunk
+    parts = jnp.pad(padded.reshape(L, chunk), ((0, 0), (0, pad2)))
+    valid = jnp.pad((jnp.arange(L * chunk) < n).reshape(L, chunk),
+                    ((0, 0), (0, pad2)))
+    bkt = parts.reshape(-1, d_eff)
+    mask = valid.reshape(-1, d_eff)
+    levels = qz.fit(bkt, mask)
+    if worker_id is None:
+        worker_id = lax.axis_index(names)
+    key = jax.random.fold_in(key, worker_id)
+    idx = jnp.where(mask, _assign(qz, bkt, levels, key, use_kernels), 0)
+    vals = Quantizer.decode(idx, levels)
+    return vals.reshape(L, -1)[:, :chunk].reshape(-1)[:n]
+
+
+def quantized_all_reduce_mean(
+    flat: jnp.ndarray,
+    qz: Quantizer,
+    key: jax.Array,
+    axis_names,
+    *,
+    worker_id=None,
+    server_requant: bool = True,
+    use_kernels: bool = True,
+) -> jnp.ndarray:
+    """Full Algorithm 2 exchange. Returns the (n,) mean gradient, identical
+    on every worker (the phase-2 decode is deterministic)."""
+    n = flat.shape[0]
+    names = _names(axis_names)
+    L = axis_size(names)
+    if qz.is_identity:
+        return lax.pmean(flat, names)
+
+    chunk = -(-n // L)
+    mean_chunk = quantized_reduce_scatter_mean(
+        flat, qz, key, names, worker_id=worker_id, use_kernels=use_kernels)
+
+    if not server_requant:
+        full = lax.all_gather(mean_chunk, names, axis=0, tiled=False)
+        return full.reshape(-1)[:n].astype(flat.dtype)
+
+    # phase 2: re-quantize the averaged chunk; broadcast payload + levels.
+    me = lax.axis_index(names) if worker_id is None else worker_id
+    d_eff = _bucket_len(chunk, qz.bucket_size)
+    pad = -(-chunk // d_eff) * d_eff - chunk
+    bkt = jnp.pad(mean_chunk, (0, pad)).reshape(-1, d_eff)
+    pos = me * chunk + jnp.arange(chunk + pad)
+    mask = ((pos < n) & (jnp.arange(chunk + pad) < chunk)).reshape(-1, d_eff)
+    levels = qz.fit(bkt, mask)
+    key2 = jax.random.fold_in(jax.random.fold_in(key, 0x5EC0), me)
+    idx = jnp.where(mask, _assign(qz, bkt, levels, key2, use_kernels), 0)
+    bits = qz.wire_bits_per_element
+    words = ops.pack(idx, bits, use_kernels=use_kernels)
+    words = lax.all_gather(words, names, axis=0, tiled=False)
+    levels_all = lax.all_gather(levels, names, axis=0, tiled=False)
+    idx_all = jax.vmap(
+        lambda w: ops.unpack(w, bits, d_eff, use_kernels=use_kernels)
+    )(words)                                              # (L, nbc, d_eff)
+    vals = jax.vmap(Quantizer.decode)(idx_all, levels_all)  # (L, nbc, d_eff)
+    vals = vals.reshape(L, -1)[:, :chunk]
+    return vals.reshape(-1)[:n].astype(flat.dtype)
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-3: FSDP gather with quantized-gradient backward
+# ---------------------------------------------------------------------------
+
+def make_fsdp_gather(
+    qz: Quantizer,
+    axis_names,
+    *,
+    dim: int,
+    tp_dim: Optional[int] = None,
+    tp_axis: str = "model",
+    compute_dtype=jnp.bfloat16,
+    param_dtype=jnp.float32,
+    use_kernels: bool = True,
+):
+    """Returns gather(w_slice, key) -> full ``compute_dtype`` leaf.
+
+    fwd: cast + all_gather along ``dim`` over the dp axes (the FSDP
+         parameter broadcast; bf16 wire).
+    bwd: the paper — quantized reduce-scatter of the full-size local
+         gradient cotangent; the f32 slice matches the stored shard.
+
+    When the leaf is also tensor-parallel (``tp_dim`` over the auto
+    ``tp_axis``), the backward runs inside a NESTED manual shard_map over
+    that axis: every device quantizes its own contiguous gradient shard and
+    the all_to_all stays within the dp axes. Without this, XLA has to
+    replicate the strided flatten of a TP-sharded cotangent — terabytes of
+    involuntary all-gather on 100B-parameter models.
+    """
+    names = _names(axis_names)
+
+    @jax.custom_vjp
+    def gather(w, key):
+        del key
+        return lax.all_gather(w.astype(compute_dtype), names, axis=dim,
+                              tiled=True)
+
+    def fwd(w, key):
+        # capture the worker id in the PRIMAL context: axis_index cannot
+        # lower from the transposed/hoisted backward context
+        wid = lax.axis_index(names)
+        return gather(w, key), (key, wid)
+
+    def _local_rs(g, key):
+        """Quantized RS of one (possibly per-tp-shard) cotangent block."""
+        L = axis_size(names)
+        gm = jnp.moveaxis(g.astype(jnp.float32), dim, 0)
+        lead, rest = gm.shape[0], gm.shape[1:]
+        chunk = (lead // L) * int(np.prod(rest)) if rest else lead // L
+        parts = gm.reshape(L, chunk)
+        if qz.is_identity:
+            mean_chunk = lax.psum_scatter(
+                parts, names, scatter_dimension=0, tiled=False) / L
+        else:
+            valid = jnp.ones((L, chunk), dtype=bool)
+            mean_chunk = _rs_mean_parts(parts, valid, qz, key, names,
+                                        use_kernels)
+        out = mean_chunk.reshape((lead // L,) + rest)
+        return jnp.moveaxis(out, 0, dim).astype(param_dtype)
+
+    def bwd(res, g):
+        key, wid = res
+        key_w = jax.random.fold_in(key, wid)
+        if tp_dim is not None:
+            spec = [None] * g.ndim
+            spec[tp_dim] = tp_axis
+            pspec = jax.sharding.PartitionSpec(*spec)
+
+            # NOTE: the rounding bits are shared across tp shards (the
+            # shards quantize disjoint data, so unbiasedness is unaffected)
+            out = jax.shard_map(
+                _local_rs,
+                in_specs=(pspec, jax.sharding.PartitionSpec()),
+                out_specs=pspec, axis_names={tp_axis},
+                check_vma=False)(g, key_w)
+        else:
+            out = _local_rs(g, key_w)
+        key_ct = np.zeros(key.shape, dtype=jax.dtypes.float0)
+        return out, key_ct
+
+    gather.defvjp(fwd, bwd)
+    return gather
+
+
+def make_replicated_gather(
+    qz: Quantizer,
+    axis_names,
+    *,
+    compute_dtype=jnp.bfloat16,
+    param_dtype=jnp.float32,
+    server_requant: bool = True,
+    use_kernels: bool = True,
+):
+    """Identity 'gather' for dp-replicated leaves whose backward runs the
+    full Algorithm 2 quantized all-reduce (leaves too small / indivisible to
+    FSDP-shard still need their gradients exchanged and must stay bit-
+    identical across workers — the deterministic phase-2 decode guarantees
+    that)."""
+    names = _names(axis_names)
+
+    @jax.custom_vjp
+    def gather(w, key):
+        del key
+        return w.astype(compute_dtype)
+
+    def fwd(w, key):
+        wid = lax.axis_index(names)   # primal context (see make_fsdp_gather)
+        return gather(w, key), (key, wid)
+
+    def bwd(res, g):
+        key, wid = res
+        flat = g.astype(jnp.float32).reshape(-1)
+        if qz.is_identity:
+            mean = lax.pmean(flat, names)
+        else:
+            mean = quantized_all_reduce_mean(
+                flat, qz, key, names, worker_id=wid,
+                server_requant=server_requant, use_kernels=use_kernels)
+        out = mean.reshape(g.shape).astype(param_dtype)
+        key_ct = np.zeros(key.shape, dtype=jax.dtypes.float0)
+        return out, key_ct
+
+    gather.defvjp(fwd, bwd)
+    return gather
+
+
+def psum_mean_tree(tree, axis_names):
+    """FP baseline: plain pmean over the dp axes for a whole pytree."""
+    return jax.tree_util.tree_map(lambda x: lax.pmean(x, axis_names), tree)

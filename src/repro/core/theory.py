@@ -1,0 +1,86 @@
+"""Closed-form quantization-error quantities used to validate the theory.
+
+* ``expected_mse`` — D = E(v − Q(v))² for unbiased random rounding (Eq. 9):
+  for v in [b_{k-1}, b_k] the conditional variance is (v−b_{k-1})(b_k−v),
+  so D = Σ_k ∫ (v−b_{k-1})(b_k−v) p(v) dv, evaluated exactly on the empirical
+  distribution (no sampling noise — this is what Theorem 1 minimizes).
+* ``deterministic_mse`` — E(v − Q(v))² for a deterministic rule (BinGrad-b /
+  SignSGD), exact on the empirical distribution.
+* ``empirical_bias`` — Monte-Carlo E[Q(v)] − v estimator used by the
+  unbiasedness property tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rounding as R
+from repro.core.quantizers import Quantizer
+
+
+def expected_mse(bkt: jnp.ndarray, mask: jnp.ndarray,
+                 levels: jnp.ndarray) -> jnp.ndarray:
+    """Exact E‖v − Q(v)‖² per bucket for random rounding at given levels.
+
+    Values outside [levels[0], levels[-1]] contribute their squared clip
+    distance plus the rounding variance of the clipped value (matches
+    Eq. 14's partially-biased scheme; for ORQ the ends are min/max so no
+    element clips).
+    """
+    v = bkt.astype(jnp.float32)
+    k = R.find_interval(v, levels)
+    lo = jnp.take_along_axis(levels, k, axis=-1)
+    hi = jnp.take_along_axis(levels, k + 1, axis=-1)
+    vc = jnp.clip(v, lo, hi)
+    var = (vc - lo) * (hi - vc)            # rounding variance (Eq. 9 integrand)
+    bias2 = (v - vc) ** 2                  # clipping error
+    err = jnp.where(mask, var + bias2, 0.0)
+    cnt = jnp.maximum(mask.sum(-1).astype(jnp.float32), 1.0)
+    return err.sum(-1) / cnt
+
+
+def deterministic_mse(bkt: jnp.ndarray, mask: jnp.ndarray,
+                      levels: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Exact E‖v − Q(v)‖² per bucket for a deterministic assignment."""
+    v = bkt.astype(jnp.float32)
+    q = jnp.take_along_axis(levels, idx, axis=-1)
+    err = jnp.where(mask, (v - q) ** 2, 0.0)
+    cnt = jnp.maximum(mask.sum(-1).astype(jnp.float32), 1.0)
+    return err.sum(-1) / cnt
+
+
+def scheme_mse(qz: Quantizer, flat: jnp.ndarray) -> jnp.ndarray:
+    """Exact per-tensor expected quantization MSE of a scheme (no sampling)."""
+    from repro.core import buckets as B
+
+    bkt, mask = B.to_buckets(flat.reshape(-1).astype(jnp.float32),
+                             qz.bucket_size)
+    if qz.clip_c is not None:
+        from repro.core import clipping
+        bkt_fit = clipping.sigma_clip(bkt, mask, qz.clip_c)
+    else:
+        bkt_fit = bkt
+    lv = qz.fit(bkt, mask)  # fit applies clip internally
+    if qz.method in ("bingrad_b", "signsgd"):
+        idx = qz.assign(bkt, lv, jax.random.key(0))  # deterministic
+        per_bucket = deterministic_mse(bkt_fit, mask, lv, idx)
+        # plus clip bias if clipping enabled (error vs original values)
+        if qz.clip_c is not None:
+            per_bucket = deterministic_mse(bkt, mask, lv, idx)
+    else:
+        per_bucket = expected_mse(bkt_fit if qz.clip_c is None else bkt,
+                                  mask, lv)
+    cnt = mask.sum(-1).astype(jnp.float32)
+    return (per_bucket * cnt).sum() / jnp.maximum(cnt.sum(), 1.0)
+
+
+def empirical_bias(qz: Quantizer, flat: jnp.ndarray, key: jax.Array,
+                   n_samples: int = 256) -> jnp.ndarray:
+    """Monte-Carlo mean of Q(v) − v over repeated rounding draws."""
+    keys = jax.random.split(key, n_samples)
+
+    def one(k):
+        return qz.qdq(flat, k)
+
+    qs = jax.lax.map(one, keys)
+    return qs.mean(axis=0) - flat

@@ -1,0 +1,3 @@
+from repro.data.synthetic import SyntheticLM, cifar_like_batches
+
+__all__ = ["SyntheticLM", "cifar_like_batches"]

@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: fused decode + average over L workers' payloads.
+
+The "server" side of Algorithm 2 (and the combine stage of the quantized
+reduce-scatter): decode L quantized copies of the same gradient slice and
+average them. Decoding is a level-table lookup; formulated gather-free as a
+one-hot accumulate over the s levels. The grid iterates (row-block, worker)
+with the output block revisited across the worker axis, accumulating in
+place — each worker's payload is read from HBM exactly once and the f32
+output is written once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 8
+LEVEL_PAD = 32
+
+
+def _dequant_avg_kernel(s: int, L: int, idx_ref, lv_ref, out_ref):
+    l = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    idx = idx_ref[...]                      # (1, R, d) int32, worker l
+    lv = lv_ref[...]                        # (1, R, LEVEL_PAD)
+    val = jnp.zeros(idx.shape, dtype=jnp.float32)
+    for j in range(s):                      # static unroll, gather-free decode
+        val = val + (idx == j).astype(jnp.float32) * lv[:, :, j][:, :, None]
+    out_ref[...] += (val * (1.0 / L))[0]
+
+
+@functools.partial(jax.jit, static_argnames=("s", "interpret"))
+def dequant_avg(idx: jnp.ndarray, levels: jnp.ndarray, *, s: int,
+                interpret: bool = True) -> jnp.ndarray:
+    """(L, nb, d) int32 indices + (L, nb, s) levels -> (nb, d) f32 mean."""
+    L, nb, d = idx.shape
+    assert levels.shape == (L, nb, s)
+    rows = -(-nb // ROW_BLOCK) * ROW_BLOCK
+    pad = rows - nb
+    ip = jnp.pad(idx, ((0, 0), (0, pad), (0, 0)))
+    lp = jnp.pad(levels.astype(jnp.float32),
+                 ((0, 0), (0, pad), (0, LEVEL_PAD - s)))
+    grid = (rows // ROW_BLOCK, L)
+    out = pl.pallas_call(
+        functools.partial(_dequant_avg_kernel, s, L),
+        out_shape=jax.ShapeDtypeStruct((rows, d), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, ROW_BLOCK, d), lambda i, l: (l, i, 0)),
+            pl.BlockSpec((1, ROW_BLOCK, LEVEL_PAD), lambda i, l: (l, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROW_BLOCK, d), lambda i, l: (i, 0)),
+        interpret=interpret,
+    )(ip, lp)
+    return out[:nb]

@@ -1,0 +1,54 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; interpret
+mode executes the kernel bodies in Python for correctness validation) and to
+False on a real TPU backend. The wrappers keep kernel use optional: the
+``use_kernels`` flag lets the comm layer fall back to the pure-jnp reference
+path (also the numerics oracle) — both are tested equal.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bingrad as _bingrad
+from repro.kernels import bitpack as _bitpack
+from repro.kernels import dequant_avg as _dequant
+from repro.kernels import quant_rr as _quant
+from repro.kernels import ref as _ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def quant_rr(v, levels, bits, *, use_kernels: bool = True):
+    if not use_kernels:
+        return _ref.quant_rr_ref(v, levels, bits)
+    return _quant.quant_rr(v, levels, bits, s=levels.shape[-1],
+                           interpret=_interpret())
+
+
+def bingrad_pass(v, b0, mask, *, use_kernels: bool = True):
+    if not use_kernels:
+        return _ref.bingrad_pass_ref(v, b0, mask)
+    return _bingrad.bingrad_pass(v, b0, mask, interpret=_interpret())
+
+
+def dequant_avg(idx, levels, *, use_kernels: bool = True):
+    if not use_kernels:
+        return _ref.dequant_avg_ref(idx, levels)
+    return _dequant.dequant_avg(idx, levels, s=levels.shape[-1],
+                                interpret=_interpret())
+
+
+def pack(idx, bits: int, *, use_kernels: bool = True):
+    if not use_kernels:
+        return _ref.pack_ref(idx, bits)
+    return _bitpack.pack(idx, bits=bits, interpret=_interpret())
+
+
+def unpack(words, bits: int, d: int, *, use_kernels: bool = True):
+    if not use_kernels:
+        return _ref.unpack_ref(words, bits, d)
+    return _bitpack.unpack(words, bits=bits, d=d, interpret=_interpret())

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (bit-exact semantics)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_INV_U32 = jnp.float32(1.0 / 4294967296.0)
+
+
+def quant_rr_ref(v: jnp.ndarray, levels: jnp.ndarray,
+                 bits: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for kernels.quant_rr.quant_rr."""
+    s = levels.shape[-1]
+    v = v.astype(jnp.float32)
+    lv = levels.astype(jnp.float32)
+    k = (v[..., None] >= lv[:, None, :]).sum(-1).astype(jnp.int32) - 1
+    k = jnp.clip(k, 0, s - 2)
+    lo = jnp.take_along_axis(lv, k, axis=-1)
+    hi = jnp.take_along_axis(lv, k + 1, axis=-1)
+    vc = jnp.clip(v, lo, hi)
+    width = hi - lo
+    p_up = jnp.where(width > 0, (vc - lo) / jnp.where(width > 0, width, 1.0),
+                     0.0)
+    u = bits.astype(jnp.float32) * _INV_U32
+    return k + (u < p_up).astype(jnp.int32)
+
+
+def bingrad_pass_ref(v: jnp.ndarray, b0: jnp.ndarray, mask: jnp.ndarray):
+    """Oracle for kernels.bingrad.bingrad_pass."""
+    v = v.astype(jnp.float32)
+    m = mask.astype(jnp.float32)
+    hi = (v >= b0).astype(jnp.float32) * m
+    lo = (1.0 - (v >= b0).astype(jnp.float32)) * m
+    idx = (hi > 0).astype(jnp.int32)
+    part = jnp.stack(
+        [(v * lo).sum(-1), lo.sum(-1), (v * hi).sum(-1), hi.sum(-1)], axis=-1
+    )
+    return idx, part
+
+
+def dequant_avg_ref(idx: jnp.ndarray, levels: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for kernels.dequant_avg.dequant_avg."""
+    L = idx.shape[0]
+    vals = jnp.take_along_axis(levels.astype(jnp.float32), idx, axis=-1)
+    return vals.sum(0) * (1.0 / L)
+
+
+def pack_ref(idx: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Oracle for kernels.bitpack.pack."""
+    from repro.core import encode
+
+    return encode.pack(idx, bits)
+
+
+def unpack_ref(words: jnp.ndarray, bits: int, d: int) -> jnp.ndarray:
+    """Oracle for kernels.bitpack.unpack."""
+    from repro.core import encode
+
+    return encode.unpack(words, bits, d)

@@ -1,0 +1,269 @@
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination on placeholder devices and extract roofline inputs.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x22b \
+        --shape train_4k [--multi-pod] [--quant orq-9] [--out experiments]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+# The VERY FIRST lines, before ANY other import (jax locks the device count
+# on first init). 512 placeholder host devices cover both the single-pod
+# (16x16) and multi-pod (2x16x16) production meshes.
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ASSIGNED_ARCHS, get_config
+from repro.core import QuantConfig
+from repro.launch import hlo_cost
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.launch.shapes import SHAPES, input_specs, sds, shape_applicable
+from repro.models import LM
+from repro.serve.step import make_prefill_step, make_serve_step, \
+    plan_serve_sharding
+from repro.train import TrainConfig, make_train_step
+from repro.train.state import TrainState
+from repro.utils.pytree import tree_count
+
+
+
+def model_flops(cfg, shape, n_tokens: int) -> float:
+    """MODEL_FLOPS: 6·N_active·D(tokens) for training, 2·N_active for
+    forward/decode, N_active excluding unrouted experts."""
+    model = LM(cfg)
+    aparams = jax.eval_shape(model.init, jax.random.key(0))
+    total = tree_count(aparams)
+    active = total
+    if cfg.moe:
+        m = cfg.moe
+        # routed expert leaves: (E, D, Fe) x2 + (E, Fe, D)
+        expert = 3 * m.num_experts * cfg.d_model * m.d_ff_expert
+        n_moe = sum(1 for i in range(cfg.num_layers) if cfg.layer_is_moe(i))
+        inactive = n_moe * expert * (m.num_experts - m.top_k) / m.num_experts
+        active = total - inactive
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * active * n_tokens, total, active
+
+
+def lower_case(arch: str, shape_name: str, *, multi_pod: bool,
+               quant: str, mode: str = "fsdp", cfg_overrides=None,
+               mesh_shape=None):
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    skip = shape_applicable(cfg, shape)
+    if skip:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "skipped": skip}
+    if mesh_shape is not None:  # e.g. (256, 1): pure data parallelism
+        mesh = jax.make_mesh(mesh_shape, ("data", "model"))
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    model = LM(cfg)
+    t0 = time.time()
+
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            # use_kernels=False: interpret-mode Pallas lowers to a
+            # scan-over-grid that the SPMD partitioner replicates; the
+            # jnp path is numerically identical (tested) and partitions
+            # cleanly. On real TPU the kernels run as per-shard calls.
+            tcfg = TrainConfig(quant=QuantConfig(name=quant), mode=mode,
+                               use_kernels=False)
+            step_fn, plan = make_train_step(model, mesh, tcfg)
+            aparams = jax.eval_shape(model.init, jax.random.key(0))
+            shardings = plan.shardings(mesh)
+            p_sds = jax.tree_util.tree_map(
+                lambda a, s: sds(a.shape, a.dtype, s), aparams, shardings)
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            rep = NamedSharding(mesh, P())
+            state_sds = TrainState(
+                params=p_sds,
+                opt=jax.tree_util.tree_map(
+                    lambda a, s: sds(a.shape, a.dtype, s), aparams,
+                    shardings),
+                step=sds((), jnp.int32, rep))
+            dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+            dp_ent = dp if len(dp) > 1 else dp[0]
+            batch = input_specs(cfg, shape)
+            batch_sds = {
+                k: sds(v.shape, v.dtype,
+                       NamedSharding(mesh, P(*([dp_ent] + [None] *
+                                               (len(v.shape) - 1)))))
+                for k, v in batch.items()}
+            key = jax.random.key(0)
+            lowered = step_fn.lower(state_sds, batch_sds, key)
+        else:
+            aparams = jax.eval_shape(model.init, jax.random.key(0))
+            aparams = jax.tree_util.tree_map(
+                lambda a: jax.ShapeDtypeStruct(
+                    a.shape, jnp.bfloat16 if jnp.issubdtype(
+                        a.dtype, jnp.floating) else a.dtype), aparams)
+            if shape.kind == "prefill":
+                plan = plan_serve_sharding(model, aparams, None, mesh)
+                step = make_prefill_step(model, mesh, plan)
+                psh = plan.param_shardings(mesh)
+                p_sds = jax.tree_util.tree_map(
+                    lambda a, s: sds(a.shape, a.dtype, s), aparams, psh)
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                dp = tuple(a for a in ("pod", "data")
+                           if a in mesh.axis_names)
+                dp_ent = dp if len(dp) > 1 else dp[0]
+                batch = input_specs(cfg, shape)
+                batch_sds = {
+                    k: sds(v.shape, v.dtype,
+                           NamedSharding(mesh, P(*([dp_ent] + [None] *
+                                                   (len(v.shape) - 1)))))
+                    for k, v in batch.items()}
+                lowered = step.lower(p_sds, batch_sds)
+            else:  # decode
+                seq_sharded = shape.name == "long_500k"
+                acache = jax.eval_shape(
+                    lambda: model.init_cache(shape.global_batch,
+                                             shape.seq_len))
+                plan = plan_serve_sharding(model, aparams, acache, mesh,
+                                           seq_sharded=seq_sharded)
+                n_dp = int(np.prod([s for a, s in zip(
+                    mesh.axis_names, mesh.devices.shape) if a != "model"]))
+                batch_dp = shape.global_batch % max(n_dp, 1) == 0
+                step = make_serve_step(model, mesh, plan,
+                                       batch_dp=batch_dp)
+                psh = plan.param_shardings(mesh)
+                csh = plan.cache_shardings(mesh)
+                p_sds = jax.tree_util.tree_map(
+                    lambda a, s: sds(a.shape, a.dtype, s), aparams, psh)
+                c_sds = jax.tree_util.tree_map(
+                    lambda a, s: sds(a.shape, a.dtype, s), acache, csh)
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                dp = tuple(a for a in ("pod", "data")
+                           if a in mesh.axis_names)
+                dp_ent = (dp if len(dp) > 1 else dp[0]) if batch_dp else None
+                tok_sds = sds((shape.global_batch, 1), jnp.int32,
+                              NamedSharding(mesh, P(dp_ent)))
+                lowered = step.lower(p_sds, c_sds, tok_sds, jnp.int32(0))
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    # trip-count-aware structural costs (XLA's cost_analysis counts scan
+    # bodies once — see launch/hlo_cost.py)
+    tc = hlo_cost.analyze(hlo)
+    coll = tc["collectives"]
+    coll_counts = tc["collective_counts"]
+
+    n_chips = int(np.prod(mesh.devices.shape))
+    n_tokens = shape.global_batch * (shape.seq_len
+                                     if shape.kind != "decode" else 1)
+    mflops, n_total, n_active = model_flops(cfg, shape, n_tokens)
+
+    flops = float(tc["flops"])
+    bytes_acc = float(tc["hbm_bytes"])
+    coll_total = float(sum(coll.values()))
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "quant": quant,
+        "mode": mode if shape.kind == "train" else "serve",
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            # donated buffers (state/cache) are aliased in-place
+            "peak_bytes_per_device": mem.argument_size_in_bytes
+            + mem.temp_size_in_bytes - mem.alias_size_in_bytes,
+        },
+        "cost": {
+            "flops_per_device": flops,
+            "bytes_per_device": bytes_acc,
+            "collective_bytes_per_device": coll,
+            "collective_counts": coll_counts,
+            # raw XLA numbers (scan bodies counted once) for reference
+            "xla_flops_raw": float(cost.get("flops", 0.0)),
+            "xla_bytes_raw": float(cost.get("bytes accessed", 0.0)),
+        },
+        "params": {"total": n_total, "active": n_active},
+        "model_flops_total": mflops,
+        "roofline": {
+            # terms in seconds (per spec: per-device quantities / per-chip
+            # peak — the SPMD module is the per-device program)
+            "compute_s": flops / PEAK_FLOPS_BF16,
+            "memory_s": bytes_acc / HBM_BW,
+            "collective_s": coll_total / ICI_BW,
+            "useful_flops_ratio": (mflops / n_chips) / max(flops, 1.0),
+        },
+    }
+    r = result["roofline"]
+    r["bottleneck"] = max(("compute_s", "memory_s", "collective_s"),
+                          key=lambda k: r[k])
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--quant", default="orq-9")
+    ap.add_argument("--mode", default="fsdp")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) for this mesh")
+    args = ap.parse_args(argv)
+
+    cases = ([(a, s) for a in ASSIGNED_ARCHS for s in SHAPES]
+             if args.all else [(args.arch, args.shape)])
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch, shape in cases:
+        tag = f"{arch}_{shape}_{'2x16x16' if args.multi_pod else '16x16'}"
+        try:
+            res = lower_case(arch, shape, multi_pod=args.multi_pod,
+                             quant=args.quant, mode=args.mode)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            res = {"arch": arch, "shape": shape, "error": repr(e)[:2000]}
+            print(f"[FAIL] {tag}: {e!r}", file=sys.stderr)
+        with open(os.path.join(args.out, tag + ".json"), "w") as f:
+            json.dump(res, f, indent=1)
+        if "skipped" in res:
+            print(f"[skip] {tag}: {res['skipped']}")
+        elif "error" not in res:
+            r = res["roofline"]
+            print(f"[ok] {tag}: compute={r['compute_s']:.4f}s "
+                  f"memory={r['memory_s']:.4f}s "
+                  f"collective={r['collective_s']:.4f}s "
+                  f"bottleneck={r['bottleneck']} "
+                  f"peak_mem={res['memory']['peak_bytes_per_device']/2**30:.2f}GiB "
+                  f"(compile {res['compile_s']:.0f}s)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

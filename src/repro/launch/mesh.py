@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state. The production target is TPU v5e, 256 chips per
+pod as a (16, 16) (data, model) mesh; multi-pod adds a leading 2-way "pod"
+axis (2 x 256 = 512 chips).
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants used by the roofline analysis
+PEAK_FLOPS_BF16 = 197e12        # per chip, FLOP/s
+HBM_BW = 819e9                  # per chip, B/s
+ICI_BW = 50e9                   # per link, B/s
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int | None = None, model: int = 1):
+    """Mesh over the actually-available devices (for real runs/tests)."""
+    n = len(jax.devices())
+    data = data or (n // model)
+    return jax.make_mesh((data, model), ("data", "model"))

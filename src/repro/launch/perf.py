@@ -1,0 +1,98 @@
+"""§Perf variant runner: re-lower a (arch, shape) with one change and diff
+the roofline terms against the stored baseline.
+
+    PYTHONPATH=src python -m repro.launch.perf --arch whisper-base \
+        --shape train_4k --variant quant_fp
+
+Variants (hypotheses are logged in EXPERIMENTS.md §Perf):
+    base          the sweep configuration (orq-9, defaults)
+    quant_fp      FP gradient exchange (pre-paper baseline)
+    quant_bingrad 1-bit BinGrad-b exchange (most aggressive)
+    quant_orq3    3-level ORQ (2-bit wire)
+    probs_bf16    bf16 attention probabilities in the PV einsum
+    chunks_1k     q/kv chunk 1024 (fewer scan steps, bigger tiles)
+    chunks_256    q/kv chunk 256
+    noremat       disable layer-group rematerialization
+    capacity_1    MoE capacity factor 1.0 (drop more, compute less)
+"""
+# Must precede any jax import (see dryrun.py).
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse
+import dataclasses
+import json
+import sys
+
+VARIANTS = {
+    "base": {},
+    "quant_fp": {"quant": "fp"},
+    "quant_bingrad": {"quant": "bingrad-b"},
+    "quant_orq3": {"quant": "orq-3"},
+    "probs_bf16": {"cfg": {"attn_probs_bf16": True}},
+    "chunks_1k": {"cfg": {"q_chunk": 1024, "kv_chunk": 1024}},
+    "chunks_256": {"cfg": {"q_chunk": 256, "kv_chunk": 256}},
+    "noremat": {"cfg": {"remat": False}},
+    "capacity_1": {},  # MoE capacity factor 1.0 (filled in main)
+    # the paper's own topology: replicated params, Algorithm 2 all-reduce
+    "repl_fp": {"quant": "fp", "mode": "replicated"},
+    "repl_orq9": {"quant": "orq-9", "mode": "replicated"},
+    "repl_orq3": {"quant": "orq-3", "mode": "replicated"},
+    "repl_bingrad": {"quant": "bingrad-b", "mode": "replicated"},
+    # pure 256-way DP (no TP partial-sum traffic): the cleanest view of
+    # the gradient wire
+    "dp256_fp": {"quant": "fp", "mode": "replicated", "mesh": (256, 1)},
+    "dp256_orq9": {"quant": "orq-9", "mode": "replicated",
+                   "mesh": (256, 1)},
+    "dp256_bingrad": {"quant": "bingrad-b", "mode": "replicated",
+                      "mesh": (256, 1)},
+}
+
+
+def main(argv=None):
+    from repro.launch.dryrun import lower_case
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True, choices=list(VARIANTS))
+    ap.add_argument("--out", default="experiments/perf")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args(argv)
+
+    v = VARIANTS[args.variant]
+    cfg_overrides = dict(v.get("cfg", {}))
+    if args.variant == "capacity_1":
+        from repro.configs.base import get_config
+        moe = get_config(args.arch).moe
+        cfg_overrides["moe"] = dataclasses.replace(moe, capacity_factor=1.0)
+
+    res = lower_case(args.arch, args.shape, multi_pod=args.multi_pod,
+                     quant=v.get("quant", "orq-9"),
+                     mode=v.get("mode", "fsdp"),
+                     cfg_overrides=cfg_overrides or None,
+                     mesh_shape=v.get("mesh"))
+    os.makedirs(args.out, exist_ok=True)
+    tag = f"{args.arch}_{args.shape}_{args.variant}"
+    with open(os.path.join(args.out, tag + ".json"), "w") as f:
+        json.dump(res, f, indent=1)
+    if "roofline" in res:
+        r = res["roofline"]
+        print(f"[perf] {tag}: compute={r['compute_s']:.4f}s "
+              f"memory={r['memory_s']:.4f}s "
+              f"collective={r['collective_s']:.4f}s "
+              f"peak={res['memory']['peak_bytes_per_device']/2**30:.2f}GiB")
+        coll = res["cost"]["collective_bytes_per_device"]
+        print("       wire:", {k: f"{b/2**30:.2f}GiB"
+                               for k, b in coll.items() if b})
+    else:
+        print(res)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,74 @@
+"""Serving launcher: batched greedy decoding with a KV/state cache on the
+host mesh.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --smoke \
+        --batch 4 --prompt-len 16 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config, get_smoke_config, list_archs
+from repro.launch.mesh import make_host_mesh
+from repro.models import LM
+from repro.serve.step import make_serve_step, plan_serve_sharding
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="lm-100m", choices=list_archs())
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
+    model = LM(cfg)
+    mesh = make_host_mesh()
+    params = jax.jit(model.init)(jax.random.key(args.seed))
+    params = jax.tree_util.tree_map(
+        lambda x: x.astype(jnp.bfloat16)
+        if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
+    cache = model.init_cache(args.batch, args.max_len)
+    acache = jax.eval_shape(lambda: cache)
+    aparams = jax.eval_shape(lambda: params)
+    plan = plan_serve_sharding(model, aparams, acache, mesh)
+    step = make_serve_step(model, mesh, plan)
+
+    key = jax.random.key(args.seed + 1)
+    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                cfg.vocab_size)
+    if cfg.encoder:
+        enc = jax.random.normal(key, (args.batch, cfg.encoder.num_frames,
+                                      cfg.d_model)) * 0.02
+        cache = model.warm_cache(params, cache, enc.astype(jnp.bfloat16))
+
+    # prefill via the decode path (host-scale models)
+    tok = prompt[:, :1]
+    t0 = time.time()
+    for i in range(args.prompt_len):
+        logits, cache = step(params, cache, prompt[:, i][:, None],
+                             jnp.int32(i))
+    out = [jnp.argmax(logits[:, -1], axis=-1)]
+    for i in range(args.gen - 1):
+        logits, cache = step(params, cache, out[-1][:, None],
+                             jnp.int32(args.prompt_len + i))
+        out.append(jnp.argmax(logits[:, -1], axis=-1))
+    dt = time.time() - t0
+    toks = jnp.stack(out, axis=1)
+    print("generated:", toks[:, :16])
+    total = args.batch * (args.prompt_len + args.gen - 1)
+    print(f"{total} tokens in {dt:.2f}s = {total/dt:.1f} tok/s "
+          f"(host CPU, batch {args.batch})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,53 @@
+"""Assigned input shapes and their ShapeDtypeStruct stand-ins."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                   # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape):
+    """ShapeDtypeStruct stand-ins for every model input of this shape
+    (weak-type-correct, shardable, no device allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": sds((B, S), jnp.int32)}
+        if cfg.encoder:
+            batch["enc_embeds"] = sds(
+                (B, cfg.encoder.num_frames, cfg.d_model), jnp.float32)
+        return batch
+    # decode: one new token against a seq_len cache
+    return {"tokens": sds((B, 1), jnp.int32),
+            "pos": sds((), jnp.int32)}
+
+
+def shape_applicable(cfg: ModelConfig, shape: InputShape) -> Optional[str]:
+    """None if runnable; otherwise the skip reason (recorded in DESIGN.md)."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return ("pure full-attention stack: 500k decode skipped "
+                "(see DESIGN.md §shape-skips)")
+    return None

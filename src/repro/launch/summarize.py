@@ -1,0 +1,62 @@
+"""Render the §Roofline markdown table from experiments/dryrun/*.json.
+
+    PYTHONPATH=src python -m repro.launch.summarize [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args(argv)
+
+    rows = []
+    for f in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        with open(f) as fh:
+            r = json.load(fh)
+        if r.get("mesh") != args.mesh:
+            continue
+        rows.append(r)
+    rows.sort(key=lambda r: (r["arch"], ORDER.index(r["shape"])
+                             if r["shape"] in ORDER else 9))
+
+    print(f"### Roofline — mesh {args.mesh} "
+          f"(terms in seconds/step; per-device)\n")
+    print("| arch | shape | compute | memory† | collective | bottleneck |"
+          " useful | peak GiB |")
+    print("|---|---|---|---|---|---|---|---|")
+    n_ok = n_skip = n_err = 0
+    for r in rows:
+        if "skipped" in r:
+            n_skip += 1
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                  f"SKIP (full-attn @500k) | — | — |")
+            continue
+        if "error" in r:
+            n_err += 1
+            print(f"| {r['arch']} | {r['shape']} | ERROR | | | | | |")
+            continue
+        n_ok += 1
+        rf = r["roofline"]
+        print(f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.3f} "
+              f"| {rf['memory_s']:.2f} | {rf['collective_s']:.3f} "
+              f"| {rf['bottleneck'].replace('_s', '')} "
+              f"| {min(rf['useful_flops_ratio'], 9.99):.2f} "
+              f"| {r['memory']['peak_bytes_per_device'] / 2**30:.1f} |")
+    print(f"\nok={n_ok} skip={n_skip} error={n_err}")
+    print("\n† memory term is the trip-aware HLO bytes UPPER BOUND "
+          "(launch/hlo_cost.py); deltas are comparable, absolute MFU is "
+          "not implied.")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

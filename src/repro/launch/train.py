@@ -1,0 +1,85 @@
+"""Training launcher.
+
+Real execution runs on the host's devices (``--mesh host``); the production
+mesh is exercised via launch/dryrun.py. Example:
+
+    PYTHONPATH=src python -m repro.launch.train --arch lm-100m --smoke \
+        --steps 100 --quant orq-9 --mode replicated --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.checkpoint import save_checkpoint
+from repro.configs.base import get_config, get_smoke_config, list_archs
+from repro.core import QuantConfig
+from repro.data import SyntheticLM
+from repro.launch.mesh import make_host_mesh
+from repro.models import LM
+from repro.optim.schedule import step_decay
+from repro.train import TrainConfig, make_train_step
+from repro.train.step import init_state
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="lm-100m", choices=list_archs())
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--quant", default="fp")
+    ap.add_argument("--bucket", type=int, default=2048)
+    ap.add_argument("--clip-c", type=float, default=None)
+    ap.add_argument("--mode", default="replicated",
+                    choices=["replicated", "fsdp"])
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--metrics-out", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
+    model = LM(cfg)
+    mesh = make_host_mesh(model=args.model_parallel)
+    tcfg = TrainConfig(
+        quant=QuantConfig(name=args.quant, bucket_size=args.bucket,
+                          clip_c=args.clip_c),
+        mode=args.mode)
+    lr_fn = step_decay(args.lr, [args.steps // 2, 3 * args.steps // 4])
+    state = init_state(model, mesh, tcfg, jax.random.key(args.seed))
+    step_fn, _ = make_train_step(model, mesh, tcfg, lr_fn)
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                       batch_size=args.batch, seed=args.seed)
+
+    history = []
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = data.batch(i)
+        state, metrics = step_fn(state, batch, jax.random.key(args.seed))
+        if i % args.log_every == 0 or i == args.steps - 1:
+            loss = float(metrics["loss"])
+            history.append({"step": i, "loss": loss,
+                            "nll": float(metrics["nll"]),
+                            "lr": float(metrics["lr"])})
+            print(f"step {i:5d} loss {loss:.4f} "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)")
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, state.params,
+                        step=int(state.step))
+        print("checkpoint ->", args.checkpoint)
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(history, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

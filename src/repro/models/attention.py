@@ -1,0 +1,194 @@
+"""Attention: GQA / MLA, full + sliding-window, train and cached decode.
+
+Training/prefill attention is chunked online-softmax (flash-style in XLA
+ops): query chunks in an outer scan, key/value chunks in an inner scan with
+running (max, sum, acc) — the (S, S) logits matrix is never materialized,
+which is what lets prefill_32k lower within HBM on the production mesh.
+Sliding-window layers use a *banded* inner scan (only the window-overlapping
+KV chunks are visited via dynamic_slice), so SWA compute scales with
+S·window, not S².
+
+Decode attends one query token against a (possibly ring-buffered) KV cache;
+for long-context decode the cache's sequence dim may be sharded over the
+mesh ``data`` axis (auto-SPMD handles the distributed softmax combine —
+flash-decoding's split-S scheme, derived by XLA from the sharding).
+
+Head layout: q heads (H) are sharded over ``model``; GQA K/V heads (often 8
+< model-axis size) stay replicated — XLA broadcasts them once per step.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import apply_rope, shard, softcap
+
+NEG_INF = -2.0e38
+
+
+def spec_rope(x, positions, spec):
+    """Apply the spec's rope policy to (..., S, H, hd) tensors."""
+    if not spec.use_rope:
+        return x
+    if spec.rope_dims:
+        keep, rot = x[..., : -spec.rope_dims], x[..., -spec.rope_dims:]
+        return jnp.concatenate(
+            [keep, apply_rope(rot, positions, spec.rope_theta)], axis=-1)
+    return apply_rope(x, positions, spec.rope_theta)
+
+
+class AttnSpec(NamedTuple):
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    window: Optional[int] = None     # None = full; int = sliding window
+    causal: bool = True
+    attn_softcap: float = 0.0
+    rope_theta: float = 1e4
+    q_chunk: int = 512
+    kv_chunk: int = 512
+    scale: Optional[float] = None    # default hd^-0.5
+    use_rope: bool = True            # False: encoder / cross-attention
+    rope_dims: int = 0               # >0: rotate only the LAST rope_dims
+                                     # (MLA: nope dims stay unrotated)
+    probs_bf16: bool = False         # cast softmax probs to bf16 for PV
+
+
+def _scale(spec: AttnSpec) -> float:
+    return spec.scale if spec.scale is not None else spec.head_dim ** -0.5
+
+
+def _chunk_scores(q, k, spec: AttnSpec):
+    """q (B, qc, H, hd), k (B, kc, KV, hd) -> logits (B, H, qc, kc) f32."""
+    B, qc, H, hd = q.shape
+    kv = k.shape[2]
+    g = H // kv
+    qg = q.reshape(B, qc, kv, g, hd)
+    s = jnp.einsum("bqkgh,bckh->bkgqc", qg.astype(jnp.float32),
+                   k.astype(jnp.float32), preferred_element_type=jnp.float32)
+    s = s * _scale(spec)
+    if spec.attn_softcap:
+        s = softcap(s, spec.attn_softcap)
+    return s.reshape(B, H, qc, k.shape[1])
+
+
+def _chunk_out(p, v, B, H, qc, *, probs_bf16: bool = False):
+    """p (B, H, qc, kc) f32, v (B, kc, KV, hd) -> (B, qc, H, hd) f32."""
+    kv = v.shape[2]
+    g = H // kv
+    pk = p.reshape(B, kv, g, qc, v.shape[1])
+    if probs_bf16:
+        # beyond-paper memory opt: PV einsum reads bf16 probs/values,
+        # accumulates f32 (halves the probability-matrix traffic)
+        o = jnp.einsum("bkgqc,bckh->bqkgh", pk.astype(jnp.bfloat16),
+                       v.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32)
+    else:
+        o = jnp.einsum("bkgqc,bckh->bqkgh", pk, v.astype(jnp.float32))
+    return o.reshape(B, qc, H, -1)
+
+
+def chunked_attention(q, k, v, spec: AttnSpec,
+                      q_positions=None, kv_positions=None):
+    """Flash-style attention. q (B,S,H,hd), k/v (B,T,KV,hd) -> (B,S,H,hd).
+
+    Causal masking uses absolute positions (defaults to arange) so the same
+    code serves training (S == T) and chunked prefill. Sliding-window specs
+    visit only ceil(window/kv_chunk)+1 KV chunks per query chunk.
+    """
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    qc = min(spec.q_chunk, S)
+    kc = min(spec.kv_chunk, T)
+    # pad sequence dims to chunk multiples
+    Sp = -(-S // qc) * qc
+    Tp = -(-T // kc) * kc
+    if q_positions is None:
+        q_positions = jnp.arange(S)[None, :].repeat(B, 0)
+    if kv_positions is None:
+        kv_positions = jnp.arange(T)[None, :].repeat(B, 0)
+    qpad, kpad = Sp - S, Tp - T
+    q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+    k = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    qpos = jnp.pad(q_positions, ((0, 0), (0, qpad)), constant_values=0)
+    kpos = jnp.pad(kv_positions, ((0, 0), (0, kpad)),
+                   constant_values=np.iinfo(np.int32).max // 2)
+    n_q, n_k = Sp // qc, Tp // kc
+
+    banded = spec.window is not None and spec.causal and S == T
+    if banded:
+        assert qc == kc, "banded SWA requires equal q/kv chunk sizes"
+        w_chunks = -(-spec.window // kc)  # banded: visit w_chunks+1 chunks
+        n_visit = min(w_chunks + 1, n_k)
+    else:
+        n_visit = n_k
+
+    def q_block(carry, qi):
+        qb = jax.lax.dynamic_slice_in_dim(q, qi * qc, qc, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(qpos, qi * qc, qc, axis=1)
+        qb = spec_rope(qb, qp, spec)
+
+        def kv_block(acc, r):
+            m, l, o = acc
+            if banded:
+                kj = jnp.maximum(qi - r, 0)  # banded, walking backwards
+                visit_ok = qi - r >= 0       # clamp duplicates masked below
+            else:
+                kj = r
+                visit_ok = jnp.bool_(True)
+            kb = jax.lax.dynamic_slice_in_dim(k, kj * kc, kc, axis=1)
+            kp = jax.lax.dynamic_slice_in_dim(kpos, kj * kc, kc, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, kj * kc, kc, axis=1)
+            kb = spec_rope(kb, kp, spec)
+            s = _chunk_scores(qb, kb, spec)             # (B,H,qc,kc)
+            mask = jnp.ones((B, qc, kc), dtype=bool)
+            if spec.causal:
+                mask &= qp[:, :, None] >= kp[:, None, :]
+            if spec.window is not None:
+                mask &= qp[:, :, None] - kp[:, None, :] < spec.window
+            mask &= (kp < np.iinfo(np.int32).max // 4)[:, None, :]
+            mask &= visit_ok
+            s = jnp.where(mask[:, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            # guard fully-masked rows
+            m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(mask[:, None], p, 0.0)
+            corr = jnp.exp(jnp.where(m <= NEG_INF / 2, NEG_INF, m) - m_safe)
+            corr = jnp.where(m <= NEG_INF / 2, 0.0, corr)
+            l_new = l * corr + p.sum(axis=-1)
+            o_new = (o * corr[..., None]
+                     + _chunk_out(p, vb, B, H, qc,
+                                  probs_bf16=spec.probs_bf16
+                                  ).transpose(0, 2, 1, 3))
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((B, H, qc), NEG_INF, dtype=jnp.float32)
+        l0 = jnp.zeros((B, H, qc), dtype=jnp.float32)
+        o0 = jnp.zeros((B, H, qc, hd), dtype=jnp.float32)
+        (m, l, o), _ = jax.lax.scan(kv_block, (m0, l0, o0),
+                                    jnp.arange(n_visit))
+        l = jnp.maximum(l, 1e-30)
+        out = (o / l[..., None]).transpose(0, 2, 1, 3)  # (B,qc,H,hd)
+        return carry, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_block, None, jnp.arange(n_q))
+    # outs (n_q, B, qc, H, hd) -> (B, S, H, hd)
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, Sp, H, hd)[:, :S]
+    return shard(out, None, None, "model", None)
+
+
+def decode_attention(q, k_cache, v_cache, valid_mask, spec: AttnSpec):
+    """One-token attention. q (B,1,H,hd) (rope already applied);
+    k_cache/v_cache (B,C,KV,hd) (rope applied at insert);
+    valid_mask (B,C) bool. -> (B,1,H,hd)."""
+    B, _, H, hd = q.shape
+    s = _chunk_scores(q, k_cache, spec)                 # (B,H,1,C)
+    s = jnp.where(valid_mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = _chunk_out(p, v_cache, B, H, 1)                 # (B,1,H,hd)
+    return o.astype(q.dtype)

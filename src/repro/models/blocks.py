@@ -1,0 +1,469 @@
+"""Per-layer parameter construction and application (train + decode).
+
+A layer is described by a ``LayerSpec`` (kind, MoE?, ff width, local?);
+``init_layer`` builds its parameter dict and ``apply_layer_train`` /
+``apply_layer_decode`` run it. The model stacks layers into scan groups
+(see model.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.attention import (AttnSpec, chunked_attention,
+                                    decode_attention)
+from repro.models.layers import (apply_rope, dense_init, gated_mlp,
+                                 layer_norm, rms_norm, shard)
+from repro.models.moe import MoESpec, moe_ffn
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    kind: str            # attn | attn_local | mamba | rwkv
+    moe: bool
+    d_ff: int
+    cross_attn: bool = False   # whisper decoder layers
+    causal: bool = True
+
+
+# ---------------------------------------------------------------------------
+# spec helpers
+# ---------------------------------------------------------------------------
+
+def attn_spec(cfg: ModelConfig, spec: LayerSpec) -> AttnSpec:
+    local = spec.kind == "attn_local"
+    theta = (cfg.rope_theta_local
+             if (local and cfg.rope_theta_local) else cfg.rope_theta)
+    return AttnSpec(
+        num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.resolved_head_dim,
+        window=cfg.window if local else None,
+        causal=spec.causal,
+        attn_softcap=cfg.attn_softcap,
+        rope_theta=theta,
+        q_chunk=cfg.q_chunk,
+        kv_chunk=cfg.kv_chunk,
+        probs_bf16=cfg.attn_probs_bf16,
+    )
+
+
+def mamba_spec(cfg: ModelConfig) -> ssm_mod.MambaSpec:
+    m = cfg.mamba
+    return ssm_mod.MambaSpec(d_model=cfg.d_model, d_state=m.d_state,
+                       d_conv=m.d_conv, expand=m.expand)
+
+
+def rwkv_spec(cfg: ModelConfig) -> rwkv_mod.RWKVSpec:
+    r = cfg.rwkv
+    return rwkv_mod.RWKVSpec(d_model=cfg.d_model, head_dim=r.head_dim,
+                             lora_mix=r.lora_mix, lora_decay=r.lora_decay,
+                             chunk=r.chunk)
+
+
+def moe_spec(cfg: ModelConfig) -> MoESpec:
+    m = cfg.moe
+    return MoESpec(num_experts=m.num_experts, top_k=m.top_k,
+                   d_ff_expert=m.d_ff_expert, num_shared=m.num_shared,
+                   capacity_factor=m.capacity_factor,
+                   router_aux_weight=m.router_aux_weight, act=cfg.mlp_act)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _norm_p(cfg: ModelConfig, key, D):
+    if cfg.norm == "ln":
+        return {"scale": jnp.ones((D,), jnp.float32),
+                "bias": jnp.zeros((D,), jnp.float32)}
+    return {"scale": jnp.zeros((D,), jnp.float32)}
+
+
+def _apply_norm(cfg: ModelConfig, p, x):
+    if cfg.norm == "ln":
+        return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rms_norm(x, p["scale"], cfg.norm_eps)
+
+
+def _init_attn(cfg: ModelConfig, key):
+    D, H, KV = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": dense_init(ks[0], (D, H * hd)),
+        "wk": dense_init(ks[1], (D, KV * hd)),
+        "wv": dense_init(ks[2], (D, KV * hd)),
+        "wo": dense_init(ks[3], (H * hd, D)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((KV * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((KV * hd,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), jnp.float32)
+        p["k_norm"] = jnp.zeros((hd,), jnp.float32)
+    return p
+
+
+def _init_mla(cfg: ModelConfig, key):
+    D, H = cfg.d_model, cfg.num_heads
+    m = cfg.mla
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], (D, m.q_lora)),
+        "q_norm": jnp.zeros((m.q_lora,), jnp.float32),
+        "wq_b": dense_init(ks[1], (m.q_lora,
+                                   H * (m.nope_head_dim + m.rope_head_dim))),
+        "wkv_a": dense_init(ks[2], (D, m.kv_lora + m.rope_head_dim)),
+        "kv_norm": jnp.zeros((m.kv_lora,), jnp.float32),
+        "wkv_b": dense_init(ks[3], (m.kv_lora,
+                                    H * (m.nope_head_dim + m.v_head_dim))),
+        "wo": dense_init(ks[4], (H * m.v_head_dim, D)),
+    }
+
+
+def _init_ffn(cfg: ModelConfig, key, spec: LayerSpec):
+    D = cfg.d_model
+    ks = jax.random.split(key, 8)
+    if spec.moe:
+        m = cfg.moe
+        E, Fe = m.num_experts, m.d_ff_expert
+        p = {
+            "router": dense_init(ks[0], (D, E)),
+            "wg": dense_init(ks[1], (E, D, Fe), in_axis=1),
+            "wu": dense_init(ks[2], (E, D, Fe), in_axis=1),
+            "wo": dense_init(ks[3], (E, Fe, D), in_axis=1),
+        }
+        if m.num_shared:
+            Fs = Fe * m.num_shared
+            p["shared_wg"] = dense_init(ks[4], (D, Fs))
+            p["shared_wu"] = dense_init(ks[5], (D, Fs))
+            p["shared_wo"] = dense_init(ks[6], (Fs, D))
+        return p
+    F = spec.d_ff
+    if cfg.norm == "ln":  # whisper-style dense mlp with biases
+        return {"wi": dense_init(ks[0], (D, F)),
+                "bi": jnp.zeros((F,), jnp.float32),
+                "wo": dense_init(ks[1], (F, D)),
+                "bo": jnp.zeros((D,), jnp.float32)}
+    return {"wi_gate": dense_init(ks[0], (D, F)),
+            "wi_up": dense_init(ks[1], (D, F)),
+            "wo": dense_init(ks[2], (F, D))}
+
+
+def init_layer(cfg: ModelConfig, spec: LayerSpec, key):
+    D = cfg.d_model
+    ks = jax.random.split(key, 6)
+    if spec.kind == "mamba":
+        ms = mamba_spec(cfg)
+        d_in, N, rank = ms.d_inner, ms.d_state, ms.rank
+        return {
+            "norm": _norm_p(cfg, ks[0], D),
+            "in_proj": dense_init(ks[0], (D, 2 * d_in)),
+            "conv_w": dense_init(ks[1], (ms.d_conv, d_in)) * 0.1,
+            "conv_b": jnp.zeros((d_in,), jnp.float32),
+            "x_proj": dense_init(ks[2], (d_in, rank + 2 * N)),
+            "dt_proj": dense_init(ks[3], (rank, d_in)),
+            "dt_bias": jnp.full((d_in,), -4.6, jnp.float32),  # softplus ~ 0.01
+            "A_log": jnp.log(jnp.tile(
+                jnp.arange(1, N + 1, dtype=jnp.float32)[None], (d_in, 1))),
+            "D": jnp.ones((d_in,), jnp.float32),
+            "out_proj": dense_init(ks[4], (d_in, D)),
+        }
+    if spec.kind == "rwkv":
+        rs = rwkv_spec(cfg)
+        H, hd, Lm, Ld = rs.num_heads, rs.head_dim, rs.lora_mix, rs.lora_decay
+        F = spec.d_ff
+        kk = jax.random.split(key, 16)
+        return {
+            "norm1": _norm_p(cfg, kk[0], D),
+            "norm2": _norm_p(cfg, kk[1], D),
+            "tm_mu": jnp.full((6, D), 0.5, jnp.float32),
+            "tm_w1": dense_init(kk[2], (D, 5 * Lm)) * 0.1,
+            "tm_w2": dense_init(kk[3], (5, Lm, D), in_axis=1) * 0.1,
+            "w0": jnp.full((D,), -2.0, jnp.float32),
+            "dec_w1": dense_init(kk[4], (D, Ld)) * 0.1,
+            "dec_w2": dense_init(kk[5], (Ld, D)) * 0.1,
+            "u": dense_init(kk[6], (H, hd)),
+            "wr": dense_init(kk[7], (D, D)),
+            "wk": dense_init(kk[8], (D, D)),
+            "wv": dense_init(kk[9], (D, D)),
+            "wg": dense_init(kk[10], (D, D)),
+            "ln_x": jnp.ones((D,), jnp.float32),
+            "wo": dense_init(kk[11], (D, D)),
+            "cm_mu_k": jnp.full((D,), 0.5, jnp.float32),
+            "cm_mu_r": jnp.full((D,), 0.5, jnp.float32),
+            "ck": dense_init(kk[12], (D, F)),
+            "cv": dense_init(kk[13], (F, D)),
+            "cr": dense_init(kk[14], (D, D)),
+        }
+    # attention layer
+    p = {
+        "norm1": _norm_p(cfg, ks[0], D),
+        "norm2": _norm_p(cfg, ks[1], D),
+        "attn": _init_mla(cfg, ks[2]) if cfg.mla else _init_attn(cfg, ks[2]),
+        "ffn": _init_ffn(cfg, ks[3], spec),
+    }
+    if spec.cross_attn:
+        p["norm_x"] = _norm_p(cfg, ks[4], D)
+        p["xattn"] = _init_attn(cfg, ks[5])
+    return p
+
+
+# ---------------------------------------------------------------------------
+# train-path application
+# ---------------------------------------------------------------------------
+
+def _gqa_project(cfg, p, x):
+    B, S, D = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = shard(q, None, None, "model", None)
+    return q, k, v
+
+
+def _mla_project(cfg, p, x):
+    """MLA expanded-form projections (train). Returns q,k,v with
+    head_dim = nope+rope for q/k and v_head_dim for v."""
+    B, S, D = x.shape
+    m, H = cfg.mla, cfg.num_heads
+    cq = rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps)
+    q = (cq @ p["wq_b"]).reshape(B, S, H, m.nope_head_dim + m.rope_head_dim)
+    kv_in = x @ p["wkv_a"]                      # (B,S,kv_lora+rope)
+    ckv = rms_norm(kv_in[..., : m.kv_lora], p["kv_norm"], cfg.norm_eps)
+    k_rope = kv_in[..., m.kv_lora:]             # (B,S,rope) shared head
+    kvb = (ckv @ p["wkv_b"]).reshape(B, S, H,
+                                     m.nope_head_dim + m.v_head_dim)
+    k_nope = kvb[..., : m.nope_head_dim]
+    v = kvb[..., m.nope_head_dim:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None],
+                                  (B, S, H, m.rope_head_dim))], axis=-1)
+    q = shard(q, None, None, "model", None)
+    return q, k, v
+
+
+def _attn_block_train(cfg, spec, p, x):
+    asp = attn_spec(cfg, spec)
+    if cfg.mla:
+        m = cfg.mla
+        q, k, v = _mla_project(cfg, p["attn"], x)
+        asp = asp._replace(num_kv_heads=cfg.num_heads,
+                           head_dim=m.nope_head_dim + m.rope_head_dim,
+                           scale=(m.nope_head_dim + m.rope_head_dim) ** -0.5,
+                           rope_dims=m.rope_head_dim)
+        # pad v to qk head_dim for the shared attention codepath
+        pad = asp.head_dim - m.v_head_dim
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad)))
+        o = chunked_attention(q, k, v, asp)[..., : m.v_head_dim]
+        B, S = x.shape[:2]
+        return o.reshape(B, S, -1) @ p["attn"]["wo"]
+    q, k, v = _gqa_project(cfg, p["attn"], x)
+    o = chunked_attention(q, k, v, asp)
+    B, S = x.shape[:2]
+    return o.reshape(B, S, -1) @ p["attn"]["wo"]
+
+
+def _ffn_train(cfg, spec, p, x):
+    """Returns (y, aux)."""
+    if spec.moe:
+        B, S, D = x.shape
+        y, aux = moe_ffn(p, x.reshape(B * S, D), moe_spec(cfg))
+        return y.reshape(B, S, D), aux
+    if cfg.norm == "ln":
+        from repro.models.layers import dense_mlp
+        return dense_mlp(p, x, act=cfg.mlp_act), jnp.float32(0)
+    return gated_mlp(p, x, act=cfg.mlp_act), jnp.float32(0)
+
+
+def apply_layer_train(cfg: ModelConfig, spec: LayerSpec, p, x,
+                      enc_out=None):
+    """x (B,S,D) -> (x', aux_loss)."""
+    if spec.kind == "mamba":
+        return x + ssm_mod.mamba_forward(
+            {k: v for k, v in p.items() if k != "norm"},
+            _apply_norm(cfg, p["norm"], x), mamba_spec(cfg)), jnp.float32(0)
+    if spec.kind == "rwkv":
+        h = x + rwkv_mod.time_mix(p, _apply_norm(cfg, p["norm1"], x), rwkv_spec(cfg))
+        h = h + rwkv_mod.channel_mix_train(p, _apply_norm(cfg, p["norm2"], h))
+        return h, jnp.float32(0)
+    # attention block
+    h = x + _attn_block_train(cfg, spec, p, _apply_norm(cfg, p["norm1"], x))
+    if spec.cross_attn:
+        hx = _apply_norm(cfg, p["norm_x"], h)
+        B, S, D = hx.shape
+        asp = attn_spec(cfg, spec)._replace(causal=False, window=None,
+                                            use_rope=False)
+        q, _, _ = _gqa_project(cfg, p["xattn"], hx)
+        _, k, v = _gqa_project(cfg, p["xattn"], enc_out)
+        o = chunked_attention(q, k, v, asp)
+        h = h + o.reshape(B, S, -1) @ p["xattn"]["wo"]
+    y, aux = _ffn_train(cfg, spec, p["ffn"], _apply_norm(cfg, p["norm2"], h))
+    return h + y, aux
+
+
+# ---------------------------------------------------------------------------
+# decode-path application (one token, cached)
+# ---------------------------------------------------------------------------
+
+def _mla_decode(cfg: ModelConfig, spec: LayerSpec, p, x, xn, cache, pos):
+    """Absorbed-form MLA decode over the compressed (ckv, kr) cache.
+
+    q_nope is absorbed through W_uk so attention scores are taken directly
+    against the 512-d latent; the attended latent is expanded through W_uv.
+    Per-token FLOPs H·(dn·dc + dc) per cache slot — the compressed cache is
+    what makes deepseek-v2 decode fit HBM.
+    """
+    m = cfg.mla
+    pa = p["attn"]
+    B = x.shape[0]
+    H, dn, dr, dv, dc = (cfg.num_heads, m.nope_head_dim, m.rope_head_dim,
+                         m.v_head_dim, m.kv_lora)
+    cq = rms_norm(xn @ pa["wq_a"], pa["q_norm"], cfg.norm_eps)
+    q = (cq @ pa["wq_b"]).reshape(B, 1, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    q_rope = apply_rope(q_rope, posv, cfg.rope_theta)
+
+    kv_in = xn[:, 0] @ pa["wkv_a"]                      # (B, dc + dr)
+    ckv_t = rms_norm(kv_in[..., :dc], pa["kv_norm"], cfg.norm_eps)
+    kr_t = apply_rope(kv_in[..., dc:][:, None, None, :], posv,
+                      cfg.rope_theta)[:, 0, 0]           # (B, dr)
+
+    C = cache["ckv"].shape[1]
+    slot = pos % C
+    ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache["ckv"], ckv_t[:, None].astype(cache["ckv"].dtype), slot, axis=1)
+    kr = jax.lax.dynamic_update_slice_in_dim(
+        cache["kr"], kr_t[:, None].astype(cache["kr"].dtype), slot, axis=1)
+    posa = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], jnp.full((1,), pos, jnp.int32), slot, axis=0)
+    valid = posa >= 0
+
+    # absorb q through W_uk: (dc, H, dn+dv) split
+    wkv_b = pa["wkv_b"].reshape(dc, H, dn + dv)
+    w_uk = wkv_b[..., :dn]                               # (dc, H, dn)
+    w_uv = wkv_b[..., dn:]                               # (dc, H, dv)
+    q_eff = jnp.einsum("bqhd,chd->bqhc", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))         # (B,1,H,dc)
+    s = (jnp.einsum("bqhc,bkc->bhqk", q_eff,
+                    ckv.astype(jnp.float32))
+         + jnp.einsum("bqhr,bkr->bhqk", q_rope.astype(jnp.float32),
+                      kr.astype(jnp.float32)))
+    s = s * ((dn + dr) ** -0.5)
+    s = jnp.where(valid[None, None, None, :], s, -2.0e38)
+    w = jax.nn.softmax(s, axis=-1)                       # (B,H,1,C)
+    att_c = jnp.einsum("bhqk,bkc->bqhc", w, ckv.astype(jnp.float32))
+    o = jnp.einsum("bqhc,chd->bqhd", att_c,
+                   w_uv.astype(jnp.float32))             # (B,1,H,dv)
+    h = x + (o.reshape(B, 1, H * dv).astype(x.dtype) @ pa["wo"])
+    return h, {"ckv": ckv, "kr": kr, "pos": posa}
+
+def init_layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                     max_len: int, dtype=jnp.bfloat16, enc_frames: int = 0):
+    if spec.kind == "mamba":
+        return ssm_mod.init_mamba_state(batch, mamba_spec(cfg), dtype)
+    if spec.kind == "rwkv":
+        return rwkv_mod.init_rwkv_state(batch, rwkv_spec(cfg), dtype)
+    C = min(max_len, cfg.window) if spec.kind == "attn_local" else max_len
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    if cfg.mla:
+        # absorbed-form MLA: cache the COMPRESSED latent (this is MLA's
+        # memory contribution), not per-head K/V
+        m = cfg.mla
+        return {
+            "ckv": jnp.zeros((batch, C, m.kv_lora), dtype),
+            "kr": jnp.zeros((batch, C, m.rope_head_dim), dtype),
+            "pos": jnp.full((C,), -1, jnp.int32),
+        }
+    cache = {
+        "k": jnp.zeros((batch, C, KV, hd), dtype),
+        "v": jnp.zeros((batch, C, KV, hd), dtype),
+        "pos": jnp.full((C,), -1, jnp.int32),
+    }
+    if spec.cross_attn:
+        cache["xk"] = jnp.zeros((batch, enc_frames, KV, hd), dtype)
+        cache["xv"] = jnp.zeros((batch, enc_frames, KV, hd), dtype)
+    return cache
+
+
+def apply_layer_decode(cfg: ModelConfig, spec: LayerSpec, p, x, cache, pos):
+    """x (B,1,D), pos scalar int32 -> (x', new_cache)."""
+    if spec.kind == "mamba":
+        y, st = ssm_mod.mamba_decode_step(
+            {k: v for k, v in p.items() if k != "norm"},
+            _apply_norm(cfg, p["norm"], x), cache, mamba_spec(cfg))
+        return x + y, st
+    if spec.kind == "rwkv":
+        rs = rwkv_spec(cfg)
+        xn = _apply_norm(cfg, p["norm1"], x)
+        tm_out, tm_st = rwkv_mod.time_mix_decode(
+            p, xn, {"wkv": cache["wkv"], "shift": cache["tm_shift"]}, rs)
+        h = x + tm_out
+        hn = _apply_norm(cfg, p["norm2"], h)
+        cm_out, cm_st = rwkv_mod.channel_mix_decode(
+            p, hn, {"shift": cache["cm_shift"]})
+        return h + cm_out, {"wkv": tm_st["wkv"],
+                            "tm_shift": tm_st["shift"],
+                            "cm_shift": cm_st["shift"]}
+
+    # attention
+    B = x.shape[0]
+    asp = attn_spec(cfg, spec)
+    xn = _apply_norm(cfg, p["norm1"], x)
+    if cfg.mla:
+        h, new_cache = _mla_decode(cfg, spec, p, x, xn, cache, pos)
+        y, _ = _ffn_train(cfg, spec, p["ffn"],
+                          _apply_norm(cfg, p["norm2"], h))
+        return h + y, new_cache
+    q, k, v = _gqa_project(cfg, p["attn"], xn)
+    C = cache["k"].shape[1]
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    q = apply_rope(q, posv, asp.rope_theta)
+    k = apply_rope(k, posv, asp.rope_theta)
+    slot = pos % C
+    kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(
+        cache["k"].dtype), slot, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(
+        cache["v"].dtype), slot, axis=1)
+    posa = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], jnp.full((1,), pos, jnp.int32), slot, axis=0)
+    valid = posa >= 0
+    if spec.kind == "attn_local" and cfg.window:
+        valid &= (pos - posa) < cfg.window
+    o = decode_attention(q, kc, vc,
+                         jnp.broadcast_to(valid[None], (B, C)), asp)
+    if cfg.mla:
+        o = o[..., : cfg.mla.v_head_dim]
+    h = x + o.reshape(B, 1, -1) @ p["attn"]["wo"]
+    new_cache = {"k": kc, "v": vc, "pos": posa}
+
+    if spec.cross_attn:
+        hx = _apply_norm(cfg, p["norm_x"], h)
+        qx, _, _ = _gqa_project(cfg, p["xattn"], hx)
+        Tx = cache["xk"].shape[1]
+        ox = decode_attention(
+            qx, cache["xk"], cache["xv"],
+            jnp.ones((B, Tx), bool), asp._replace(causal=False, window=None))
+        h = h + ox.reshape(B, 1, -1) @ p["xattn"]["wo"]
+        new_cache["xk"], new_cache["xv"] = cache["xk"], cache["xv"]
+
+    y, _ = _ffn_train(cfg, spec, p["ffn"], _apply_norm(cfg, p["norm2"], h))
+    return h + y, new_cache

@@ -1,0 +1,93 @@
+"""Mixture-of-Experts FFN: top-k routing with static capacity, expert-parallel.
+
+Dispatch is gather/scatter based (GShard-style): tokens are placed into an
+(E, C, D) buffer by expert id + position-in-expert (cumsum of the one-hot
+assignment matrix), experts run as one batched einsum over the expert dim
+(sharded over ``model`` — expert parallelism), and outputs are gathered back
+with the router combine weights. Tokens beyond capacity are dropped (their
+combine weight contribution is zero), matching standard capacity-factor
+semantics.
+
+Supports DeepSeek-style shared experts (always-on dense branch) and returns
+the switch load-balance auxiliary loss.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import gated_mlp, shard
+
+
+class MoESpec(NamedTuple):
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    act: str = "silu"
+
+
+def capacity(n_tokens: int, spec: MoESpec) -> int:
+    c = int(n_tokens * spec.top_k * spec.capacity_factor / spec.num_experts)
+    return max(8, -(-c // 8) * 8)
+
+
+def moe_ffn(p, x, spec: MoESpec):
+    """p: {router (D,E), wg/wu (E,D,F), wo (E,F,D) [, shared mlp leaves]};
+    x (T, D) -> (y (T, D), aux_loss scalar f32)."""
+    T, D = x.shape
+    E, k = spec.num_experts, spec.top_k
+    C = capacity(T, spec)
+
+    logits = (x.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)              # (T, E)
+    topw, topi = jax.lax.top_k(probs, k)                 # (T, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, slot) within its expert queue
+    flat_e = topi.reshape(-1)                            # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (T*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - 1                 # (T*k, E)
+    pos_in_e = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = pos_in_e < C
+
+    # scatter tokens into the (E*C, D) dispatch buffer
+    dest = jnp.where(keep, flat_e * C + pos_in_e, E * C)  # OOB row dropped
+    x_rep = jnp.repeat(x, k, axis=0)                      # (T*k, D)
+    buf = jnp.zeros((E * C + 1, D), dtype=x.dtype)
+    buf = buf.at[dest].add(x_rep)
+    # expert sharding (E over `model` when divisible, via shard()'s
+    # divisibility guard; otherwise XLA propagates intra-expert TP from the
+    # expert weight shardings)
+    buf = buf[: E * C].reshape(E, C, D)
+    buf = shard(buf, "model", None, None)
+
+    # batched expert FFN (expert-parallel einsum over E)
+    g = jnp.einsum("ecd,edf->ecf", buf, p["wg"])
+    u = jnp.einsum("ecd,edf->ecf", buf, p["wu"])
+    h = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[spec.act](g) * u
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["wo"])
+    out_buf = shard(out_buf, "model", None, None)
+
+    # gather back + combine
+    flat_out = out_buf.reshape(E * C, D)
+    safe = jnp.where(keep, flat_e * C + pos_in_e, 0)
+    tok_out = flat_out[safe] * keep[:, None].astype(x.dtype)
+    w = topw.reshape(-1)[:, None].astype(x.dtype)
+    y = (tok_out * w).reshape(T, k, D).sum(axis=1)
+
+    # shared experts: always-on dense branch (DeepSeek-V2)
+    if spec.num_shared > 0:
+        y = y + gated_mlp(
+            {"wi_gate": p["shared_wg"], "wi_up": p["shared_wu"],
+             "wo": p["shared_wo"]}, x, act=spec.act)
+
+    # switch load-balance loss: E * Σ_e f_e · p_e
+    frac_tokens = (onehot * keep[:, None]).astype(jnp.float32).mean(0) * k
+    mean_prob = probs.mean(0)
+    aux = spec.router_aux_weight * E * jnp.sum(frac_tokens * mean_prob)
+    return y, aux

@@ -1,0 +1,96 @@
+"""Small CIFAR-scale ResNet (paper §5.1 model family) in pure JAX.
+
+Deviation from the paper noted in DESIGN.md: BatchNorm is replaced by
+GroupNorm so the model stays a pure function of (params, batch) — the
+quantization comparison is unaffected (the paper broadcasts BN statistics
+from worker 0, i.e. they are not part of the gradient exchange either).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    num_classes: int = 10
+    width: int = 16
+    blocks_per_stage: int = 3      # 3 -> ResNet-20 family
+    groups: int = 8
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan = kh * kw * cin
+    return jax.random.normal(key, (kh, kw, cin, cout)) / jnp.sqrt(fan)
+
+
+def conv(x, w, stride=1):
+    return lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def group_norm(x, scale, bias, groups):
+    n, h, w, c = x.shape
+    xg = x.reshape(n, h, w, groups, c // groups).astype(jnp.float32)
+    mu = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = ((xg - mu) ** 2).mean(axis=(1, 2, 4), keepdims=True)
+    xn = ((xg - mu) * lax.rsqrt(var + 1e-5)).reshape(n, h, w, c)
+    return (xn * scale + bias).astype(x.dtype)
+
+
+def init_resnet(key, cfg: ResNetConfig):
+    ks = iter(jax.random.split(key, 64))
+    w = cfg.width
+    params = {"stem": {"w": _conv_init(next(ks), 3, 3, 3, w),
+                       "gn_s": jnp.ones((w,)), "gn_b": jnp.zeros((w,))}}
+    stages = []
+    cin = w
+    for s, cout in enumerate((w, 2 * w, 4 * w)):
+        blocks = []
+        for b in range(cfg.blocks_per_stage):
+            stride = 2 if (s > 0 and b == 0) else 1
+            blk = {
+                "w1": _conv_init(next(ks), 3, 3, cin, cout),
+                "gn1_s": jnp.ones((cout,)), "gn1_b": jnp.zeros((cout,)),
+                "w2": _conv_init(next(ks), 3, 3, cout, cout),
+                "gn2_s": jnp.ones((cout,)), "gn2_b": jnp.zeros((cout,)),
+            }
+            if stride != 1 or cin != cout:
+                blk["proj"] = _conv_init(next(ks), 1, 1, cin, cout)
+            blocks.append(blk)
+            cin = cout
+        stages.append(blocks)
+    params["stages"] = stages
+    params["head"] = {"w": jax.random.normal(next(ks), (cin,
+                                                        cfg.num_classes))
+                      / jnp.sqrt(cin),
+                      "b": jnp.zeros((cfg.num_classes,))}
+    return params
+
+
+def resnet_logits(params, images, cfg: ResNetConfig):
+    x = conv(images, params["stem"]["w"])
+    x = jax.nn.relu(group_norm(x, params["stem"]["gn_s"],
+                               params["stem"]["gn_b"], cfg.groups))
+    for s_i, blocks in enumerate(params["stages"]):
+        for b_i, blk in enumerate(blocks):
+            stride = 2 if (s_i > 0 and b_i == 0) else 1
+            h = conv(x, blk["w1"], stride)
+            h = jax.nn.relu(group_norm(h, blk["gn1_s"], blk["gn1_b"],
+                                       cfg.groups))
+            h = conv(h, blk["w2"])
+            h = group_norm(h, blk["gn2_s"], blk["gn2_b"], cfg.groups)
+            sc = x if "proj" not in blk else conv(x, blk["proj"], stride)
+            x = jax.nn.relu(h + sc)
+    x = x.mean(axis=(1, 2))
+    return x @ params["head"]["w"] + params["head"]["b"]
+
+
+def resnet_loss(params, batch, cfg: ResNetConfig):
+    lg = resnet_logits(params, batch["images"], cfg)
+    onehot = jax.nn.one_hot(batch["labels"], cfg.num_classes)
+    return -(jax.nn.log_softmax(lg) * onehot).sum(-1).mean()

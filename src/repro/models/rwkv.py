@@ -1,0 +1,227 @@
+"""RWKV-6 "Finch" block: data-dependent-decay linear attention (attn-free).
+
+Faithful core: token-shift with data-dependent lerp (ddlerp) producing
+r/k/v/g/w, per-channel data-dependent decay w_t = exp(-exp(·)), bonus u for
+the current token, and the WKV state recurrence per head
+
+    out_t = r_t · (S_{t-1} + u ⊙ kᵀ_t v_t)
+    S_t   = diag(w_t) S_{t-1} + kᵀ_t v_t
+
+Train path scans over time in chunks (sequential over chunks, unrolled
+matmuls within); decode is O(1) with the (H, hd, hd) state + last-token
+shift state. Channel-mix is the RWKV squared-ReLU FFN with token shift.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class RWKVSpec(NamedTuple):
+    d_model: int
+    head_dim: int = 64
+    lora_mix: int = 32
+    lora_decay: int = 64
+    chunk: int = 128
+
+    @property
+    def num_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+
+def _ddlerp(x, x_prev, mu_base, w1, w2):
+    """RWKV6 data-dependent lerp producing the 5 mixed inputs (r,k,v,g,w).
+
+    x, x_prev (B,S,D); mu_base (6,D) [0 = token-shift trunk, 1..5 = r,k,v,
+    g,w]; w1 (D, 5*L); w2 (5,L,D) -> (5, B, S, D)
+    """
+    B, S, D = x.shape
+    dx = x_prev - x
+    xx = x + dx * mu_base[0]
+    a = jnp.tanh(xx @ w1).reshape(B, S, 5, -1)          # (B,S,5,L)
+    mods = jnp.einsum("bsfl,fld->fbsd", a, w2)          # (5,B,S,D)
+    mus = mu_base[1:, None, None, :]                    # (5,1,1,D)
+    return x[None] + dx[None] * (mus + mods)
+
+
+def _wkv_scan_sequential(r, k, v, w, u, chunk: int, s0):
+    """Step-by-step WKV reference. r/k/v (B,S,H,hd), w decay in (0,1),
+    u (H,hd). s0 (B,H,hd,hd). Returns (out (B,S,H,hd), s_last)."""
+    B, S, H, hd = r.shape
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+
+    def padt(x, cval=0.0):
+        return jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                       constant_values=cval)
+
+    r, k, v, w = padt(r), padt(k), padt(v), padt(w, 1.0)
+
+    def to_chunks(x):
+        return x.reshape(B, nc, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, w))
+
+    def chunk_step(s, xs):
+        rb, kb, vb, wb = xs                             # (B, chunk, H, hd)
+
+        def t_step(s, xt):
+            rt, kt, vt, wt = xt                         # (B, H, hd)
+            kv = kt[..., :, None] * vt[..., None, :]    # (B,H,hd,hd)
+            out = jnp.einsum("bhij,bhi->bhj", s + u[..., :, None] * kv, rt)
+            s_new = wt[..., :, None] * s + kv
+            return s_new, out
+
+        s, outs = jax.lax.scan(
+            t_step, s,
+            (rb.transpose(1, 0, 2, 3), kb.transpose(1, 0, 2, 3),
+             vb.transpose(1, 0, 2, 3), wb.transpose(1, 0, 2, 3)))
+        return s, outs.transpose(1, 0, 2, 3)            # (B, chunk, H, hd)
+
+    s_last, outs = jax.lax.scan(chunk_step, s0, (rc, kc, vc, wc))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nc * chunk, H, hd)[:, :S]
+    return out, s_last
+
+
+def _wkv_scan(r, k, v, w, u, chunk: int, s0, *, logw=None):
+    """Chunked-parallel WKV (beyond-paper perf: EXPERIMENTS.md §Perf
+    iteration 1). Exactly equivalent to the sequential recurrence:
+
+        out_t = r_t · (S_{t-1} + u ⊙ k_tᵀ v_t);  S_t = diag(w_t) S_{t-1} + k_tᵀ v_t
+
+    Within a chunk of T tokens, with c_t = Σ_{τ<=t} log w_τ (c_0 = 0):
+
+        A[t,j] = Σ_i r_t[i] k_j[i] exp(c_{t-1}[i] − c_j[i])   (j < t)
+        A[t,t] = Σ_i r_t[i] u[i] k_t[i]
+        out    = A @ V + (r ⊙ exp(c_{t-1})) @ S_0
+        S_T    = diag(exp(c_T)) S_0 + (k ⊙ exp(c_T − c_j))ᵀ @ V
+
+    Every exponent is a sum of log-decays over a FORWARD range, hence <= 0:
+    numerically stable with no clamping, unlike the 1/P factored matmul
+    form. The per-step (hd × hd) state is read/written once per CHUNK
+    instead of once per token — the T-fold HBM-traffic reduction that
+    turns rwkv6 training from pathologically memory-bound into
+    compute-balanced — and the intra-chunk work is (T,T)@(T,hd) MXU
+    matmuls instead of VPU outer products.
+    """
+    B, S, H, hd = r.shape
+    T = min(chunk, S)
+    nc = -(-S // T)
+    pad = nc * T - S
+
+    def padt(x, cval=0.0):
+        return jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                       constant_values=cval)
+
+    if logw is None:
+        logw = jnp.log(jnp.maximum(w, 1e-38))
+    r, k, v, logw = padt(r), padt(k), padt(v), padt(logw)  # pad logw=0: w=1
+
+    def to_chunks(x):
+        return x.reshape(B, nc, T, H, hd).transpose(1, 0, 2, 3, 4)
+
+    rc, kc, vc, lwc = map(to_chunks, (r, k, v, logw))
+    tri = jnp.tril(jnp.ones((T, T), dtype=bool), k=-1)
+
+    def chunk_step(s, xs):
+        rb, kb, vb, lw = xs                             # (B, T, H, hd)
+        cw = jnp.cumsum(lw, axis=1)                     # c_t (inclusive)
+        cprev = cw - lw                                 # c_{t-1}
+        # pairwise decay factors exp(c_{t-1}[t] - c[j]) — fused into the
+        # reduction over i (never materialized at (B,T,T,H,hd) on TPU)
+        decay = jnp.exp(cprev[:, :, None] - cw[:, None])   # (B,T,T,H,hd)
+        A = jnp.einsum("bthi,bjhi,btjhi->bhtj", rb, kb, decay)
+        A = jnp.where(tri[None, None], A, 0.0)
+        diag = jnp.einsum("bthi,hi,bthi->bht", rb, u, kb)   # (B,H,T)
+        A = A + (jnp.eye(T, dtype=A.dtype)[None, None]
+                 * diag[:, :, :, None])
+        out = jnp.einsum("bhtj,bjho->btho", A, vb)
+        out = out + jnp.einsum("bthi,bhio->btho",
+                               rb * jnp.exp(cprev), s)
+        c_T = cw[:, -1]                                 # (B, H, hd)
+        kp = kb * jnp.exp(c_T[:, None] - cw)
+        s_new = (jnp.exp(c_T)[..., None] * s
+                 + jnp.einsum("bjhi,bjho->bhio", kp, vb))
+        return s_new, out
+
+    s_last, outs = jax.lax.scan(chunk_step, s0, (rc, kc, vc, lwc))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nc * T, H, hd)[:, :S]
+    return out, s_last
+
+
+def _group_norm(x, scale, n_heads, eps=1e-5):
+    """Per-head group norm on (B, S, D) laid out as heads*hd."""
+    B, S, D = x.shape
+    xh = x.reshape(B, S, n_heads, -1).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = ((xh - mu) ** 2).mean(-1, keepdims=True)
+    y = (xh - mu) * jax.lax.rsqrt(var + eps)
+    return (y.reshape(B, S, D) * scale).astype(x.dtype)
+
+
+def _time_mix_core(p, x, x_prev, spec: RWKVSpec, s0):
+    """Shared by train (full seq) and decode (S == 1 with carried x_prev)."""
+    B, S, D = x.shape
+    H, hd = spec.num_heads, spec.head_dim
+    mixed = _ddlerp(x, x_prev, p["tm_mu"], p["tm_w1"], p["tm_w2"])
+    xr, xk, xv, xg, xw = mixed
+    r = (xr @ p["wr"]).reshape(B, S, H, hd)
+    k = (xk @ p["wk"]).reshape(B, S, H, hd)
+    v = (xv @ p["wv"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(xg @ p["wg"])
+    dec = p["w0"] + jnp.tanh(xw @ p["dec_w1"]) @ p["dec_w2"]
+    logw = (-jnp.exp(dec.astype(jnp.float32))).reshape(B, S, H, hd)
+    out, s_last = _wkv_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                            v.astype(jnp.float32), None, p["u"], spec.chunk,
+                            s0, logw=logw)
+    out = out.reshape(B, S, D).astype(x.dtype)
+    out = _group_norm(out, p["ln_x"], H) * g
+    return out @ p["wo"], s_last
+
+
+def time_mix(p, x, spec: RWKVSpec):
+    """Training path. x (B,S,D) -> (B,S,D)."""
+    B, S, D = x.shape
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    s0 = jnp.zeros((B, spec.num_heads, spec.head_dim, spec.head_dim),
+                   jnp.float32)
+    out, _ = _time_mix_core(p, x, x_prev, spec, s0)
+    return out
+
+
+def channel_mix(p, x, x_prev):
+    """RWKV FFN with token shift; squared ReLU."""
+    dx = x_prev - x
+    xk = x + dx * p["cm_mu_k"]
+    xr = x + dx * p["cm_mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["ck"]))
+    return jax.nn.sigmoid(xr @ p["cr"]) * (k @ p["cv"])
+
+
+def channel_mix_train(p, x):
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return channel_mix(p, x, x_prev)
+
+
+def time_mix_decode(p, x, state, spec: RWKVSpec):
+    """x (B,1,D); state {wkv (B,H,hd,hd), shift (B,D)}."""
+    x_prev = state["shift"][:, None]
+    out, s_last = _time_mix_core(p, x, x_prev, spec, state["wkv"])
+    return out, {"wkv": s_last, "shift": x[:, 0]}
+
+
+def channel_mix_decode(p, x, state):
+    """x (B,1,D); state {shift (B,D)}."""
+    out = channel_mix(p, x, state["shift"][:, None])
+    return out, {"shift": x[:, 0]}
+
+
+def init_rwkv_state(batch: int, spec: RWKVSpec, dtype=jnp.bfloat16):
+    return {
+        "wkv": jnp.zeros((batch, spec.num_heads, spec.head_dim,
+                          spec.head_dim), jnp.float32),
+        "tm_shift": jnp.zeros((batch, spec.d_model), dtype),
+        "cm_shift": jnp.zeros((batch, spec.d_model), dtype),
+    }

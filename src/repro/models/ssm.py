@@ -1,0 +1,138 @@
+"""Mamba (S6) selective state-space block — the Jamba mixer.
+
+Train path: depthwise causal conv + selective scan. The scan is a chunked
+linear recurrence: within a chunk the diagonal recurrence
+``h_t = a_t * h_{t-1} + b_t`` is evaluated with an associative scan over
+time; chunks are chained with a lightweight sequential scan over chunk
+boundaries. This bounds the saved-activation footprint to one (B, d_in, N)
+carry per chunk instead of per step.
+
+Decode path: O(1) per token — a (d_conv-1) rolling conv window plus the
+(d_in, N) SSM state.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class MambaSpec(NamedTuple):
+    d_model: int
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0            # 0 -> ceil(d_model / 16)
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def rank(self) -> int:
+        return self.dt_rank or -(-self.d_model // 16)
+
+
+def _ssm_scan_project(dt, xc, Bm, Cm, A, h0, chunk: int):
+    """Selective scan with chunked state materialization.
+
+    Inputs per token: dt, xc (B, S, d); Bm, Cm (B, S, N); A (d, N) diag.
+    The (B, chunk, d, N) discretized transition/input tensors AND the state
+    trajectory exist only per chunk — materializing them over the full
+    sequence is ~N=16x the hidden-state footprint (≈1 TB/device at jamba
+    train_4k scale). Returns (y (B, S, d), h_last).
+    """
+    B, S, d = dt.shape
+    N = A.shape[-1]
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+
+    def padt(x):
+        return jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+
+    def to_chunks(x):
+        return x.reshape((B, nc, chunk) + x.shape[2:]).swapaxes(0, 1)
+
+    dt, xc, Bm, Cm = map(lambda x: to_chunks(padt(x)), (dt, xc, Bm, Cm))
+
+    def chunk_step(h, xs):
+        dtc, xcc, Bc, Cc = xs                        # (B, chunk, ...)
+        da = jnp.exp(dtc[..., None] * A)             # (B, chunk, d, N)
+        db = (dtc * xcc)[..., None] * Bc[:, :, None, :]
+
+        def combine(x, y):
+            a1, b1 = x
+            a2, b2 = y
+            return a1 * a2, b1 * a2 + b2
+
+        aa, bb = jax.lax.associative_scan(combine, (da, db), axis=1)
+        h_all = aa * h[:, None] + bb                 # (B, chunk, d, N)
+        y = jnp.einsum("bsdn,bsn->bsd", h_all, Cc)
+        return h_all[:, -1], y
+
+    h_last, ys = jax.lax.scan(chunk_step, h0, (dt, xc, Bm, Cm))
+    y = ys.swapaxes(0, 1).reshape(B, nc * chunk, d)[:, :S]
+    return y, h_last
+
+
+def mamba_forward(p, x, spec: MambaSpec):
+    """p: mamba params; x (B, S, D) -> (B, S, D). Training/prefill path."""
+    B, S, D = x.shape
+    d_in, N = spec.d_inner, spec.d_state
+
+    xu = x @ p["in_proj"]                              # (B, S, 2*d_in)
+    xs, z = jnp.split(xu, 2, axis=-1)
+    # causal depthwise conv over time
+    w = p["conv_w"]                                    # (d_conv, d_in)
+    xpad = jnp.pad(xs, ((0, 0), (spec.d_conv - 1, 0), (0, 0)))
+    xc = sum(xpad[:, i:i + S] * w[i] for i in range(spec.d_conv))
+    xc = jax.nn.silu(xc + p["conv_b"])
+
+    # input-dependent Δ, B, C
+    dbc = xc @ p["x_proj"]                             # (B,S,rank+2N)
+    dt, Bm, Cm = jnp.split(dbc, [spec.rank, spec.rank + N], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"])  # (B,S,d_in)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))       # (d_in, N)
+
+    h0 = jnp.zeros((B, d_in, N), dtype=jnp.float32)
+    y, _ = _ssm_scan_project(
+        dt.astype(jnp.float32), xc.astype(jnp.float32),
+        Bm.astype(jnp.float32), Cm.astype(jnp.float32), A, h0, spec.chunk)
+    y = y.astype(x.dtype) + xc * p["D"]
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"]
+
+
+def mamba_decode_step(p, x, state, spec: MambaSpec):
+    """x (B, 1, D); state {conv (B, d_conv-1, d_in), ssm (B, d_in, N)}."""
+    B = x.shape[0]
+    d_in, N = spec.d_inner, spec.d_state
+    xu = x[:, 0] @ p["in_proj"]
+    xs, z = jnp.split(xu, 2, axis=-1)                  # (B, d_in)
+    win = jnp.concatenate([state["conv"], xs[:, None]], axis=1)
+    w = p["conv_w"]
+    xc = (win * w[None]).sum(axis=1)
+    xc = jax.nn.silu(xc + p["conv_b"])
+
+    dbc = xc @ p["x_proj"]
+    dt, Bm, Cm = jnp.split(dbc, [spec.rank, spec.rank + N], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt.astype(jnp.float32)[..., None] * A)          # (B,d_in,N)
+    db = (dt.astype(jnp.float32) * xc.astype(jnp.float32))[..., None] \
+        * Bm.astype(jnp.float32)[:, None, :]
+    h = state["ssm"] * da + db
+    y = jnp.einsum("bdn,bn->bd", h, Cm.astype(jnp.float32))
+    y = y.astype(x.dtype) + xc * p["D"]
+    y = y * jax.nn.silu(z)
+    out = (y @ p["out_proj"])[:, None]
+    return out, {"conv": win[:, 1:], "ssm": h}
+
+
+def init_mamba_state(batch: int, spec: MambaSpec, dtype=jnp.bfloat16):
+    return {
+        "conv": jnp.zeros((batch, spec.d_conv - 1, spec.d_inner), dtype),
+        "ssm": jnp.zeros((batch, spec.d_inner, spec.d_state), jnp.float32),
+    }

@@ -1,0 +1,5 @@
+from repro.optim.optimizers import adamw, sgd_momentum
+from repro.optim.schedule import constant_lr, step_decay, warmup_cosine
+
+__all__ = ["sgd_momentum", "adamw", "warmup_cosine", "step_decay",
+           "constant_lr"]

@@ -1,0 +1,76 @@
+"""Optimizers from scratch (no optax in this container).
+
+Interface mirrors optax: ``init(params) -> state``, ``update(grads, state,
+params, lr) -> (updates, state)``; apply with ``apply_updates``. The paper
+trains with SGD + momentum 0.9 and weight decay (5e-4 CIFAR / 1e-4
+ImageNet), so that is the default optimizer throughout.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]   # (grads, state, params, lr) -> (upd, state)
+
+
+def sgd_momentum(momentum: float = 0.9, weight_decay: float = 0.0,
+                 nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def update(grads, state, params, lr):
+        gw = jax.tree_util.tree_map(
+            lambda g, p: g + weight_decay * p, grads, params)
+        new_state = jax.tree_util.tree_map(
+            lambda g, m: momentum * m + g, gw, state)
+        if nesterov:
+            updates = jax.tree_util.tree_map(
+                lambda g, m: -lr * (g + momentum * m), gw, new_state)
+        else:
+            updates = jax.tree_util.tree_map(lambda m: -lr * m, new_state)
+        return updates, new_state
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jnp.ndarray
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = jax.tree_util.tree_map(jnp.zeros_like, params)
+        return AdamState(mu=z, nu=jax.tree_util.tree_map(jnp.zeros_like,
+                                                         params),
+                         count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, lr):
+        c = state.count + 1
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                                    state.mu, grads)
+        nu = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                                    state.nu, grads)
+        upd = jax.tree_util.tree_map(
+            lambda m, v, p: -lr * ((m / bc1) / (jnp.sqrt(v / bc2) + eps)
+                                   + weight_decay * p),
+            mu, nu, params)
+        return upd, AdamState(mu=mu, nu=nu, count=c)
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype),
+                                  params, updates)

@@ -1,0 +1,35 @@
+"""Learning-rate schedules (paper §5: base 0.1, x0.1 step decays, and a
+linear warm-up from base/10 over 5 epochs used with clipping)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_lr(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def step_decay(base: float, boundaries, factor: float = 0.1):
+    bounds = list(boundaries)
+
+    def fn(step):
+        lr = jnp.float32(base)
+        for b in bounds:
+            lr = jnp.where(step >= b, lr * factor, lr)
+        return lr
+
+    return fn
+
+
+def warmup_cosine(base: float, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.1):
+    def fn(step):
+        step = jnp.float32(step)
+        warm = base * (0.1 + 0.9 * step / max(warmup_steps, 1))
+        frac = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = base * (min_ratio + (1 - min_ratio)
+                      * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return fn

@@ -1,0 +1,4 @@
+from repro.serve.step import ServePlan, make_prefill_step, make_serve_step, plan_serve_sharding
+
+__all__ = ["make_serve_step", "make_prefill_step", "plan_serve_sharding",
+           "ServePlan"]

@@ -1,0 +1,142 @@
+"""Serving: cached decode step + prefill forward, pure jit + NamedSharding.
+
+No gradients flow at serving time, so the paper's quantized collectives are
+not in this path; parameters are bf16, TP-sharded over ``model``. Cache
+sharding:
+  * batched decode (decode_32k): batch over the dp axes, heads over model;
+  * long-context decode (long_500k, batch 1): the cache SEQUENCE dim is
+    sharded over ``data`` — XLA derives the flash-decoding-style distributed
+    softmax (partial max/sum + combine) from the sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.model import LM
+from repro.utils.sharding import choose_fsdp_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class ServePlan:
+    param_specs: Any
+    cache_specs: Any
+
+    def param_shardings(self, mesh):
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), self.param_specs)
+
+    def cache_shardings(self, mesh):
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), self.cache_specs)
+
+
+def plan_serve_sharding(model: LM, aparams, acache, mesh,
+                        *, seq_sharded: bool = False) -> ServePlan:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_model = sizes.get("model", 1)
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_dp = int(np.prod([sizes[a] for a in dp_axes])) if dp_axes else 1
+    dp_ent = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes
+                                               else None)
+    paths = model.param_paths(aparams)
+
+    def pspec(path, leaf):
+        shape = leaf.shape
+        stacked = path.startswith("g") or path.startswith("enc/g")
+        off = 1 if stacked else 0
+        slice_shape = shape[off:]
+        cand = [i for i, s in enumerate(slice_shape)
+                if s % n_model == 0 and s >= n_model]
+        ent = [None] * len(shape)
+        if cand and n_model > 1:
+            n_exp = model.cfg.moe.num_experts if model.cfg.moe else -1
+            pref = [i for i in cand if slice_shape[i] == n_exp]
+            t = pref[0] if pref else max(cand, key=lambda i: slice_shape[i])
+            ent[off + t] = "model"
+        return P(*ent)
+
+    param_specs = jax.tree_util.tree_map(pspec, paths, aparams)
+
+    def cspec(leaf):
+        # cache leaves: (reps, B, C, heads, hd) attn / (reps, B, ...) states.
+        # Attention caches shard batch over dp and SEQUENCE over model
+        # (flash-decoding layout: XLA derives the distributed softmax
+        # combine); with global batch 1 the sequence dim takes both.
+        ent = [None] * leaf.ndim
+        if leaf.ndim >= 2 and dp_ent is not None:
+            if seq_sharded:
+                if leaf.ndim >= 3:
+                    both = (dp_axes + ("model",) if n_model > 1
+                            else dp_axes)
+                    total = n_dp * (n_model if n_model > 1 else 1)
+                    if leaf.shape[2] % total == 0:
+                        ent[2] = both
+                    elif leaf.shape[2] % n_dp == 0:
+                        ent[2] = dp_ent
+            else:
+                if leaf.shape[1] % n_dp == 0:
+                    ent[1] = dp_ent
+                if (leaf.ndim >= 3 and n_model > 1
+                        and leaf.shape[2] % n_model == 0):
+                    ent[2] = "model"
+        return P(*ent)
+
+    cache_specs = jax.tree_util.tree_map(cspec, acache)
+    return ServePlan(param_specs=param_specs, cache_specs=cache_specs)
+
+
+def make_serve_step(model: LM, mesh, plan: ServePlan, *,
+                    batch_dp: bool = True):
+    """decode one token: (params, cache, tokens (B,1), pos) -> (logits,
+    cache). ``batch_dp=False`` replicates the token batch over the dp axes
+    (long-context decode with global batch 1: the cache seq dim carries the
+    dp sharding instead)."""
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_ent = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes
+                                               else None)
+    if not batch_dp:
+        dp_ent = None
+
+    def step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    return jax.jit(
+        step,
+        in_shardings=(plan.param_shardings(mesh),
+                      plan.cache_shardings(mesh),
+                      NamedSharding(mesh, P(dp_ent)),
+                      NamedSharding(mesh, P())),
+        out_shardings=(NamedSharding(mesh, P(dp_ent)),
+                       plan.cache_shardings(mesh)),
+        donate_argnums=(1,),
+    )
+
+
+def make_prefill_step(model: LM, mesh, plan: ServePlan):
+    """Chunked-forward prefill producing all-position logits (the
+    inference-prefill shape): (params, tokens (B,S) [, enc_embeds]) ->
+    logits (B,S,V)."""
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_ent = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes
+                                               else None)
+
+    def step(params, batch):
+        lg, _ = model.logits(params, batch["tokens"],
+                             enc_embeds=batch.get("enc_embeds"))
+        return lg
+
+    batch_sh = {"tokens": NamedSharding(mesh, P(dp_ent))}
+    if model.cfg.encoder:
+        batch_sh["enc_embeds"] = NamedSharding(mesh, P(dp_ent))
+    return jax.jit(
+        step,
+        in_shardings=(plan.param_shardings(mesh), batch_sh),
+        out_shardings=NamedSharding(mesh, P(dp_ent)),
+    )

@@ -1,0 +1,5 @@
+from repro.train.state import TrainState
+from repro.train.step import ShardingPlan, TrainConfig, make_train_step, plan_sharding
+
+__all__ = ["TrainState", "TrainConfig", "make_train_step", "plan_sharding",
+           "ShardingPlan"]

@@ -1,0 +1,15 @@
+"""Training state pytree."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax.numpy as jnp
+
+
+class TrainState(NamedTuple):
+    params: Any                 # f32 master weights (ZeRO-3 sharded slices
+                                # in fsdp mode; replicated otherwise)
+    opt: Any                    # optimizer state, sharded like params
+    step: jnp.ndarray           # scalar int32
+    ef: Any = None              # error-feedback residuals (beyond-paper;
+                                # replicated mode, TrainConfig.error_feedback)

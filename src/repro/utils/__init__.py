@@ -1,0 +1,10 @@
+from repro.utils.pytree import tree_bytes, tree_count, tree_map_with_path_str
+from repro.utils.sharding import choose_fsdp_dim, leaf_fsdp_spec
+
+__all__ = [
+    "tree_bytes",
+    "tree_count",
+    "tree_map_with_path_str",
+    "choose_fsdp_dim",
+    "leaf_fsdp_spec",
+]

@@ -1,0 +1,27 @@
+"""Small pytree helpers used across the framework."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def tree_count(tree) -> int:
+    """Total number of elements across all array leaves."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes across all array leaves (uses leaf dtype)."""
+    total = 0
+    for x in jax.tree_util.tree_leaves(tree):
+        total += int(np.prod(x.shape)) * np.dtype(x.dtype).itemsize
+    return total
+
+
+def tree_map_with_path_str(fn, tree):
+    """tree_map where fn receives (path_string, leaf)."""
+
+    def _fn(path, leaf):
+        return fn(jax.tree_util.keystr(path), leaf)
+
+    return jax.tree_util.tree_map_with_path(_fn, tree)

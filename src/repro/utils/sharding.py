@@ -1,0 +1,59 @@
+"""Sharding-spec helpers: choosing FSDP dims per parameter leaf.
+
+Parameters are stored ZeRO-3 style: each leaf is sharded over the combined
+data-parallel axes ``(pod, data)`` along one dimension (the "fsdp dim") and —
+independently, handled by XLA auto-SPMD — over the ``model`` axis along a
+tensor-parallel dim. This module picks the fsdp dim.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+from jax.sharding import PartitionSpec as P
+
+
+def choose_fsdp_dim(
+    shape: Sequence[int],
+    n_shards: int,
+    *,
+    skip_dims: Tuple[int, ...] = (),
+    prefer_sizes: Tuple[int, ...] = (),
+) -> Optional[int]:
+    """Pick the dimension to shard ``n_shards``-ways, or None to replicate.
+
+    Preference order: a dim whose size is in ``prefer_sizes`` (typically the
+    d_model-sized dims, which exist on almost every leaf and are divisible by
+    the 32-way dp sharding for all assigned architectures), then the largest
+    divisible dim. Dims in ``skip_dims`` (e.g. a layer-stack leading dim) are
+    never chosen.
+    """
+    candidates = [
+        i
+        for i, s in enumerate(shape)
+        if i not in skip_dims and i - len(shape) not in skip_dims and s % n_shards == 0 and s > 0
+    ]
+    if not candidates:
+        return None
+    for i in candidates:
+        if shape[i] in prefer_sizes:
+            return i
+    return max(candidates, key=lambda i: shape[i])
+
+
+def leaf_fsdp_spec(
+    shape: Sequence[int],
+    n_shards: int,
+    dp_axes: Tuple[str, ...],
+    *,
+    skip_dims: Tuple[int, ...] = (),
+    prefer_sizes: Tuple[int, ...] = (),
+) -> P:
+    """PartitionSpec placing the combined dp axes on the chosen fsdp dim."""
+    dim = choose_fsdp_dim(
+        shape, n_shards, skip_dims=skip_dims, prefer_sizes=prefer_sizes
+    )
+    if dim is None:
+        return P()
+    spec = [None] * len(shape)
+    spec[dim] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    return P(*spec)

@@ -1,0 +1,134 @@
+"""Per-kernel shape/dtype sweeps asserting against the pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _inputs(seed, nb, d, s, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(jax.random.key(seed), 3)
+    v = (jax.random.laplace(k1, (nb, d)) * 0.1).astype(dtype)
+    # ascending per-row level tables spanning the data
+    base = jnp.sort(jax.random.uniform(k2, (nb, s), minval=-0.5, maxval=0.5),
+                    axis=-1)
+    bits = jax.random.bits(k3, (nb, d), dtype=jnp.uint32)
+    return v, base, bits
+
+
+class TestQuantRR:
+    @pytest.mark.parametrize("s", [2, 3, 5, 9, 17])
+    @pytest.mark.parametrize("nb,d", [(1, 128), (3, 256), (8, 2048), (17, 512)])
+    def test_matches_ref(self, s, nb, d):
+        v, lv, bits = _inputs(s * 100 + nb, nb, d, s)
+        got = ops.quant_rr(v, lv, bits)
+        want = ref.quant_rr_ref(v, lv, bits)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        v, lv, bits = _inputs(7, 4, 256, 5, dtype)
+        got = ops.quant_rr(v, lv, bits)
+        want = ref.quant_rr_ref(v, lv, bits)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_outside_range_values(self):
+        v = jnp.array([[-10.0, 10.0, 0.0, 0.2] + [0.0] * 124])
+        lv = jnp.array([[-1.0, 0.0, 1.0]])
+        bits = jnp.zeros((1, 128), dtype=jnp.uint32)  # u=0 -> always round up
+        got = np.asarray(ops.quant_rr(v, lv, bits))
+        want = np.asarray(ref.quant_rr_ref(v, lv, bits))
+        np.testing.assert_array_equal(got, want)
+        assert got[0, 0] == 0      # below range -> bottom level
+        assert got[0, 1] == 2      # above range -> top level
+
+    def test_degenerate_equal_levels(self):
+        v, _, bits = _inputs(9, 2, 128, 3)
+        lv = jnp.zeros((2, 3))
+        got = ops.quant_rr(v, lv, bits)
+        want = ref.quant_rr_ref(v, lv, bits)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestBinGradKernel:
+    @pytest.mark.parametrize("nb,d", [(1, 128), (5, 512), (8, 2048)])
+    def test_matches_ref(self, nb, d):
+        v, _, _ = _inputs(nb, nb, d, 2)
+        b0 = v.mean(axis=-1, keepdims=True)
+        mask = jnp.ones((nb, d), dtype=bool)
+        gi, gp = ops.bingrad_pass(v, b0, mask)
+        wi, wp = ref.bingrad_pass_ref(v, b0, mask)
+        np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+        np.testing.assert_allclose(np.asarray(gp), np.asarray(wp), rtol=1e-6)
+
+    def test_masked(self):
+        v, _, _ = _inputs(3, 2, 256, 2)
+        mask = jnp.arange(256)[None, :] < jnp.array([[100], [256]])
+        b0 = jnp.zeros((2, 1))
+        gi, gp = ops.bingrad_pass(v, b0, mask)
+        wi, wp = ref.bingrad_pass_ref(v, b0, mask)
+        np.testing.assert_allclose(np.asarray(gp), np.asarray(wp), rtol=1e-6)
+        assert float(gp[0, 1] + gp[0, 3]) == 100.0  # masked counts
+
+
+class TestDequantAvg:
+    @pytest.mark.parametrize("L", [1, 2, 4, 8])
+    @pytest.mark.parametrize("s", [2, 3, 9])
+    def test_matches_ref(self, L, s):
+        nb, d = 5, 256
+        key = jax.random.key(L * 10 + s)
+        idx = jax.random.randint(key, (L, nb, d), 0, s)
+        lv = jnp.sort(jax.random.normal(key, (L, nb, s)), axis=-1)
+        got = ops.dequant_avg(idx, lv)
+        want = ref.dequant_avg_ref(idx, lv)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-7)
+
+    def test_roundtrip_with_quant(self):
+        """quantize with the kernel, decode with the kernel: unbiased-ish."""
+        v, lv, bits = _inputs(11, 4, 2048, 9)
+        idx = ops.quant_rr(v, lv, bits)
+        out = ops.dequant_avg(idx[None], lv[None])
+        # every decoded value is one of the two bracketing levels
+        err = np.abs(np.asarray(out) - np.asarray(v))
+        gaps = np.diff(np.asarray(lv), axis=-1).max()
+        assert err.max() <= gaps + 0.5  # values outside level range clip
+
+
+class TestBitpack:
+    @pytest.mark.parametrize("bits", [1, 2, 3, 4, 5])
+    @pytest.mark.parametrize("nb,d", [(1, 64), (4, 517), (9, 2048)])
+    def test_pack_unpack_roundtrip(self, bits, nb, d):
+        idx = jax.random.randint(jax.random.key(bits), (nb, d), 0, 2 ** bits)
+        words = ops.pack(idx, bits)
+        assert words.dtype == jnp.uint32
+        np.testing.assert_array_equal(
+            np.asarray(ops.unpack(words, bits, d)), np.asarray(idx))
+
+    @pytest.mark.parametrize("bits", [2, 4])
+    def test_matches_ref(self, bits):
+        idx = jax.random.randint(jax.random.key(99), (3, 300), 0, 2 ** bits)
+        np.testing.assert_array_equal(
+            np.asarray(ops.pack(idx, bits)),
+            np.asarray(ref.pack_ref(idx, bits)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 10 ** 6),
+    s=st.sampled_from([2, 3, 5, 9, 17]),
+    nb=st.integers(1, 12),
+    logd=st.integers(7, 12),
+)
+def test_quant_rr_property(seed, s, nb, logd):
+    """Kernel == oracle for arbitrary shapes/levels, incl. ragged rows."""
+    d = 2 ** logd
+    v, lv, bits = _inputs(seed, nb, d, s)
+    got = ops.quant_rr(v, lv, bits)
+    want = ref.quant_rr_ref(v, lv, bits)
+    assert (np.asarray(got) == np.asarray(want)).all()
+    assert got.min() >= 0 and got.max() <= s - 1

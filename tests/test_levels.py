@@ -1,0 +1,192 @@
+"""Unit + property tests for the optimal-condition level solvers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import buckets as B
+from repro.core import levels as L
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _bkt(x):
+    x = jnp.asarray(x, dtype=jnp.float32).reshape(1, -1)
+    return x, jnp.ones_like(x, dtype=bool)
+
+
+class TestSortedBuckets:
+    def test_prefix_sums_and_count(self):
+        bkt, mask = _bkt([3.0, 1.0, 2.0])
+        sb = L.sort_buckets(bkt, mask)
+        np.testing.assert_allclose(np.asarray(sb.v[0]), [1, 2, 3])
+        np.testing.assert_allclose(np.asarray(sb.psum[0]), [0, 1, 3, 6])
+        assert int(sb.cnt[0]) == 3
+
+    def test_masked_padding_ignored(self):
+        bkt = jnp.array([[5.0, -1.0, 99.0, 99.0]])
+        mask = jnp.array([[True, True, False, False]])
+        sb = L.sort_buckets(bkt, mask)
+        assert int(sb.cnt[0]) == 2
+        np.testing.assert_allclose(np.asarray(sb.psum[0, 2]), 4.0)
+
+
+class TestORQ:
+    def test_endpoints_are_min_max(self):
+        g = jax.random.normal(jax.random.key(0), (1, 512))
+        mask = jnp.ones_like(g, dtype=bool)
+        lv = L.orq_levels(g, mask, K=2)
+        assert np.isclose(float(lv[0, 0]), float(g.min()))
+        assert np.isclose(float(lv[0, -1]), float(g.max()))
+
+    def test_levels_ascending(self):
+        g = jax.random.laplace(jax.random.key(1), (4, 1024))
+        mask = jnp.ones_like(g, dtype=bool)
+        for K in (1, 2, 3, 4):
+            lv = L.orq_levels(g, mask, K=K)
+            d = np.diff(np.asarray(lv), axis=-1)
+            assert (d >= -1e-6).all(), f"K={K} not ascending"
+
+    def test_uniform_distribution_gives_even_spacing(self):
+        # Remark 1.1: for uniform p, optimal b_k = midpoint of neighbours.
+        g = jnp.linspace(-1.0, 1.0, 4097).reshape(1, -1)
+        mask = jnp.ones_like(g, dtype=bool)
+        lv = np.asarray(L.orq_levels(g, mask, K=2))[0]
+        np.testing.assert_allclose(lv, np.linspace(-1, 1, 5), atol=2e-3)
+
+    def test_optimality_residual_small(self):
+        g = jax.random.laplace(jax.random.key(2), (8, 2048)) * 0.02
+        mask = jnp.ones_like(g, dtype=bool)
+        lv = L.orq_levels(g, mask, K=3)
+        res = L.optimality_residual(g, mask, lv)
+        assert float(jnp.abs(res).max()) < 0.08
+
+    def test_refine_reduces_mse(self):
+        from repro.core import theory
+        from repro.core.quantizers import Quantizer
+
+        g = jax.random.laplace(jax.random.key(3), (32768,)) * 0.02
+        base = theory.scheme_mse(Quantizer("orq", 9), g)
+        ref = theory.scheme_mse(Quantizer("orq", 9, refine_iters=3), g)
+        assert float(ref) <= float(base) * 1.0001
+
+    def test_degenerate_constant_bucket(self):
+        g = jnp.full((1, 256), 0.5)
+        mask = jnp.ones_like(g, dtype=bool)
+        lv = L.orq_levels(g, mask, K=2)
+        assert np.isfinite(np.asarray(lv)).all()
+        np.testing.assert_allclose(np.asarray(lv[0, 0]), 0.5)
+        np.testing.assert_allclose(np.asarray(lv[0, -1]), 0.5)
+
+    def test_all_masked_bucket(self):
+        g = jnp.ones((1, 64))
+        mask = jnp.zeros_like(g, dtype=bool)
+        lv = L.orq_levels(g, mask, K=1)
+        assert np.isfinite(np.asarray(lv)).all()
+
+
+class TestBinGrad:
+    def test_pb_solves_eq15(self):
+        # On the empirical distribution, b1*cnt_pos ≈ Σ_{v>=b1} v at solution.
+        g = jnp.abs(jax.random.normal(jax.random.key(4), (1, 4096)))
+        g = jnp.concatenate([g, -g], axis=-1)  # symmetric
+        mask = jnp.ones_like(g, dtype=bool)
+        b1 = float(L.bingrad_pb_b1(g, mask)[0])
+        v = np.asarray(g[0])
+        lhs = b1 * (v > 0).sum()
+        rhs = v[v >= b1].sum()
+        assert abs(lhs - rhs) / abs(rhs) < 0.01
+
+    def test_b_levels_are_conditional_means(self):
+        g = jax.random.normal(jax.random.key(5), (1, 2048))
+        mask = jnp.ones_like(g, dtype=bool)
+        lv = np.asarray(L.bingrad_b_levels(g, mask))[0]
+        v = np.asarray(g[0])
+        b0 = v.mean()
+        np.testing.assert_allclose(lv[0], v[v < b0].mean(), rtol=1e-5)
+        np.testing.assert_allclose(lv[1], v[v >= b0].mean(), rtol=1e-5)
+
+    def test_lloyd_iters_reduce_mse(self):
+        from repro.core import theory
+        from repro.core.quantizers import Quantizer
+
+        g = jax.random.laplace(jax.random.key(6), (16384,))
+        base = theory.scheme_mse(Quantizer("bingrad_b"), g)
+        ll = theory.scheme_mse(Quantizer("bingrad_b", lloyd_iters=5), g)
+        assert float(ll) <= float(base) * 1.0001
+
+
+class TestBaselines:
+    def test_terngrad_levels(self):
+        g = jnp.array([[0.5, -2.0, 1.0]])
+        mask = jnp.ones_like(g, dtype=bool)
+        lv = np.asarray(L.terngrad_levels(g, mask))[0]
+        np.testing.assert_allclose(lv, [-2.0, 0.0, 2.0])
+
+    def test_qsgd_evenly_spaced(self):
+        g = jax.random.normal(jax.random.key(7), (2, 512))
+        mask = jnp.ones_like(g, dtype=bool)
+        lv = np.asarray(L.qsgd_levels(g, mask, 5))
+        gaps = np.diff(lv, axis=-1)
+        np.testing.assert_allclose(gaps, np.broadcast_to(gaps[:, :1], gaps.shape),
+                                   rtol=1e-5)
+
+    def test_linear_levels_are_quantiles(self):
+        g = jnp.arange(101, dtype=jnp.float32).reshape(1, -1)
+        mask = jnp.ones_like(g, dtype=bool)
+        lv = np.asarray(L.linear_levels(g, mask, 5))[0]
+        np.testing.assert_allclose(lv, [0, 25, 50, 75, 100])
+
+    def test_signsgd_scale_is_l1_mean(self):
+        g = jnp.array([[1.0, -3.0, 2.0, -2.0]])
+        mask = jnp.ones_like(g, dtype=bool)
+        lv = np.asarray(L.signsgd_scale(g, mask))[0]
+        np.testing.assert_allclose(lv, [-2.0, 2.0])
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    data=st.lists(st.floats(-1e3, 1e3, allow_nan=False), min_size=8,
+                  max_size=256),
+    K=st.integers(1, 3),
+)
+def test_orq_levels_property(data, K):
+    """Property: levels finite, ascending, within [min, max] of data."""
+    g = jnp.asarray(data, dtype=jnp.float32).reshape(1, -1)
+    mask = jnp.ones_like(g, dtype=bool)
+    lv = np.asarray(L.orq_levels(g, mask, K=K))[0]
+    assert np.isfinite(lv).all()
+    assert (np.diff(lv) >= -1e-4 * (1 + np.abs(lv[:-1]))).all()
+    assert lv[0] >= np.min(data) - 1e-4
+    assert lv[-1] <= np.max(data) + 1e-4
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2 ** 20),
+    dist=st.sampled_from(["normal", "laplace", "uniform", "bimodal"]),
+)
+def test_orq_beats_even_spacing_property(seed, dist):
+    """Theorem 1's point: optimal levels give <= MSE vs evenly spaced levels
+    with the same span, for ANY distribution."""
+    from repro.core import theory
+
+    key = jax.random.key(seed)
+    if dist == "normal":
+        g = jax.random.normal(key, (1, 2048))
+    elif dist == "laplace":
+        g = jax.random.laplace(key, (1, 2048))
+    elif dist == "uniform":
+        g = jax.random.uniform(key, (1, 2048), minval=-1, maxval=1)
+    else:
+        k1, k2 = jax.random.split(key)
+        g = jnp.concatenate(
+            [jax.random.normal(k1, (1, 1024)) - 3,
+             jax.random.normal(k2, (1, 1024)) + 3], axis=-1)
+    mask = jnp.ones_like(g, dtype=bool)
+    lv_orq = L.orq_levels(g, mask, K=2, refine_iters=2)
+    lv_even = L.qsgd_levels(g, mask, 5)
+    mse_orq = float(theory.expected_mse(g, mask, lv_orq).mean())
+    mse_even = float(theory.expected_mse(g, mask, lv_even).mean())
+    assert mse_orq <= mse_even * 1.02

@@ -1,0 +1,180 @@
+"""Quantizer-level behaviour: unbiasedness, MSE ordering (the paper's core
+claims), bucketing, clipping, wire accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ALL_METHODS, make_quantizer, theory
+from repro.core import buckets as B
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def grad_proxy(seed=0, n=20000, scale=0.01):
+    return jax.random.laplace(jax.random.key(seed), (n,)) * scale
+
+
+class TestRoundTrip:
+    @pytest.mark.parametrize("name", ALL_METHODS)
+    def test_qdq_shape_dtype_finite(self, name):
+        g = grad_proxy().astype(jnp.float32)
+        qz = make_quantizer(name)
+        out = qz.qdq(g, jax.random.key(1))
+        assert out.shape == g.shape and out.dtype == g.dtype
+        assert bool(jnp.isfinite(out).all())
+
+    @pytest.mark.parametrize("name", ["orq-9", "bingrad-b", "terngrad"])
+    def test_bf16_input(self, name):
+        g = grad_proxy().astype(jnp.bfloat16)
+        out = make_quantizer(name).qdq(g, jax.random.key(1))
+        assert out.dtype == jnp.bfloat16
+
+    def test_fp_is_identity(self):
+        g = grad_proxy()
+        assert bool((make_quantizer("fp").qdq(g, jax.random.key(0)) == g).all())
+
+    @pytest.mark.parametrize("n", [1, 5, 2047, 2048, 2049, 10000])
+    def test_ragged_sizes(self, n):
+        g = grad_proxy(n=n)
+        out = make_quantizer("orq-5").qdq(g, jax.random.key(2))
+        assert out.shape == (n,)
+        assert bool(jnp.isfinite(out).all())
+
+    def test_values_are_levels(self):
+        g = grad_proxy(n=4096)
+        qz = make_quantizer("orq-5", bucket_size=2048)
+        q = qz.quantize(g, jax.random.key(3))
+        vals = np.asarray(qz.decode(q.idx, q.levels))
+        lv = np.asarray(q.levels)
+        for b in range(vals.shape[0]):
+            assert np.isin(vals[b], lv[b]).all()
+
+
+class TestUnbiasedness:
+    """Assumption 1 / the paper's unbiased-vs-biased split."""
+
+    @pytest.mark.parametrize("name", ["orq-3", "orq-9", "qsgd-5", "linear-5",
+                                      "terngrad", "minmax2"])
+    def test_unbiased_schemes(self, name):
+        qz = make_quantizer(name, bucket_size=512)
+        assert qz.unbiased
+        g = grad_proxy(seed=3, n=2048, scale=1.0)
+        bias = theory.empirical_bias(qz, g, jax.random.key(4), n_samples=400)
+        # mean bias shrinks as 1/sqrt(samples); elementwise spread ~ quant step
+        assert abs(float(bias.mean())) < 2e-2
+        if name != "minmax2":  # minmax2's quant step is the whole range
+            assert float(jnp.abs(bias).mean()) < 0.2
+
+    @pytest.mark.parametrize("name", ["bingrad-pb", "bingrad-b", "signsgd"])
+    def test_biased_schemes_declared(self, name):
+        assert not make_quantizer(name).unbiased
+
+    def test_bingrad_pb_unbiased_interior(self):
+        """Eq. 14: elements strictly inside (b_{-1}, b_1) are unbiased."""
+        qz = make_quantizer("bingrad-pb", bucket_size=2048)
+        g = grad_proxy(seed=5, n=2048, scale=1.0)
+        bkt, mask = B.to_buckets(g, 2048)
+        lv = qz.fit(bkt, mask)
+        b1 = float(lv[0, 1])
+        bias = theory.empirical_bias(qz, g, jax.random.key(6), n_samples=600)
+        interior = np.abs(np.asarray(g)) < 0.8 * b1
+        assert np.abs(np.asarray(bias))[interior].mean() < 0.06
+
+
+class TestPaperOrdering:
+    """Table 2 / Fig. 2 qualitative claims on quantization error."""
+
+    @pytest.mark.parametrize("dist", ["normal", "laplace", "student_t"])
+    def test_orq_beats_counterparts(self, dist):
+        key = jax.random.key(7)
+        if dist == "normal":
+            g = jax.random.normal(key, (30000,))
+        elif dist == "laplace":
+            g = jax.random.laplace(key, (30000,))
+        else:
+            g = jax.random.t(key, 3.0, (30000,))
+        mse = {n: float(theory.scheme_mse(make_quantizer(n), g))
+               for n in ["orq-3", "orq-5", "orq-9", "qsgd-5", "qsgd-9",
+                          "linear-5", "linear-9", "terngrad"]}
+        assert mse["orq-5"] < mse["qsgd-5"]
+        assert mse["orq-5"] < mse["linear-5"]
+        assert mse["orq-9"] < mse["qsgd-9"]
+        assert mse["orq-9"] < mse["linear-9"]
+        assert mse["orq-3"] < mse["terngrad"]
+        # more levels => lower error
+        assert mse["orq-9"] < mse["orq-5"] < mse["orq-3"]
+
+    def test_bingrad_b_beats_pb_mse(self):
+        g = grad_proxy(seed=8, n=30000)
+        b = float(theory.scheme_mse(make_quantizer("bingrad-b"), g))
+        pb = float(theory.scheme_mse(make_quantizer("bingrad-pb"), g))
+        assert b < pb
+
+    def test_bingrad_beats_minmax_endpoints(self):
+        """§3.2: {min,max} levels are outlier-fragile; BinGrad fixes that."""
+        g = grad_proxy(seed=9, n=30000)
+        mm = float(theory.scheme_mse(make_quantizer("minmax2"), g))
+        pb = float(theory.scheme_mse(make_quantizer("bingrad-pb"), g))
+        assert pb < mm
+
+
+class TestClipping:
+    def test_clip_reduces_range(self):
+        g = grad_proxy(seed=10, n=8192, scale=1.0)
+        qz = make_quantizer("terngrad", clip_c=2.5)
+        q = qz.quantize(g, jax.random.key(0))
+        assert float(jnp.abs(q.levels).max()) < float(jnp.abs(g).max())
+
+    def test_clip_changes_levels_not_shape(self):
+        g = grad_proxy(seed=11)
+        a = make_quantizer("orq-5").qdq(g, jax.random.key(0))
+        b = make_quantizer("orq-5", clip_c=2.5).qdq(g, jax.random.key(0))
+        assert a.shape == b.shape
+        assert not bool(jnp.allclose(a, b))
+
+
+class TestWire:
+    def test_wire_bytes_compression(self):
+        n = 1 << 20
+        fp = make_quantizer("fp").wire_bytes(n)
+        tern = make_quantizer("terngrad").wire_bytes(n)
+        orq9 = make_quantizer("orq-9").wire_bytes(n)
+        bin2 = make_quantizer("bingrad-b").wire_bytes(n)
+        assert fp / bin2 > 25          # ~x32 minus level-table overhead
+        assert fp / tern > 14          # 2-bit packed (paper's x20.2 is entropy)
+        assert 7 < fp / orq9 < 10.7    # 4-bit packed for 9 levels
+
+    def test_pack_unpack_roundtrip(self):
+        from repro.core import encode
+        for s in (2, 3, 5, 9, 17):
+            bits = encode.bits_for_levels(s)
+            idx = jax.random.randint(jax.random.key(s), (4, 517), 0, s)
+            words = encode.pack(idx, bits)
+            assert words.dtype == jnp.uint32
+            back = encode.unpack(words, bits, 517)
+            assert bool((back == idx).all())
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 10 ** 6),
+    name=st.sampled_from(["orq-5", "qsgd-5", "linear-9", "terngrad",
+                          "bingrad-pb", "bingrad-b", "signsgd"]),
+    bucket=st.sampled_from([128, 512, 2048]),
+    n=st.integers(2, 6000),
+)
+def test_quantizer_invariants_property(seed, name, bucket, n):
+    """Invariants for any scheme: output finite, within [min, max] of the
+    (possibly clipped) input range, deterministic given the same key."""
+    g = jax.random.laplace(jax.random.key(seed), (n,))
+    qz = make_quantizer(name, bucket_size=bucket)
+    out1 = qz.qdq(g, jax.random.key(seed + 1))
+    out2 = qz.qdq(g, jax.random.key(seed + 1))
+    assert bool((out1 == out2).all())
+    assert bool(jnp.isfinite(out1).all())
+    # all schemes' levels live within ±max|g| (qsgd/linear levels can exceed
+    # the one-sided data range, but never the symmetric max-abs envelope)
+    amax = float(jnp.abs(g).max())
+    assert float(jnp.abs(out1).max()) <= amax + 1e-4
