@@ -2,25 +2,60 @@
 and transmission time per gradient exchange, for the paper's CNNs and for
 the assigned architectures, per method. Both the information-theoretic
 ratio the paper quotes (32/log2 s) and the achievable packed ratio are
-reported; times at the paper's 10 Gbps and at one v5e ICI link."""
+reported; times at the paper's 10 Gbps and at one v5e ICI link.
+
+Also reports the fused flat-buffer exchange vs the legacy per-leaf one:
+collective launches and wire bytes per worker per step (the fused engine
+issues O(1) collectives regardless of leaf count — see
+``repro/core/comm/exchange.py``).
+
+Runnable standalone for CI smoke: ``PYTHONPATH=src:. python
+benchmarks/comm_cost.py --dry`` (reduced architecture set, prints the same
+CSV rows).
+"""
 from __future__ import annotations
 
+import argparse
 import math
 
-from benchmarks.common import csv_row
-from repro.configs.base import ASSIGNED_ARCHS, get_config
-from repro.core import make_quantizer
-from repro.models import LM
-from repro.utils.pytree import tree_count
 import jax
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.configs.base import ASSIGNED_ARCHS, get_config, get_smoke_config
+from repro.core import comm, make_quantizer
+from repro.models import LM
 
 PAPER_MODELS = {"AlexNet": 61.1e6, "VGG-19": 143.7e6, "DenseNet-161": 28.7e6,
                 "GoogLeNet": 13.0e6, "ResNet-50": 25.6e6}
 METHODS = ["fp", "signsgd", "bingrad-b", "terngrad", "orq-3", "qsgd-5",
            "orq-5", "qsgd-9", "orq-9"]
+WORKERS = 4     # the paper's ImageNet runs use 4 workers
 
 
-def run(emit):
+def _leaf_sizes(cfg):
+    shapes = jax.eval_shape(LM(cfg).init, jax.random.key(0))
+    return [int(np.prod(x.shape))
+            for x in jax.tree_util.tree_leaves(shapes)]
+
+
+def fused_vs_per_leaf(emit, sizes, tag: str):
+    """Collective launches + wire bytes: fused buffer vs one exchange per
+    parameter leaf, for one model's leaf sizes."""
+    for m in ["terngrad", "orq-9"]:
+        qz = make_quantizer(m, bucket_size=512)
+        pl_launch, pl_bytes = comm.per_leaf_stats(qz, sizes, WORKERS)
+        f_launch, f_bytes = comm.fused_stats(qz, sizes, WORKERS)
+        emit(csv_row(
+            f"table1_comm/fused_{tag}_{m}", 0.0,
+            f"leaves={len(sizes)};launches_perleaf={pl_launch};"
+            f"launches_fused={f_launch};"
+            f"wire_perleaf={pl_bytes/2**20:.2f}MiB;"
+            f"wire_fused={f_bytes/2**20:.2f}MiB;"
+            f"wire_saved_pct={100*(1-f_bytes/pl_bytes):.1f}"))
+
+
+def run(emit, dry: bool = False):
     # Table 1 reproduction: FP comm time at 10 Gbps
     for name, n in PAPER_MODELS.items():
         ms = n * 32 / 10e9 * 1e3
@@ -36,10 +71,17 @@ def run(emit):
         packed = qz.wire_bytes(int(n))
         emit(csv_row(f"table1_comm/ratio_{m}", 0.0,
                      f"info_x{info_ratio:.1f};packed_x{n*4/packed:.1f}"))
-    # assigned archs: one full gradient exchange per method
+    # fused vs per-leaf exchange cost
+    if dry:
+        fused_vs_per_leaf(emit, _leaf_sizes(get_smoke_config("lm-100m")),
+                          "lm-100m-smoke")
+        return
+    # assigned archs: fused-vs-per-leaf cost + one full exchange per method
+    # (one abstract init trace per arch, reused for both)
     for arch in ASSIGNED_ARCHS:
-        cfg = get_config(arch)
-        n = tree_count(jax.eval_shape(LM(cfg).init, jax.random.key(0)))
+        sizes = _leaf_sizes(get_config(arch))
+        fused_vs_per_leaf(emit, sizes, arch)
+        n = sum(sizes)
         for m in ["fp", "terngrad", "orq-9"]:
             qz = make_quantizer(m, bucket_size=512)
             wire = qz.wire_bytes(n)
@@ -47,3 +89,16 @@ def run(emit):
             emit(csv_row(f"table1_comm/{arch}_{m}", 0.0,
                          f"params={n/1e9:.1f}B;wire={wire/2**30:.2f}GiB;"
                          f"t_ici_link={t_ici:.2f}s"))
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dry", action="store_true",
+                    help="reduced arch set (CI smoke)")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    run(lambda row: print(row, flush=True), dry=args.dry)
+
+
+if __name__ == "__main__":
+    main()

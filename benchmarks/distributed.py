@@ -41,6 +41,27 @@ for name in ["fp", "orq-9", "qsgd-9", "orq-3", "terngrad"]:
         state, m = step_fn(state, data.batch(i), jax.random.key(1))
         loss = float(m["loss"])
     out[name] = loss
+
+# fused vs per-leaf: collective launches in the traced step + wire bytes
+import numpy as np
+from repro.core import comm, make_quantizer
+counts = {}
+for fused in (True, False):
+    tcfg = TrainConfig(quant=QuantConfig(name="orq-9", bucket_size=2048),
+                       mode="replicated", fused_exchange=fused)
+    state = init_state(model, mesh, tcfg, jax.random.key(0))
+    step_fn, _ = make_train_step(model, mesh, tcfg, constant_lr(0.05))
+    jx = str(jax.make_jaxpr(step_fn)(state, data.batch(0), jax.random.key(1)))
+    counts["fused" if fused else "perleaf"] = (
+        jx.count("all_to_all["), jx.count("all_gather["))
+qz = make_quantizer("orq-9", bucket_size=2048)
+sizes = [int(np.prod(x.shape))
+         for x in jax.tree_util.tree_leaves(state.params)]
+pl_launch, pl_bytes = comm.per_leaf_stats(qz, sizes, 4)
+f_launch, f_bytes = comm.fused_stats(qz, sizes, 4)
+out["_collectives"] = {"counts": counts, "leaves": len(sizes),
+                       "launches": [pl_launch, f_launch],
+                       "wire_bytes": [pl_bytes, f_bytes]}
 print("RESULT " + json.dumps(out))
 """
 
@@ -56,9 +77,18 @@ def run(emit):
     assert r.returncode == 0, r.stdout + r.stderr
     line = [l for l in r.stdout.splitlines() if l.startswith("RESULT")][0]
     res = json.loads(line.split(" ", 1)[1])
+    coll = res.pop("_collectives")
     for name, loss in res.items():
         emit(csv_row(f"table5_distributed/{name}", 0.0,
                      f"final_loss={loss:.4f};workers=4;clip=2.5"))
+    (pl_l, f_l), (pl_b, f_b) = coll["launches"], coll["wire_bytes"]
+    fused_a2a, fused_ag = coll["counts"]["fused"]
+    pleaf_a2a, pleaf_ag = coll["counts"]["perleaf"]
+    emit(csv_row(
+        "table5_distributed/fused_vs_perleaf", 0.0,
+        f"leaves={coll['leaves']};traced_a2a={fused_a2a}v{pleaf_a2a};"
+        f"traced_ag={fused_ag}v{pleaf_ag};launches={f_l}v{pl_l};"
+        f"wire={f_b/2**20:.2f}v{pl_b/2**20:.2f}MiB"))
     ok = (res["orq-9"] <= res["qsgd-9"] + 0.15
           and res["orq-3"] <= res["terngrad"] + 0.15)
     emit(csv_row("table5_distributed/claims", 0.0,

@@ -55,6 +55,7 @@ def make_quantizer(name: str, **kw) -> Quantizer:
 
 
 ALL_METHODS = [
-    "fp", "orq-3", "orq-5", "orq-9", "bingrad-pb", "bingrad-b",
+    "fp", "orq-3", "orq-5", "orq-9", "orq-17", "bingrad-pb", "bingrad-b",
     "terngrad", "qsgd-5", "qsgd-9", "linear-5", "linear-9", "signsgd",
+    "minmax2",
 ]

@@ -1,0 +1,35 @@
+"""Quantized gradient communication, layered.
+
+    wire         pack/unpack + level tables — the uint32 payload format
+    collectives  phase-1/phase-2 shard_map primitives (Algorithm 2)
+    gather       custom-VJP FSDP / replicated parameter gathers
+    exchange     fused flat-buffer engine (GradLayout + GradientExchange)
+
+This package replaces the former ``repro.core.comm`` monolith; every name
+that module exported (including the historical private helpers some tests
+reach for) is re-exported here so old call sites keep working unmodified.
+"""
+from repro.core.comm.collectives import (_names, _rs_mean_parts, axis_size,
+                                         local_qdq_comm_layout,
+                                         psum_mean_tree,
+                                         quantized_all_reduce_mean,
+                                         quantized_reduce_scatter_mean)
+from repro.core.comm.exchange import (GradientExchange, GradLayout, LeafSlot,
+                                      fused_stats, per_leaf_stats)
+from repro.core.comm.gather import make_fsdp_gather, make_replicated_gather
+from repro.core.comm.wire import _assign, _bucket_len
+
+__all__ = [
+    "axis_size",
+    "local_qdq_comm_layout",
+    "psum_mean_tree",
+    "quantized_all_reduce_mean",
+    "quantized_reduce_scatter_mean",
+    "make_fsdp_gather",
+    "make_replicated_gather",
+    "GradLayout",
+    "GradientExchange",
+    "LeafSlot",
+    "fused_stats",
+    "per_leaf_stats",
+]

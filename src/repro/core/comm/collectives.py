@@ -18,22 +18,21 @@ The paper's parameter-server exchange maps onto two collective phases inside
       in sync. ``server_requant=False`` gathers the f32 chunk instead
       (exact broadcast, 32-bit downlink).
 
-For ZeRO-3 training the exchange rides the FSDP parameter gather:
-``make_fsdp_gather`` returns an all_gather whose custom-VJP backward is the
-phase-1 quantized reduce-scatter — exactly where the data-parallel gradient
-communication lives.
+The wire format (fit + round + uint32 bit-pack) lives in
+``repro.core.comm.wire``; this module owns the collective choreography.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 
+from repro.core.comm import wire
+from repro.core.comm.wire import _bucket_len
 from repro.core.quantizers import Quantizer
-from repro.kernels import ops
+from repro.utils import compat
 
 
 def _names(axis_names) -> Tuple[str, ...]:
@@ -43,32 +42,13 @@ def _names(axis_names) -> Tuple[str, ...]:
 def axis_size(axis_names) -> int:
     n = 1
     for a in _names(axis_names):
-        n *= lax.axis_size(a)
+        n *= compat.axis_size(a)
     return n
-
-
-def _bucket_len(chunk: int, d: int) -> int:
-    return min(d, max(chunk, 1))
 
 
 # ---------------------------------------------------------------------------
 # phase 1 core: quantized reduce-scatter over explicit (L, chunk) parts
 # ---------------------------------------------------------------------------
-
-def _assign(qz: Quantizer, bkt, levels, key, use_kernels: bool):
-    """Rounding dispatch: random-rounding methods go through the Pallas
-    quant_rr kernel (VMEM-tiled; never materializes an (nb, d, s) tensor)."""
-    from repro.core import clipping, rounding as R
-
-    if qz.method in ("orq", "terngrad", "qsgd", "linear", "minmax2",
-                     "bingrad_pb"):
-        if qz.clip_c is not None:
-            mask = jnp.ones(bkt.shape, dtype=bool)
-            bkt = clipping.sigma_clip(bkt, mask, qz.clip_c)
-        bits = R.random_bits(key, bkt.shape)
-        return ops.quant_rr(bkt, levels, bits, use_kernels=use_kernels)
-    return qz.assign(bkt, levels, key)
-
 
 def _rs_mean_parts(parts, valid, qz: Quantizer, key, names, use_kernels):
     """parts (L, chunk) local contributions, one row per destination worker;
@@ -86,20 +66,14 @@ def _rs_mean_parts(parts, valid, qz: Quantizer, key, names, use_kernels):
 
     bkt = parts.reshape(L * nbc, d_eff)
     mask = valid.reshape(L * nbc, d_eff)
-    levels = qz.fit(bkt, mask)                           # runtime levels
-    idx = jnp.where(mask, _assign(qz, bkt, levels, key, use_kernels), 0)
-
-    bits = qz.wire_bits_per_element
-    words = ops.pack(idx, bits, use_kernels=use_kernels)  # (L*nbc, nw) u32
+    words, levels = wire.encode(qz, bkt, mask, key, use_kernels=use_kernels)
     words = words.reshape(L, nbc, -1)
     levels = levels.reshape(L, nbc, -1)
     # the wire: uint32 payload + f32 level tables
     words = lax.all_to_all(words, names, split_axis=0, concat_axis=0)
     levels = lax.all_to_all(levels, names, split_axis=0, concat_axis=0)
-    idx_all = jax.vmap(
-        lambda w: ops.unpack(w, bits, d_eff, use_kernels=use_kernels)
-    )(words)                                              # (L, nbc, d_eff)
-    mean_bkt = ops.dequant_avg(idx_all, levels, use_kernels=use_kernels)
+    mean_bkt = wire.decode_mean(qz, words, levels, d_eff,
+                                use_kernels=use_kernels)
     return mean_bkt.reshape(-1)[:chunk]
 
 
@@ -168,7 +142,7 @@ def local_qdq_comm_layout(
     if worker_id is None:
         worker_id = lax.axis_index(names)
     key = jax.random.fold_in(key, worker_id)
-    idx = jnp.where(mask, _assign(qz, bkt, levels, key, use_kernels), 0)
+    idx = jnp.where(mask, wire.assign(qz, bkt, levels, key, use_kernels), 0)
     vals = Quantizer.decode(idx, levels)
     return vals.reshape(L, -1)[:, :chunk].reshape(-1)[:n]
 
@@ -206,145 +180,14 @@ def quantized_all_reduce_mean(
     bkt = jnp.pad(mean_chunk, (0, pad)).reshape(-1, d_eff)
     pos = me * chunk + jnp.arange(chunk + pad)
     mask = ((pos < n) & (jnp.arange(chunk + pad) < chunk)).reshape(-1, d_eff)
-    levels = qz.fit(bkt, mask)
     key2 = jax.random.fold_in(jax.random.fold_in(key, 0x5EC0), me)
-    idx = jnp.where(mask, _assign(qz, bkt, levels, key2, use_kernels), 0)
-    bits = qz.wire_bits_per_element
-    words = ops.pack(idx, bits, use_kernels=use_kernels)
+    words, levels = wire.encode(qz, bkt, mask, key2, use_kernels=use_kernels)
     words = lax.all_gather(words, names, axis=0, tiled=False)
     levels_all = lax.all_gather(levels, names, axis=0, tiled=False)
-    idx_all = jax.vmap(
-        lambda w: ops.unpack(w, bits, d_eff, use_kernels=use_kernels)
-    )(words)                                              # (L, nbc, d_eff)
-    vals = jax.vmap(Quantizer.decode)(idx_all, levels_all)  # (L, nbc, d_eff)
+    vals = wire.decode_each(qz, words, levels_all, d_eff,
+                            use_kernels=use_kernels)      # (L, nbc, d_eff)
     vals = vals.reshape(L, -1)[:, :chunk]
     return vals.reshape(-1)[:n].astype(flat.dtype)
-
-
-# ---------------------------------------------------------------------------
-# ZeRO-3: FSDP gather with quantized-gradient backward
-# ---------------------------------------------------------------------------
-
-def make_fsdp_gather(
-    qz: Quantizer,
-    axis_names,
-    *,
-    dim: int,
-    tp_dim: Optional[int] = None,
-    tp_axis: str = "model",
-    compute_dtype=jnp.bfloat16,
-    param_dtype=jnp.float32,
-    use_kernels: bool = True,
-):
-    """Returns gather(w_slice, key) -> full ``compute_dtype`` leaf.
-
-    fwd: cast + all_gather along ``dim`` over the dp axes (the FSDP
-         parameter broadcast; bf16 wire).
-    bwd: the paper — quantized reduce-scatter of the full-size local
-         gradient cotangent; the f32 slice matches the stored shard.
-
-    When the leaf is also tensor-parallel (``tp_dim`` over the auto
-    ``tp_axis``), the backward runs inside a NESTED manual shard_map over
-    that axis: every device quantizes its own contiguous gradient shard and
-    the all_to_all stays within the dp axes. Without this, XLA has to
-    replicate the strided flatten of a TP-sharded cotangent — terabytes of
-    involuntary all-gather on 100B-parameter models.
-    """
-    names = _names(axis_names)
-
-    @jax.custom_vjp
-    def gather(w, key):
-        del key
-        return lax.all_gather(w.astype(compute_dtype), names, axis=dim,
-                              tiled=True)
-
-    def fwd(w, key):
-        # capture the worker id in the PRIMAL context: axis_index cannot
-        # lower from the transposed/hoisted backward context
-        wid = lax.axis_index(names)
-        return gather(w, key), (key, wid)
-
-    def _local_rs(g, key):
-        """Quantized RS of one (possibly per-tp-shard) cotangent block."""
-        L = axis_size(names)
-        gm = jnp.moveaxis(g.astype(jnp.float32), dim, 0)
-        lead, rest = gm.shape[0], gm.shape[1:]
-        chunk = (lead // L) * int(np.prod(rest)) if rest else lead // L
-        parts = gm.reshape(L, chunk)
-        if qz.is_identity:
-            mean_chunk = lax.psum_scatter(
-                parts, names, scatter_dimension=0, tiled=False) / L
-        else:
-            valid = jnp.ones((L, chunk), dtype=bool)
-            mean_chunk = _rs_mean_parts(parts, valid, qz, key, names,
-                                        use_kernels)
-        out = mean_chunk.reshape((lead // L,) + rest)
-        return jnp.moveaxis(out, 0, dim).astype(param_dtype)
-
-    def bwd(res, g):
-        key, wid = res
-        key_w = jax.random.fold_in(key, wid)
-        if tp_dim is not None:
-            spec = [None] * g.ndim
-            spec[tp_dim] = tp_axis
-            pspec = jax.sharding.PartitionSpec(*spec)
-
-            # NOTE: the rounding bits are shared across tp shards (the
-            # shards quantize disjoint data, so unbiasedness is unaffected)
-            out = jax.shard_map(
-                _local_rs,
-                in_specs=(pspec, jax.sharding.PartitionSpec()),
-                out_specs=pspec, axis_names={tp_axis},
-                check_vma=False)(g, key_w)
-        else:
-            out = _local_rs(g, key_w)
-        key_ct = np.zeros(key.shape, dtype=jax.dtypes.float0)
-        return out, key_ct
-
-    gather.defvjp(fwd, bwd)
-    return gather
-
-
-def make_replicated_gather(
-    qz: Quantizer,
-    axis_names,
-    *,
-    compute_dtype=jnp.bfloat16,
-    param_dtype=jnp.float32,
-    server_requant: bool = True,
-    use_kernels: bool = True,
-):
-    """Identity 'gather' for dp-replicated leaves whose backward runs the
-    full Algorithm 2 quantized all-reduce (leaves too small / indivisible to
-    FSDP-shard still need their gradients exchanged and must stay bit-
-    identical across workers — the deterministic phase-2 decode guarantees
-    that)."""
-    names = _names(axis_names)
-
-    @jax.custom_vjp
-    def gather(w, key):
-        del key
-        return w.astype(compute_dtype)
-
-    def fwd(w, key):
-        wid = lax.axis_index(names)   # primal context (see make_fsdp_gather)
-        return gather(w, key), (key, wid)
-
-    def bwd(res, g):
-        key, wid = res
-        flat = g.astype(jnp.float32).reshape(-1)
-        if qz.is_identity:
-            mean = lax.pmean(flat, names)
-        else:
-            mean = quantized_all_reduce_mean(
-                flat, qz, key, names, worker_id=wid,
-                server_requant=server_requant, use_kernels=use_kernels)
-        out = mean.reshape(g.shape).astype(param_dtype)
-        key_ct = np.zeros(key.shape, dtype=jax.dtypes.float0)
-        return out, key_ct
-
-    gather.defvjp(fwd, bwd)
-    return gather
 
 
 def psum_mean_tree(tree, axis_names):

@@ -1,0 +1,94 @@
+"""Wire format for quantized gradients: level fit + rounding + uint32 packing.
+
+One "wire unit" is a pair ``(words, levels)``:
+
+    words   (nb, nw) uint32 — bit-packed level indices, ``nw`` words per
+            bucket at ``qz.wire_bits_per_element`` bits per element;
+    levels  (nb, s)  float32 — the per-bucket runtime level tables
+            (the paper's level selection happens per bucket, so the tables
+            ride the wire next to the payload).
+
+Both collective phases (worker->server and server->worker) speak exactly
+this format; the functions here are the single place the encode/decode
+pipeline is defined, shared by ``collectives`` and ``exchange``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizers import Quantizer
+from repro.kernels import ops
+
+
+def bucket_len(chunk: int, d: int) -> int:
+    """Effective bucket length for a chunk of ``chunk`` elements."""
+    return min(d, max(chunk, 1))
+
+
+# kept under the historical private name too (monolith-era callers/tests)
+_bucket_len = bucket_len
+
+
+def assign(qz: Quantizer, bkt, levels, key, use_kernels: bool):
+    """Rounding dispatch: random-rounding methods go through the Pallas
+    quant_rr kernel (VMEM-tiled; never materializes an (nb, d, s) tensor)."""
+    from repro.core import clipping, rounding as R
+
+    if qz.method in ("orq", "terngrad", "qsgd", "linear", "minmax2",
+                     "bingrad_pb"):
+        if qz.clip_c is not None:
+            mask = jnp.ones(bkt.shape, dtype=bool)
+            bkt = clipping.sigma_clip(bkt, mask, qz.clip_c)
+        bits = R.random_bits(key, bkt.shape)
+        return ops.quant_rr(bkt, levels, bits, use_kernels=use_kernels)
+    return qz.assign(bkt, levels, key)
+
+
+_assign = assign
+
+
+def encode(qz: Quantizer, bkt, mask, key, *,
+           use_kernels: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fit levels on masked buckets, round, and bit-pack.
+
+    bkt/mask are (nb, d_eff); returns ``(words, levels)`` wire units with
+    masked-out slots forced to index 0 (they never reach the decoder's
+    averaged output — callers slice them away)."""
+    levels = qz.fit(bkt, mask)                            # runtime levels
+    idx = jnp.where(mask, assign(qz, bkt, levels, key, use_kernels), 0)
+    words = ops.pack(idx, qz.wire_bits_per_element, use_kernels=use_kernels)
+    return words, levels
+
+
+def decode_mean(qz: Quantizer, words, levels, d_eff: int, *,
+                use_kernels: bool = True) -> jnp.ndarray:
+    """Decode L stacked wire units and average: (L, nb, nw) u32 + (L, nb, s)
+    -> (nb, d_eff) mean values. This is the 'server' side of phase 1."""
+    bits = qz.wire_bits_per_element
+    idx_all = jax.vmap(
+        lambda w: ops.unpack(w, bits, d_eff, use_kernels=use_kernels)
+    )(words)                                              # (L, nb, d_eff)
+    return ops.dequant_avg(idx_all, levels, use_kernels=use_kernels)
+
+
+def decode_each(qz: Quantizer, words, levels, d_eff: int, *,
+                use_kernels: bool = True) -> jnp.ndarray:
+    """Decode L stacked wire units without averaging: -> (L, nb, d_eff).
+    Phase 2's all-gather'ed broadcast is decoded this way (every worker
+    reconstructs each server's re-quantized chunk deterministically)."""
+    bits = qz.wire_bits_per_element
+    idx_all = jax.vmap(
+        lambda w: ops.unpack(w, bits, d_eff, use_kernels=use_kernels)
+    )(words)                                              # (L, nb, d_eff)
+    return jax.vmap(Quantizer.decode)(idx_all, levels)
+
+
+def wire_unit_bytes(qz: Quantizer, nb: int, d_eff: int) -> int:
+    """Bytes on the wire for one (words, levels) unit of nb buckets."""
+    from repro.core import encode as E
+
+    words = E.packed_words(d_eff, qz.wire_bits_per_element)
+    return 4 * nb * (words + qz.s)

@@ -39,6 +39,11 @@ def main(argv=None):
     ap.add_argument("--clip-c", type=float, default=None)
     ap.add_argument("--mode", default="replicated",
                     choices=["replicated", "fsdp"])
+    ap.add_argument("--per-leaf-exchange", action="store_true",
+                    help="legacy one-collective-per-leaf exchange "
+                         "(default: fused flat-buffer engine)")
+    ap.add_argument("--exchange-chunk", type=int, default=None,
+                    help="cap fused-collective size (elements) for memory")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
@@ -52,7 +57,9 @@ def main(argv=None):
     tcfg = TrainConfig(
         quant=QuantConfig(name=args.quant, bucket_size=args.bucket,
                           clip_c=args.clip_c),
-        mode=args.mode)
+        mode=args.mode,
+        fused_exchange=not args.per_leaf_exchange,
+        exchange_chunk_elems=args.exchange_chunk)
     lr_fn = step_decay(args.lr, [args.steps // 2, 3 * args.steps // 4])
     state = init_state(model, mesh, tcfg, jax.random.key(args.seed))
     step_fn, _ = make_train_step(model, mesh, tcfg, lr_fn)

@@ -34,7 +34,12 @@ from repro.models.model import LM
 from repro.optim import optimizers as opt_lib
 from repro.optim.schedule import constant_lr
 from repro.train.state import TrainState
+from repro.utils.compat import shard_map
 from repro.utils.sharding import choose_fsdp_dim
+
+# key-fold salt separating the fused whole-tree exchange stream from the
+# legacy per-leaf (crc32-of-path) streams
+_FUSED_SALT = zlib.crc32(b"fused_exchange") & 0x7FFFFFFF
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +52,10 @@ class TrainConfig:
     use_kernels: bool = True
     error_feedback: bool = False    # beyond-paper: EF residual accumulation
                                     # (replicated mode; see EXPERIMENTS.md)
+    fused_exchange: bool = True     # one flat-buffer collective per step
+                                    # (False = legacy per-leaf exchange)
+    exchange_chunk_elems: Optional[int] = None  # size cap per fused
+                                                # collective (memory knob)
     compute_dtype: Any = jnp.bfloat16
 
 
@@ -177,6 +186,10 @@ def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
     plan = plan_sharding(model, aparams, mesh)
     optimizer = _make_optimizer(tcfg)
     qz = tcfg.quant.to_quantizer()
+    engine = comm.GradientExchange(
+        qz, dp_axes, server_requant=tcfg.quant.server_requant,
+        use_kernels=tcfg.use_kernels,
+        max_chunk_elems=tcfg.exchange_chunk_elems)
 
     def make_gather_fn(step_key):
         if tcfg.mode == "replicated":
@@ -228,34 +241,57 @@ def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
                 lambda g, e: g + e.astype(g.dtype), grads, state.ef)
 
         if tcfg.mode == "replicated" and dp_axes:
-            # Algorithm 2: per-leaf quantized all-reduce of local grads
-            def exchange(path, g):
-                flat = g.astype(jnp.float32).reshape(-1)
-                k = jax.random.fold_in(
-                    step_key, zlib.crc32(path.encode()) & 0x7FFFFFFF)
-                out = comm.quantized_all_reduce_mean(
-                    flat, qz, k, dp_axes,
-                    server_requant=tcfg.quant.server_requant,
-                    use_kernels=tcfg.use_kernels)
-                return out.reshape(g.shape).astype(g.dtype)
-
-            if use_ef:
-                def residual(path, g):
+            if tcfg.fused_exchange:
+                # fused Algorithm 2: flatten the whole gradient pytree into
+                # one contiguous buffer and run a SINGLE quantized
+                # all-reduce over it (O(1) collectives per step instead of
+                # O(num_leaves) — see core/comm/exchange.py)
+                layout = comm.GradLayout.from_tree(grads)
+                k = jax.random.fold_in(step_key, _FUSED_SALT)
+                flat = layout.flatten(grads)
+                if use_ef:
+                    local = engine.local_qdq_flat(flat, k)
+                    new_ef = layout.unflatten(flat - local,
+                                              restore_dtype=False)
+                grads = layout.unflatten(engine.exchange_flat(flat, k))
+            else:
+                # legacy per-leaf quantized all-reduce of local grads
+                def exchange(path, g):
                     flat = g.astype(jnp.float32).reshape(-1)
                     k = jax.random.fold_in(
                         step_key, zlib.crc32(path.encode()) & 0x7FFFFFFF)
-                    local = comm.local_qdq_comm_layout(
+                    out = comm.quantized_all_reduce_mean(
                         flat, qz, k, dp_axes,
+                        server_requant=tcfg.quant.server_requant,
                         use_kernels=tcfg.use_kernels)
-                    return (flat - local).reshape(g.shape)
+                    return out.reshape(g.shape).astype(g.dtype)
 
-                new_ef = jax.tree_util.tree_map(
-                    residual, model.param_paths(state.params), grads)
-            grads = jax.tree_util.tree_map(
-                exchange, model.param_paths(state.params), grads)
+                if use_ef:
+                    def residual(path, g):
+                        flat = g.astype(jnp.float32).reshape(-1)
+                        k = jax.random.fold_in(
+                            step_key, zlib.crc32(path.encode()) & 0x7FFFFFFF)
+                        local = comm.local_qdq_comm_layout(
+                            flat, qz, k, dp_axes,
+                            use_kernels=tcfg.use_kernels)
+                        return (flat - local).reshape(g.shape)
+
+                    new_ef = jax.tree_util.tree_map(
+                        residual, model.param_paths(state.params), grads)
+                grads = jax.tree_util.tree_map(
+                    exchange, model.param_paths(state.params), grads)
         elif tcfg.mode == "replicated" and not dp_axes:
             # single-machine Algorithm 2: quantize->dequantize locally
-            if not qz.is_identity:
+            if not qz.is_identity and tcfg.fused_exchange:
+                layout = comm.GradLayout.from_tree(grads)
+                k = jax.random.fold_in(step_key, _FUSED_SALT)
+                flat = layout.flatten(grads)
+                qflat = engine.qdq_local_flat(flat, k)
+                if use_ef:
+                    new_ef = layout.unflatten(flat - qflat,
+                                              restore_dtype=False)
+                grads = layout.unflatten(qflat)
+            elif not qz.is_identity:
                 def qdq(path, g):
                     k = jax.random.fold_in(
                         step_key, zlib.crc32(path.encode()) & 0x7FFFFFFF)
@@ -295,13 +331,13 @@ def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
         if cfg.encoder:
             batch_specs["enc_embeds"] = P(dp_axes if len(dp_axes) > 1
                                           else dp_axes[0])
-        fn = jax.shard_map(local_step, mesh=mesh,
-                           in_specs=(state_specs, batch_specs, P()),
-                           out_specs=(state_specs,
-                                      {"nll": P(), "aux": P(),
-                                       "tokens": P(), "loss": P(),
-                                       "lr": P()}),
-                           axis_names=set(dp_axes), check_vma=False)
+        fn = shard_map(local_step, mesh=mesh,
+                       in_specs=(state_specs, batch_specs, P()),
+                       out_specs=(state_specs,
+                                  {"nll": P(), "aux": P(),
+                                   "tokens": P(), "loss": P(),
+                                   "lr": P()}),
+                       axis_names=set(dp_axes), check_vma=False)
         return jax.jit(fn), plan
 
     # fsdp mode
@@ -315,10 +351,10 @@ def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
         batch_specs["enc_embeds"] = P(dp_ent)
     metric_specs = {"nll": P(), "aux": P(), "tokens": P(), "loss": P(),
                     "lr": P()}
-    fn = jax.shard_map(local_step, mesh=mesh,
-                       in_specs=(state_specs, batch_specs, P()),
-                       out_specs=(state_specs, metric_specs),
-                       axis_names=set(dp_axes), check_vma=False)
+    fn = shard_map(local_step, mesh=mesh,
+                   in_specs=(state_specs, batch_specs, P()),
+                   out_specs=(state_specs, metric_specs),
+                   axis_names=set(dp_axes), check_vma=False)
     return jax.jit(fn, donate_argnums=(0,)), plan
 
 

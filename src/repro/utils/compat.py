@@ -1,0 +1,102 @@
+"""JAX version compatibility shims.
+
+The codebase is written against the modern ``jax.shard_map`` API
+(keyword-only ``mesh``/``axis_names``/``check_vma``). Older JAX releases
+(<= 0.4.x) only ship ``jax.experimental.shard_map.shard_map`` with the
+positional ``(f, mesh, in_specs, out_specs, check_rep, auto)`` signature —
+and their partial-auto mode (some axes manual, some left to the SPMD
+partitioner) is unusable in practice: closure constants, typed PRNG keys,
+``axis_index``/``all_gather``/``all_to_all`` and any ``lax.scan`` in the
+body all abort XLA's partitioner with manual-subgroup sharding errors.
+
+So on legacy JAX :func:`shard_map` runs FULL-manual over every mesh axis
+instead: axes not listed in ``axis_names`` become manual-but-unused, with
+each device along them holding a replicated copy. That is semantically
+equivalent for this repo — the model's ``shard()`` sharding hints already
+degrade to no-ops on legacy JAX (``get_abstract_mesh`` does not exist), so
+the auto axes never carried computation there anyway; they only do on
+modern JAX, where the native partial-auto path is used.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+import jax
+
+_HAS_NATIVE = hasattr(jax, "shard_map")
+
+# Old-style shard_map needs the concrete mesh even when nested inside
+# another shard_map (the new API infers it from context). Our wrappers push
+# the mesh here while tracing their body so nested compat calls can pick
+# it up.
+_MESH_STACK: List[Any] = []
+
+
+def axis_size(name) -> int:
+    """Static size of one named mesh axis (``lax.axis_size`` where it
+    exists; the axis-env fallback on older releases)."""
+    from jax import lax
+
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(name)
+    from jax._src import core as _core
+
+    if hasattr(_core, "get_axis_env"):
+        return _core.get_axis_env().axis_size(name)
+    return _core.axis_frame(name).size  # pragma: no cover - very old jax
+
+
+def supports_nested_manual() -> bool:
+    """Whether a shard_map over one axis can nest inside a manual region
+    over other axes. The modern API handles it; on legacy the outer region
+    is already full-manual over every axis (see module docstring), so
+    there is nothing left to nest over."""
+    return _HAS_NATIVE
+
+
+def shard_map(f, *, mesh=None, in_specs, out_specs, axis_names=None,
+              check_vma: bool = False):
+    """``jax.shard_map`` if available, else the experimental fallback.
+
+    ``axis_names`` is the set of MANUAL axes (the modern convention). The
+    legacy fallback promotes every mesh axis to manual (see module
+    docstring for why partial-auto is not an option there).
+    """
+    if _HAS_NATIVE:
+        kw = dict(in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+        if mesh is not None:
+            kw["mesh"] = mesh
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(f, **kw)
+
+    from jax.experimental.shard_map import shard_map as _legacy
+
+    mesh = mesh if mesh is not None else _current_mesh()
+    if mesh is None:
+        raise ValueError(
+            "legacy shard_map needs an explicit mesh (no enclosing "
+            "compat.shard_map context to inherit one from)")
+    inner = _legacy(f, mesh, in_specs, out_specs, check_rep=check_vma)
+
+    def wrapped(*args):
+        _MESH_STACK.append(mesh)
+        try:
+            return inner(*args)
+        finally:
+            _MESH_STACK.pop()
+
+    return wrapped
+
+
+def _current_mesh() -> Optional[Any]:
+    if _MESH_STACK:
+        return _MESH_STACK[-1]
+    try:  # pjit/legacy global-mesh context, if any
+        from jax._src.mesh import thread_resources
+
+        mesh = thread_resources.env.physical_mesh
+        return mesh if mesh.axis_names else None
+    except Exception:  # pragma: no cover - private-API drift
+        return None

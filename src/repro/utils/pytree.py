@@ -25,3 +25,11 @@ def tree_map_with_path_str(fn, tree):
         return fn(jax.tree_util.keystr(path), leaf)
 
     return jax.tree_util.tree_map_with_path(_fn, tree)
+
+
+def tree_flatten_with_path_strs(tree):
+    """tree_flatten returning ([(path_string, leaf), ...], treedef) in the
+    canonical leaf order (the order ``tree_leaves`` / ``tree_unflatten``
+    use), so callers can build positional layouts keyed by path."""
+    pairs, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return ([(jax.tree_util.keystr(p), leaf) for p, leaf in pairs], treedef)

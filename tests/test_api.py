@@ -1,0 +1,38 @@
+"""Registry round-trip: every advertised method name must parse and report
+a coherent wire accounting (no hypothesis dependency — this file must run
+even without the optional test extras)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ALL_METHODS, QuantConfig, make_quantizer
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.mark.parametrize("name", ALL_METHODS)
+def test_all_methods_parse_and_wire_bits(name):
+    qz = make_quantizer(name, bucket_size=512)
+    assert qz.s >= 2 or qz.is_identity
+    bits = qz.wire_bits_per_element
+    assert 1 <= bits <= 5, (name, bits)          # s <= 17 -> <= 5 bits
+    assert 2 ** bits >= qz.s, (name, bits, qz.s)  # indices must fit
+    if not qz.is_identity:
+        # packed wire must actually compress vs f32
+        assert qz.wire_bytes(10_000) < 4.0 * 10_000, name
+
+
+@pytest.mark.parametrize("name", ALL_METHODS)
+def test_all_methods_qdq_roundtrip(name):
+    g = (jax.random.laplace(jax.random.key(3), (4096,)) * 0.01
+         ).astype(jnp.float32)
+    qz = QuantConfig(name=name, bucket_size=512).to_quantizer()
+    out = qz.qdq(g, jax.random.key(1))
+    assert out.shape == g.shape and out.dtype == g.dtype
+    assert bool(jnp.isfinite(out).all()), name
+
+
+def test_all_methods_includes_full_registry():
+    # names accepted by make_quantizer that the registry must advertise
+    for name in ("minmax2", "orq-17"):
+        assert name in ALL_METHODS

@@ -38,8 +38,10 @@ mesh = jax.make_mesh((4, 2), ("data", "model"))
 DP = ("data",)
 L = 4
 
+from repro.utils.compat import shard_map
+
 def shmap(f, in_specs, out_specs):
-    return jax.jit(jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+    return jax.jit(shard_map(f, mesh=mesh, in_specs=in_specs,
                    out_specs=out_specs, axis_names={"data"}, check_vma=False))
 """
 
@@ -77,12 +79,15 @@ for name, d in [("orq-5", 512), ("terngrad", 2048), ("bingrad-b", 256),
                 ("qsgd-9", 1024), ("signsgd", 512)]:
     qz = make_quantizer(name, bucket_size=d)
 
-    def f(gl):
+    # NOTE: the PRNG key must ride in_specs, not a closure — legacy
+    # partial-auto shard_map mis-shards closed-over extended-dtype consts
+    def f(gl, k):
         gl = gl[0]
-        out = comm.quantized_reduce_scatter_mean(gl, qz, key, DP)
+        out = comm.quantized_reduce_scatter_mean(gl, qz, k, DP)
         return out[None]
 
-    out = np.asarray(shmap(f, (P("data", None),), P("data", None))(g))
+    out = np.asarray(shmap(f, (P("data", None), P()),
+                           P("data", None))(g, key))
 
     # local simulation (mirrors _rs_mean_parts exactly)
     chunk = -(-n // L)
@@ -112,13 +117,14 @@ n = 4096
 g = jax.random.laplace(jax.random.key(3), (L, n)) * 0.01
 qz = make_quantizer("orq-9", bucket_size=512)
 
-def f(gl):
+def f(gl, k):
     gl = gl[0]
-    out = comm.quantized_all_reduce_mean(gl, qz, jax.random.key(5), DP,
+    out = comm.quantized_all_reduce_mean(gl, qz, k, DP,
                                          server_requant=True)
     return out[None]
 
-out = np.asarray(shmap(f, (P("data", None),), P("data", None))(g))
+out = np.asarray(shmap(f, (P("data", None), P()),
+                       P("data", None))(g, jax.random.key(5)))
 # identical on every worker (deterministic decode)
 for w in range(1, L):
     np.testing.assert_array_equal(out[0], out[w])
@@ -128,12 +134,13 @@ assert err.mean() < 0.01, err.mean()
 print("allreduce OK")
 
 # server_requant=False must equal the rs result exactly
-def f2(gl):
+def f2(gl, k):
     gl = gl[0]
-    out = comm.quantized_all_reduce_mean(gl, qz, jax.random.key(5), DP,
+    out = comm.quantized_all_reduce_mean(gl, qz, k, DP,
                                          server_requant=False)
     return out[None]
-out2 = np.asarray(shmap(f2, (P("data", None),), P("data", None))(g))
+out2 = np.asarray(shmap(f2, (P("data", None), P()),
+                        P("data", None))(g, jax.random.key(5)))
 for w in range(1, L):
     np.testing.assert_array_equal(out2[0], out2[w])
 print("allreduce-norequant OK")
@@ -205,7 +212,7 @@ def f(gl):
         gl, qz, jax.random.key(9), ("pod", "data"))
     return out[None]
 
-fn = jax.jit(jax.shard_map(f, mesh=mesh2,
+fn = jax.jit(shard_map(f, mesh=mesh2,
              in_specs=(P(("pod", "data"), None),),
              out_specs=P(("pod", "data"), None),
              axis_names={"pod", "data"}, check_vma=False))

@@ -69,6 +69,7 @@ class TestErrorFeedback:
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.core import make_quantizer, comm
+        from repro.utils.compat import shard_map
         mesh = jax.make_mesh((4,), ("data",))
         qz = make_quantizer("orq-5", bucket_size=128)
         n, L = 1000, 4
@@ -81,7 +82,7 @@ class TestErrorFeedback:
             mean = comm.quantized_reduce_scatter_mean(gl, qz, key, ("data",))
             return local[None], jax.lax.all_gather(mean, "data")[None]
 
-        fn = jax.jit(jax.shard_map(f, mesh=mesh,
+        fn = jax.jit(shard_map(f, mesh=mesh,
                      in_specs=(P("data", None),),
                      out_specs=(P("data", None), P("data", None, None)),
                      axis_names={"data"}, check_vma=False))

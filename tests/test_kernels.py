@@ -3,9 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.kernels import ops, ref
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.kernels import ops, ref  # noqa: E402
 
 jax.config.update("jax_platform_name", "cpu")
 
