@@ -7,7 +7,9 @@ reported; times at the paper's 10 Gbps and at one v5e ICI link.
 Also reports the fused flat-buffer exchange vs the legacy per-leaf one:
 collective launches and wire bytes per worker per step (the fused engine
 issues O(1) collectives regardless of leaf count — see
-``repro/core/comm/exchange.py``).
+``repro/core/comm/exchange.py``); and the partitioned per-policy-group
+exchange (``QuantPolicy``): launches + wire bytes for the recommended
+mixed recipe (fp norms/biases, quantized matmuls) vs uniform fp / orq-9.
 
 Runnable standalone for CI smoke: ``PYTHONPATH=src:. python
 benchmarks/comm_cost.py --dry`` (reduced architecture set, prints the same
@@ -23,8 +25,10 @@ import numpy as np
 
 from benchmarks.common import csv_row
 from repro.configs.base import ASSIGNED_ARCHS, get_config, get_smoke_config
-from repro.core import comm, make_quantizer
+from repro.core import QuantPolicy, comm, make_quantizer
 from repro.models import LM
+
+MIXED_POLICY = "norm|bias=fp,default=orq-9"   # EXPERIMENTS.md recipe
 
 PAPER_MODELS = {"AlexNet": 61.1e6, "VGG-19": 143.7e6, "DenseNet-161": 28.7e6,
                 "GoogLeNet": 13.0e6, "ResNet-50": 25.6e6}
@@ -33,10 +37,36 @@ METHODS = ["fp", "signsgd", "bingrad-b", "terngrad", "orq-3", "qsgd-5",
 WORKERS = 4     # the paper's ImageNet runs use 4 workers
 
 
-def _leaf_sizes(cfg):
-    shapes = jax.eval_shape(LM(cfg).init, jax.random.key(0))
-    return [int(np.prod(x.shape))
-            for x in jax.tree_util.tree_leaves(shapes)]
+def _leaf_path_sizes(cfg):
+    """[(gather-path, size), ...] — the strings policies resolve against."""
+    model = LM(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.key(0))
+    paths = jax.tree_util.tree_leaves(model.param_paths(shapes))
+    sizes = [int(np.prod(x.shape))
+             for x in jax.tree_util.tree_leaves(shapes)]
+    return list(zip(paths, sizes))
+
+
+def policy_vs_uniform(emit, path_sizes, tag: str):
+    """Partitioned per-group exchange for the mixed recipe vs uniform fp /
+    orq-9: per-group launches and wire bytes per worker."""
+    n = sum(s for _, s in path_sizes)
+    policy = QuantPolicy.parse(MIXED_POLICY, bucket_size=512)
+    launches, bytes_, labels = comm.policy_stats(policy, path_sizes, WORKERS)
+    sizes = [s for _, s in path_sizes]
+    _, fp_bytes = comm.fused_stats(make_quantizer("fp"), sizes, WORKERS)
+    qz = make_quantizer("orq-9", bucket_size=512)
+    u_launch, u_bytes = comm.fused_stats(qz, sizes, WORKERS)
+    fp_frac = sum(s for p, s in path_sizes
+                  if policy.resolve(p).name == "fp") / n
+    emit(csv_row(
+        f"table1_comm/policy_{tag}", 0.0,
+        f"policy={MIXED_POLICY.replace(',', ' ')};"
+        f"groups={len(labels)};launches={launches};"
+        f"launches_uniform={u_launch};fp_leaf_frac={100*fp_frac:.2f}pct;"
+        f"wire={bytes_/2**20:.2f}MiB;wire_uniform_orq9={u_bytes/2**20:.2f}MiB;"
+        f"wire_fp={fp_bytes/2**20:.2f}MiB;"
+        f"saved_vs_fp_pct={100*(1-bytes_/fp_bytes):.1f}"))
 
 
 def fused_vs_per_leaf(emit, sizes, tag: str):
@@ -71,16 +101,19 @@ def run(emit, dry: bool = False):
         packed = qz.wire_bytes(int(n))
         emit(csv_row(f"table1_comm/ratio_{m}", 0.0,
                      f"info_x{info_ratio:.1f};packed_x{n*4/packed:.1f}"))
-    # fused vs per-leaf exchange cost
+    # fused vs per-leaf exchange cost + mixed-policy partitioned cost
     if dry:
-        fused_vs_per_leaf(emit, _leaf_sizes(get_smoke_config("lm-100m")),
-                          "lm-100m-smoke")
+        ps = _leaf_path_sizes(get_smoke_config("lm-100m"))
+        fused_vs_per_leaf(emit, [s for _, s in ps], "lm-100m-smoke")
+        policy_vs_uniform(emit, ps, "lm-100m-smoke")
         return
     # assigned archs: fused-vs-per-leaf cost + one full exchange per method
     # (one abstract init trace per arch, reused for both)
     for arch in ASSIGNED_ARCHS:
-        sizes = _leaf_sizes(get_config(arch))
+        ps = _leaf_path_sizes(get_config(arch))
+        sizes = [s for _, s in ps]
         fused_vs_per_leaf(emit, sizes, arch)
+        policy_vs_uniform(emit, ps, arch)
         n = sum(sizes)
         for m in ["fp", "terngrad", "orq-9"]:
             qz = make_quantizer(m, bucket_size=512)

@@ -2,6 +2,8 @@
 with quantized data-parallel gradients (Algorithm 2), comparing against FP.
 
     PYTHONPATH=src python examples/train_lm.py --steps 300 --quant orq-9
+    PYTHONPATH=src python examples/train_lm.py \
+        --quant "norm|bias=fp,default=orq-9"      # mixed per-group policy
 """
 import argparse
 import time
@@ -9,7 +11,7 @@ import time
 import jax
 
 from repro.configs.base import get_config
-from repro.core import QuantConfig
+from repro.core import QuantPolicy
 from repro.data import SyntheticLM
 from repro.launch.mesh import make_host_mesh
 from repro.models import LM
@@ -30,8 +32,9 @@ def main():
     cfg = get_config("lm-100m")
     model = LM(cfg)
     mesh = make_host_mesh()
-    tcfg = TrainConfig(quant=QuantConfig(name=args.quant, bucket_size=2048,
-                                         clip_c=2.5), mode="replicated")
+    tcfg = TrainConfig(policy=QuantPolicy.parse(args.quant, bucket_size=2048,
+                                                clip_c=2.5),
+                       mode="replicated")
     lr_fn = warmup_cosine(args.lr, args.steps // 10, args.steps)
     state = init_state(model, mesh, tcfg, jax.random.key(0))
     step_fn, _ = make_train_step(model, mesh, tcfg, lr_fn)

@@ -1,16 +1,34 @@
 """The paper's contribution: optimal gradient quantization (BinGrad / ORQ).
 
 Public surface:
-    QuantConfig, make_quantizer, Quantizer, QuantizedTensor
+    QuantConfig, QuantPolicy, PolicyRule — config + per-group policy
+    make_quantizer, register_scheme, all_methods — pluggable scheme registry
+    Quantizer, QuantizedTensor — the stateless recipe
     quantized collectives live in repro.core.comm
 """
-from repro.core.api import ALL_METHODS, QuantConfig, make_quantizer
+from repro.core.api import (QuantConfig, all_methods, make_quantizer,
+                            register_scheme, registered_schemes,
+                            unregister_scheme)
+from repro.core.policy import PolicyRule, QuantPolicy
 from repro.core.quantizers import QuantizedTensor, Quantizer
 
 __all__ = [
     "ALL_METHODS",
     "QuantConfig",
+    "QuantPolicy",
+    "PolicyRule",
+    "all_methods",
     "make_quantizer",
+    "register_scheme",
+    "registered_schemes",
+    "unregister_scheme",
     "Quantizer",
     "QuantizedTensor",
 ]
+
+
+def __getattr__(name: str):
+    # derived from the live scheme registry, never a stale snapshot
+    if name == "ALL_METHODS":
+        return all_methods()
+    raise AttributeError(name)

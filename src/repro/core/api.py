@@ -1,17 +1,22 @@
-"""Public quantization API: config + registry.
+"""Public quantization API: config + pluggable scheme registry.
 
 ``QuantConfig`` is what flows through launcher flags / arch configs;
-``make_quantizer`` turns it into the stateless ``Quantizer`` recipe.
-Names accepted (paper §5 nomenclature):
+``make_quantizer`` turns it into the stateless ``Quantizer`` recipe by
+looking the scheme family up in a registry. Built-in names (paper §5
+nomenclature):
 
     fp | orq-3 | orq-5 | orq-9 | orq-17 | bingrad-pb | bingrad-b |
     terngrad | qsgd-5 | qsgd-9 | linear-5 | linear-9 | signsgd | minmax2
+
+New scheme families plug in through ``register_scheme`` (no core edits);
+``all_methods()`` / ``ALL_METHODS`` are derived from the registry, never
+hand-listed.
 """
 from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Optional
+from typing import Callable, Dict, Optional, Tuple
 
 from repro.core.quantizers import Quantizer
 
@@ -38,24 +43,122 @@ class QuantConfig:
         )
 
 
+# ---------------------------------------------------------------------------
+# scheme registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SchemeSpec:
+    """One scheme family: ``base`` name, a builder mapping the optional
+    ``-suffix`` (level count / variant tag) to a Quantizer, and the
+    advertised variant names the registry derives ``all_methods()`` from."""
+
+    base: str
+    builder: Callable[..., Quantizer]   # builder(suffix, **kw) -> Quantizer
+    variants: Tuple[str, ...]
+    doc: str = ""
+
+
+_REGISTRY: Dict[str, SchemeSpec] = {}
+
+
+def register_scheme(base: str, builder: Callable[..., Quantizer], *,
+                    variants: Tuple[str, ...] = (), doc: str = "") -> SchemeSpec:
+    """Register (or replace) a scheme family. ``builder(suffix, **kw)``
+    receives the parsed ``-suffix`` (``None`` when absent) plus the
+    Quantizer keyword args; ``variants`` are the names advertised through
+    ``all_methods()`` (defaults to just ``base``)."""
+    if not _NAME_RE.match(base) or "-" in base:
+        raise ValueError(f"bad scheme base name {base!r}")
+    variants = tuple(variants) or (base,)
+    for v in variants:
+        m = _NAME_RE.match(v)
+        if not m or m.group(1) != base:
+            # every advertised variant must round-trip through
+            # make_quantizer, or all_methods() would name unparseable
+            # schemes in help text and error messages
+            raise ValueError(
+                f"variant {v!r} cannot be parsed back to scheme {base!r} "
+                f"(allowed suffixes: -pb, -b, or -<digits>)")
+    spec = SchemeSpec(base=base, builder=builder, variants=variants, doc=doc)
+    _REGISTRY[base] = spec
+    return spec
+
+
+def unregister_scheme(base: str) -> None:
+    _REGISTRY.pop(base, None)
+
+
+def registered_schemes() -> Dict[str, SchemeSpec]:
+    """Snapshot of the registry (base -> SchemeSpec), insertion-ordered."""
+    return dict(_REGISTRY)
+
+
+def all_methods() -> list:
+    """Every advertised scheme name, derived from the registry."""
+    return [v for spec in _REGISTRY.values() for v in spec.variants]
+
+
 def make_quantizer(name: str, **kw) -> Quantizer:
     m = _NAME_RE.match(name.strip().lower().replace("_", "-"))
     if not m:
-        raise ValueError(f"bad quantizer name {name!r}")
+        raise ValueError(
+            f"bad quantizer name {name!r}; valid schemes: "
+            f"{', '.join(all_methods())}")
     base, suffix = m.group(1), m.group(2)
-    if base == "bingrad":
-        method = f"bingrad_{suffix}"
+    spec = _REGISTRY.get(base)
+    if spec is None:
+        raise ValueError(
+            f"unknown quantizer {name!r}; valid schemes: "
+            f"{', '.join(all_methods())}")
+    return spec.builder(suffix, **kw)
+
+
+# -- built-in families -------------------------------------------------------
+
+def _fixed(method: str):
+    def build(suffix, **kw):
+        if suffix is not None:
+            raise ValueError(f"scheme {method!r} takes no -suffix")
         return Quantizer(method=method, **kw)
-    if base in ("orq", "qsgd", "linear"):
-        s = int(suffix) if suffix else {"orq": 9, "qsgd": 9, "linear": 9}[base]
-        return Quantizer(method=base, num_levels=s, **kw)
-    if base in ("fp", "terngrad", "signsgd", "minmax2"):
-        return Quantizer(method=base, **kw)
-    raise ValueError(f"unknown quantizer {name!r}")
+    return build
 
 
-ALL_METHODS = [
-    "fp", "orq-3", "orq-5", "orq-9", "orq-17", "bingrad-pb", "bingrad-b",
-    "terngrad", "qsgd-5", "qsgd-9", "linear-5", "linear-9", "signsgd",
-    "minmax2",
-]
+def _leveled(method: str, default_s: int):
+    def build(suffix, **kw):
+        return Quantizer(method=method,
+                         num_levels=int(suffix) if suffix else default_s,
+                         **kw)
+    return build
+
+
+def _bingrad(suffix, **kw):
+    if suffix not in ("pb", "b"):
+        raise ValueError("bingrad needs a -pb or -b suffix")
+    return Quantizer(method=f"bingrad_{suffix}", **kw)
+
+
+register_scheme("fp", _fixed("fp"), doc="identity (no quantization)")
+register_scheme("orq", _leveled("orq", 9),
+                variants=("orq-3", "orq-5", "orq-9", "orq-17"),
+                doc="ORQ-s, s = 2^K+1 (Theorem 1 / Alg. 1)")
+register_scheme("bingrad", _bingrad, variants=("bingrad-pb", "bingrad-b"),
+                doc="BinGrad partially/fully biased (Eq. 14-17)")
+register_scheme("terngrad", _fixed("terngrad"),
+                doc="TernGrad (3 levels ±max|v|)")
+register_scheme("qsgd", _leveled("qsgd", 9), variants=("qsgd-5", "qsgd-9"),
+                doc="QSGD-s (evenly spaced levels)")
+register_scheme("linear", _leveled("linear", 9),
+                variants=("linear-5", "linear-9"),
+                doc="Linear-s (CDF quantiles)")
+register_scheme("signsgd", _fixed("signsgd"),
+                doc="scaled SignSGD (Eq. 13)")
+register_scheme("minmax2", _fixed("minmax2"),
+                doc="unbiased 2-level {min,max} (Corollary 1.1)")
+
+
+def __getattr__(name: str):
+    # ALL_METHODS stays importable but is always derived from the registry
+    if name == "ALL_METHODS":
+        return all_methods()
+    raise AttributeError(name)

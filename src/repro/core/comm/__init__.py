@@ -14,8 +14,11 @@ from repro.core.comm.collectives import (_names, _rs_mean_parts, axis_size,
                                          psum_mean_tree,
                                          quantized_all_reduce_mean,
                                          quantized_reduce_scatter_mean)
-from repro.core.comm.exchange import (GradientExchange, GradLayout, LeafSlot,
-                                      fused_stats, per_leaf_stats)
+from repro.core.comm.exchange import (GradientExchange, GradLayout,
+                                      GroupSegment, LeafSlot,
+                                      PartitionedExchange, PolicyLayout,
+                                      fused_stats, per_leaf_stats,
+                                      policy_stats)
 from repro.core.comm.gather import make_fsdp_gather, make_replicated_gather
 from repro.core.comm.wire import _assign, _bucket_len
 
@@ -29,7 +32,11 @@ __all__ = [
     "make_replicated_gather",
     "GradLayout",
     "GradientExchange",
+    "GroupSegment",
     "LeafSlot",
+    "PartitionedExchange",
+    "PolicyLayout",
     "fused_stats",
     "per_leaf_stats",
+    "policy_stats",
 ]

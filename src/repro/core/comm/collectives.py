@@ -142,7 +142,8 @@ def local_qdq_comm_layout(
     if worker_id is None:
         worker_id = lax.axis_index(names)
     key = jax.random.fold_in(key, worker_id)
-    idx = jnp.where(mask, wire.assign(qz, bkt, levels, key, use_kernels), 0)
+    idx = jnp.where(mask, wire.assign(qz, bkt, levels, key, use_kernels,
+                                      mask=mask), 0)
     vals = Quantizer.decode(idx, levels)
     return vals.reshape(L, -1)[:, :chunk].reshape(-1)[:n]
 

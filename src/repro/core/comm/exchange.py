@@ -20,19 +20,30 @@ bucket boundaries land on the fused buffer, many-tiny-leaf trees also
 save wire bytes (small leaves share buckets instead of each paying its
 own ragged tail and level table — for few-large-leaf trees the byte
 counts are essentially equal and the win is the launch count).
+
+The PARTITIONED mode (``PolicyLayout`` + ``PartitionedExchange``) extends
+this to per-parameter-group policies (``repro.core.QuantPolicy``): leaves
+are grouped by their resolved quantizer config into contiguous segments,
+each segment gets its own fused quantized all-reduce, wire accounting,
+and error-feedback residual stream. Launches stay O(#policy groups),
+never O(#leaves); a uniform policy degenerates to exactly one group whose
+buffer, keys, and wire layout are bit-identical to the single-engine path.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List, Optional, Sequence, Tuple
+import warnings
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.api import QuantConfig
 from repro.core.comm import wire
 from repro.core.comm.collectives import (local_qdq_comm_layout,
                                          quantized_all_reduce_mean)
+from repro.core.policy import QuantPolicy
 from repro.core.quantizers import Quantizer
 from repro.utils.pytree import tree_flatten_with_path_strs
 
@@ -83,11 +94,13 @@ class GradLayout:
 
     def unflatten(self, buf: jnp.ndarray, *, restore_dtype: bool = True):
         """(size,) buffer -> pytree, restoring each leaf's shape (and dtype
-        unless ``restore_dtype=False`` — error-feedback residuals stay f32)."""
+        unless ``restore_dtype=False`` — error-feedback residuals stay f32).
+
+        Offsets are trace-time constants, so static slicing keeps the
+        jaxpr pure slice/reshape (like ``leaf_slice``)."""
         leaves = []
         for s in self.slots:
-            leaf = jax.lax.dynamic_slice_in_dim(buf, s.offset, s.size)
-            leaf = leaf.reshape(s.shape)
+            leaf = buf[s.offset:s.offset + s.size].reshape(s.shape)
             leaves.append(leaf.astype(s.dtype) if restore_dtype else leaf)
         return jax.tree_util.tree_unflatten(self.treedef, leaves)
 
@@ -219,6 +232,214 @@ class GradientExchange:
                 down = 4.0 * chunk
             total += up + down
         return total
+
+
+# ---------------------------------------------------------------------------
+# partitioned mode: per-policy-group segments
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GroupSegment:
+    """One policy group's contiguous segment: which canonical leaves it
+    owns and how large its fused buffer is."""
+
+    cfg: QuantConfig
+    leaf_ids: Tuple[int, ...]    # canonical leaf order indices, ascending
+    size: int                    # total element count of the group buffer
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyLayout:
+    """Static partition plan: canonical leaves grouped by resolved
+    QuantConfig into contiguous per-group buffers.
+
+    ``slots`` stay in canonical leaf order; each slot's ``offset`` is the
+    leaf's span inside its GROUP buffer (``leaf_group[i]`` says which).
+    A uniform policy yields exactly one group whose buffer layout equals
+    ``GradLayout.from_tree`` bit for bit.
+    """
+
+    treedef: Any
+    slots: Tuple[LeafSlot, ...]
+    groups: Tuple[GroupSegment, ...]
+    leaf_group: Tuple[int, ...]          # leaf i -> index into groups
+
+    @classmethod
+    def from_tree(cls, tree, policy: QuantPolicy, *,
+                  paths=None) -> "PolicyLayout":
+        """``paths`` optionally overrides the leaf path strings (a pytree of
+        strings aligned with ``tree`` — e.g. ``model.param_paths``); the
+        default is the keystr paths of ``tree`` itself."""
+        pairs, treedef = tree_flatten_with_path_strs(tree)
+        if paths is not None:
+            path_strs = list(jax.tree_util.tree_leaves(paths))
+            assert len(path_strs) == len(pairs), \
+                (len(path_strs), len(pairs))
+        else:
+            path_strs = [p for p, _ in pairs]
+        dead = policy.unmatched_rules(path_strs)
+        if dead:
+            # a typo'd pattern would otherwise silently fall through to
+            # the default scheme for every leaf it was meant to cover
+            warnings.warn(
+                f"policy rules matched no parameter leaf: {dead}; check "
+                f"the patterns against the model's param paths",
+                stacklevel=2)
+
+        group_ix: Dict[QuantConfig, int] = {}
+        g_cfg: List[QuantConfig] = []
+        g_leaves: List[List[int]] = []
+        g_off: List[int] = []
+        slots: List[LeafSlot] = []
+        leaf_group: List[int] = []
+        for i, ((_, leaf), path) in enumerate(zip(pairs, path_strs)):
+            cfg = policy.resolve(path)
+            gi = group_ix.setdefault(cfg, len(g_cfg))
+            if gi == len(g_cfg):
+                g_cfg.append(cfg)
+                g_leaves.append([])
+                g_off.append(0)
+            size = int(np.prod(leaf.shape)) if leaf.shape else 1
+            slots.append(LeafSlot(path=path, shape=tuple(leaf.shape),
+                                  dtype=leaf.dtype, offset=g_off[gi],
+                                  size=size))
+            g_off[gi] += size
+            g_leaves[gi].append(i)
+            leaf_group.append(gi)
+        groups = tuple(
+            GroupSegment(cfg=c, leaf_ids=tuple(ls), size=off)
+            for c, ls, off in zip(g_cfg, g_leaves, g_off))
+        return cls(treedef=treedef, slots=tuple(slots), groups=groups,
+                   leaf_group=tuple(leaf_group))
+
+    @property
+    def size(self) -> int:
+        return sum(g.size for g in self.groups)
+
+    # -- buffers <-> tree --------------------------------------------------
+    def flatten_groups(self, tree) -> Tuple[jnp.ndarray, ...]:
+        """Pytree -> one (group.size,) contiguous f32 buffer per group
+        (leaves in canonical order within each group)."""
+        leaves = jax.tree_util.tree_leaves(tree)
+        assert len(leaves) == len(self.slots), (len(leaves), len(self.slots))
+        return tuple(
+            jnp.concatenate([leaves[i].astype(jnp.float32).reshape(-1)
+                             for i in g.leaf_ids])
+            for g in self.groups)
+
+    def unflatten_groups(self, bufs: Sequence[jnp.ndarray], *,
+                         restore_dtype: bool = True):
+        """Per-group buffers -> pytree (static slicing; dtype restore
+        skipped for f32 error-feedback residuals)."""
+        assert len(bufs) == len(self.groups), (len(bufs), len(self.groups))
+        leaves = []
+        for i, s in enumerate(self.slots):
+            buf = bufs[self.leaf_group[i]]
+            leaf = buf[s.offset:s.offset + s.size].reshape(s.shape)
+            leaves.append(leaf.astype(s.dtype) if restore_dtype else leaf)
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionedExchange:
+    """Per-policy-group fused Algorithm 2: one ``GradientExchange`` per
+    group, each over that group's contiguous segment with its own wire
+    accounting, key stream, and error-feedback residuals.
+
+    Collective launches are O(#groups) — a uniform policy is exactly the
+    single-engine fused exchange (same buffer, same unfolded key, same
+    wire layout), which the regression tests pin down bit for bit.
+    """
+
+    layout: PolicyLayout
+    engines: Tuple[GradientExchange, ...]     # aligned with layout.groups
+
+    @classmethod
+    def build(cls, policy: QuantPolicy, tree, axis_names, *, paths=None,
+              use_kernels: bool = True,
+              max_chunk_elems: Optional[int] = None) -> "PartitionedExchange":
+        layout = PolicyLayout.from_tree(tree, policy, paths=paths)
+        engines = tuple(
+            GradientExchange(
+                g.cfg.to_quantizer(), axis_names,
+                server_requant=g.cfg.server_requant,
+                use_kernels=use_kernels, max_chunk_elems=max_chunk_elems)
+            for g in layout.groups)
+        return cls(layout=layout, engines=engines)
+
+    def _group_key(self, key: jax.Array, gi: int) -> jax.Array:
+        # single group == the uniform fused exchange: key stays unfolded so
+        # the stream is bit-identical to GradientExchange on GradLayout
+        return key if len(self.engines) == 1 else jax.random.fold_in(key, gi)
+
+    @property
+    def is_identity(self) -> bool:
+        return all(e.qz.is_identity for e in self.engines)
+
+    # -- distributed paths -------------------------------------------------
+    def exchange_parts(self, bufs: Sequence[jnp.ndarray], key: jax.Array, *,
+                       worker_id=None) -> Tuple[jnp.ndarray, ...]:
+        """Per-group local buffers -> per-group across-worker means."""
+        return tuple(
+            eng.exchange_flat(buf, self._group_key(key, gi),
+                              worker_id=worker_id)
+            for gi, (eng, buf) in enumerate(zip(self.engines, bufs)))
+
+    def local_qdq_parts(self, bufs: Sequence[jnp.ndarray], key: jax.Array, *,
+                        worker_id=None) -> Tuple[jnp.ndarray, ...]:
+        """Per-group fused local quantize->dequantize, bit-consistent with
+        ``exchange_parts`` (error feedback); identity groups pass through
+        unchanged (zero residual)."""
+        return tuple(
+            buf if eng.qz.is_identity
+            else eng.local_qdq_flat(buf, self._group_key(key, gi),
+                                    worker_id=worker_id)
+            for gi, (eng, buf) in enumerate(zip(self.engines, bufs)))
+
+    def exchange(self, tree, key: jax.Array, *, worker_id=None):
+        """Pytree-level convenience: group-flatten -> per-group exchange ->
+        unflatten."""
+        bufs = self.layout.flatten_groups(tree)
+        return self.layout.unflatten_groups(
+            self.exchange_parts(bufs, key, worker_id=worker_id))
+
+    # -- single-device path ------------------------------------------------
+    def qdq_local_parts(self, bufs: Sequence[jnp.ndarray],
+                        key: jax.Array) -> Tuple[jnp.ndarray, ...]:
+        return tuple(
+            eng.qdq_local_flat(buf, self._group_key(key, gi))
+            for gi, (eng, buf) in enumerate(zip(self.engines, bufs)))
+
+    # -- static cost accounting --------------------------------------------
+    def collective_launches(self) -> int:
+        return sum(eng.collective_launches(g.size)
+                   for eng, g in zip(self.engines, self.layout.groups))
+
+    def wire_bytes_per_worker(self, n_workers: int) -> float:
+        return sum(eng.wire_bytes_per_worker(g.size, n_workers)
+                   for eng, g in zip(self.engines, self.layout.groups))
+
+
+def policy_stats(policy: QuantPolicy, path_sizes, n_workers: int, *,
+                 max_chunk_elems: Optional[int] = None
+                 ) -> Tuple[int, float, Tuple[str, ...]]:
+    """(launches, wire bytes per worker, group labels) for a policy over
+    ``[(path, size), ...]`` leaves — static accounting without a tree
+    (benchmarks)."""
+    groups: Dict[QuantConfig, int] = {}
+    for path, size in path_sizes:
+        cfg = policy.resolve(path)
+        groups[cfg] = groups.get(cfg, 0) + int(size)
+    launches, bytes_, labels = 0, 0.0, []
+    for cfg, n in groups.items():
+        eng = GradientExchange(
+            cfg.to_quantizer(), ("data",),
+            server_requant=cfg.server_requant,
+            max_chunk_elems=max_chunk_elems)
+        launches += eng.collective_launches(n)
+        bytes_ += eng.wire_bytes_per_worker(n, n_workers)
+        labels.append(cfg.name)
+    return launches, bytes_, tuple(labels)
 
 
 def per_leaf_stats(qz: Quantizer, sizes: Sequence[int], n_workers: int, *,

@@ -32,19 +32,24 @@ def bucket_len(chunk: int, d: int) -> int:
 _bucket_len = bucket_len
 
 
-def assign(qz: Quantizer, bkt, levels, key, use_kernels: bool):
+def assign(qz: Quantizer, bkt, levels, key, use_kernels: bool, mask=None):
     """Rounding dispatch: random-rounding methods go through the Pallas
-    quant_rr kernel (VMEM-tiled; never materializes an (nb, d, s) tensor)."""
+    quant_rr kernel (VMEM-tiled; never materializes an (nb, d, s) tensor).
+
+    ``mask`` is the real bucket-validity mask; the σ-clip must see it so
+    padded ragged-tail positions feed the σ estimate exactly as in
+    ``qz.fit`` (``None`` = all valid)."""
     from repro.core import clipping, rounding as R
 
     if qz.method in ("orq", "terngrad", "qsgd", "linear", "minmax2",
                      "bingrad_pb"):
         if qz.clip_c is not None:
-            mask = jnp.ones(bkt.shape, dtype=bool)
+            if mask is None:
+                mask = jnp.ones(bkt.shape, dtype=bool)
             bkt = clipping.sigma_clip(bkt, mask, qz.clip_c)
         bits = R.random_bits(key, bkt.shape)
         return ops.quant_rr(bkt, levels, bits, use_kernels=use_kernels)
-    return qz.assign(bkt, levels, key)
+    return qz.assign(bkt, levels, key, mask=mask)
 
 
 _assign = assign
@@ -58,7 +63,8 @@ def encode(qz: Quantizer, bkt, mask, key, *,
     masked-out slots forced to index 0 (they never reach the decoder's
     averaged output — callers slice them away)."""
     levels = qz.fit(bkt, mask)                            # runtime levels
-    idx = jnp.where(mask, assign(qz, bkt, levels, key, use_kernels), 0)
+    idx = jnp.where(mask, assign(qz, bkt, levels, key, use_kernels,
+                                 mask=mask), 0)
     words = ops.pack(idx, qz.wire_bits_per_element, use_kernels=use_kernels)
     return words, levels
 

@@ -104,11 +104,16 @@ class Quantizer:
         raise ValueError(f"unknown method {self.method!r}")
 
     def assign(
-        self, bkt: jnp.ndarray, levels: jnp.ndarray, key: jax.Array
+        self, bkt: jnp.ndarray, levels: jnp.ndarray, key: jax.Array,
+        mask: Optional[jnp.ndarray] = None,
     ) -> jnp.ndarray:
         if self.clip_c is not None:
-            # clip so the rounding sees the same values the fit saw
-            mask = jnp.ones(bkt.shape, dtype=bool)
+            # clip so the rounding sees the same values the fit saw — the
+            # σ estimate must exclude padded ragged-tail positions exactly
+            # like ``fit`` does, so callers thread the real bucket mask
+            # through (``None`` keeps the all-valid legacy behaviour)
+            if mask is None:
+                mask = jnp.ones(bkt.shape, dtype=bool)
             bkt = clipping.sigma_clip(bkt, mask, self.clip_c)
         m = self.method
         if m in ("orq", "terngrad", "qsgd", "linear", "minmax2", "bingrad_pb"):
@@ -129,7 +134,7 @@ class Quantizer:
     def quantize(self, flat: jnp.ndarray, key: jax.Array) -> QuantizedTensor:
         bkt, mask = B.to_buckets(flat.reshape(-1), self.bucket_size)
         lv = self.fit(bkt, mask)
-        idx = self.assign(bkt, lv, key)
+        idx = self.assign(bkt, lv, key, mask=mask)
         idx = jnp.where(mask, idx, 0)
         return QuantizedTensor(idx=idx, levels=lv, n=flat.size)
 

@@ -27,7 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ASSIGNED_ARCHS, get_config
-from repro.core import QuantConfig
+from repro.core import QuantPolicy
 from repro.launch import hlo_cost
 from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
                                make_production_mesh)
@@ -85,7 +85,7 @@ def lower_case(arch: str, shape_name: str, *, multi_pod: bool,
             # scan-over-grid that the SPMD partitioner replicates; the
             # jnp path is numerically identical (tested) and partitions
             # cleanly. On real TPU the kernels run as per-shard calls.
-            tcfg = TrainConfig(quant=QuantConfig(name=quant), mode=mode,
+            tcfg = TrainConfig(policy=QuantPolicy.parse(quant), mode=mode,
                                use_kernels=False)
             step_fn, plan = make_train_step(model, mesh, tcfg)
             aparams = jax.eval_shape(model.init, jax.random.key(0))
@@ -230,7 +230,9 @@ def main(argv=None):
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None, choices=list(SHAPES))
     ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--quant", default="orq-9")
+    ap.add_argument("--quant", default="orq-9", metavar="SCHEME|POLICY",
+                    help="scheme name or QuantPolicy string (see "
+                         "repro.launch.train --help for the grammar)")
     ap.add_argument("--mode", default="fsdp")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--all", action="store_true",

@@ -1,10 +1,14 @@
 """Training launcher.
 
 Real execution runs on the host's devices (``--mesh host``); the production
-mesh is exercised via launch/dryrun.py. Example:
+mesh is exercised via launch/dryrun.py. Examples:
 
     PYTHONPATH=src python -m repro.launch.train --arch lm-100m --smoke \
         --steps 100 --quant orq-9 --mode replicated --batch 8 --seq 128
+
+    # mixed per-parameter-group policy: fp norms/biases, ORQ-9 elsewhere
+    PYTHONPATH=src python -m repro.launch.train --arch lm-100m --smoke \
+        --quant "norm|bias=fp,default=orq-9" --mode replicated
 """
 from __future__ import annotations
 
@@ -16,7 +20,7 @@ import jax
 
 from repro.checkpoint import save_checkpoint
 from repro.configs.base import get_config, get_smoke_config, list_archs
-from repro.core import QuantConfig
+from repro.core import QuantPolicy, all_methods
 from repro.data import SyntheticLM
 from repro.launch.mesh import make_host_mesh
 from repro.models import LM
@@ -34,7 +38,15 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=0.05)
-    ap.add_argument("--quant", default="fp")
+    # help text and validation are derived from the scheme registry, so a
+    # newly registered scheme is accepted (and advertised) automatically
+    ap.add_argument(
+        "--quant", default="fp", metavar="SCHEME|POLICY",
+        help="quantization scheme or per-parameter-group policy string. "
+             f"Schemes: {', '.join(all_methods())}. Policy grammar: "
+             "'pattern=scheme[,pattern=scheme...][,default=scheme]' with "
+             "regex patterns matched against parameter paths (first match "
+             'wins), e.g. "norm|bias=fp,embed=bingrad-b,default=orq-9".')
     ap.add_argument("--bucket", type=int, default=2048)
     ap.add_argument("--clip-c", type=float, default=None)
     ap.add_argument("--mode", default="replicated",
@@ -51,12 +63,17 @@ def main(argv=None):
     ap.add_argument("--metrics-out", default=None)
     args = ap.parse_args(argv)
 
+    try:
+        policy = QuantPolicy.parse(args.quant, bucket_size=args.bucket,
+                                   clip_c=args.clip_c)
+    except ValueError as e:
+        ap.error(str(e))
+
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
     model = LM(cfg)
     mesh = make_host_mesh(model=args.model_parallel)
     tcfg = TrainConfig(
-        quant=QuantConfig(name=args.quant, bucket_size=args.bucket,
-                          clip_c=args.clip_c),
+        policy=policy,
         mode=args.mode,
         fused_exchange=not args.per_leaf_exchange,
         exchange_chunk_elems=args.exchange_chunk)

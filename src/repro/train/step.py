@@ -15,10 +15,19 @@ Layout (ZeRO-3):
 paper-faithful Algorithm 2 loop used by the convergence benchmarks (with a
 1-device mesh it degenerates to the paper's single-machine experiments:
 the gradient is quantize->dequantized locally every step).
+
+Quantization is configured through ``TrainConfig.policy`` (a
+``repro.core.QuantPolicy`` or anything coercible to one): each leaf's
+scheme is resolved from its gather path, the replicated fused exchange
+partitions leaves into per-policy-group segments (O(#groups) collectives
+per step), and fsdp gathers quantize each leaf's backward with its
+resolved quantizer. ``TrainConfig.quant`` remains as the deprecated
+uniform-policy alias.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 import zlib
 from functools import partial
 from typing import Any, Dict, Optional, Tuple
@@ -29,7 +38,7 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.core import QuantConfig, comm
+from repro.core import QuantConfig, QuantPolicy, comm
 from repro.models.model import LM
 from repro.optim import optimizers as opt_lib
 from repro.optim.schedule import constant_lr
@@ -44,6 +53,11 @@ _FUSED_SALT = zlib.crc32(b"fused_exchange") & 0x7FFFFFFF
 
 @dataclasses.dataclass(frozen=True)
 class TrainConfig:
+    # ``policy`` is the primary quantization surface: a QuantPolicy (or
+    # anything QuantPolicy.coerce accepts — policy string, dict,
+    # QuantConfig). ``quant`` is the deprecated uniform-policy alias, kept
+    # for old call sites; it is ignored whenever ``policy`` is set.
+    policy: Optional[Any] = None
     quant: QuantConfig = QuantConfig(name="fp")
     mode: str = "fsdp"              # fsdp | replicated
     optimizer: str = "sgd"          # sgd | adamw  (paper: SGD+momentum 0.9)
@@ -57,6 +71,18 @@ class TrainConfig:
     exchange_chunk_elems: Optional[int] = None  # size cap per fused
                                                 # collective (memory knob)
     compute_dtype: Any = jnp.bfloat16
+
+    def resolved_policy(self) -> QuantPolicy:
+        """The effective QuantPolicy (``policy`` if set, else the uniform
+        policy over the deprecated ``quant`` alias)."""
+        if self.policy is None:
+            return QuantPolicy.uniform(self.quant)
+        if self.quant != QuantConfig():
+            warnings.warn(
+                "TrainConfig.quant is ignored when TrainConfig.policy is "
+                "set — fold its settings into the policy instead",
+                DeprecationWarning, stacklevel=2)
+        return QuantPolicy.coerce(self.policy)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -185,11 +211,24 @@ def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
         aparams = jax.eval_shape(model.init, jax.random.key(0))
     plan = plan_sharding(model, aparams, mesh)
     optimizer = _make_optimizer(tcfg)
-    qz = tcfg.quant.to_quantizer()
-    engine = comm.GradientExchange(
-        qz, dp_axes, server_requant=tcfg.quant.server_requant,
+    policy = tcfg.resolved_policy()
+    # partitioned fused engine: leaves grouped by resolved quantizer into
+    # contiguous segments, one fused exchange per policy group (a uniform
+    # policy degenerates to the single-group engine, bit-identical to the
+    # pre-policy fused exchange)
+    pex = comm.PartitionedExchange.build(
+        policy, aparams, dp_axes, paths=plan.paths,
         use_kernels=tcfg.use_kernels,
         max_chunk_elems=tcfg.exchange_chunk_elems)
+
+    leaf_qz_cache: Dict[QuantConfig, Any] = {}
+
+    def resolve_leaf(path):
+        """(QuantConfig, Quantizer) for one leaf path under the policy."""
+        cfg = policy.resolve(path)
+        if cfg not in leaf_qz_cache:
+            leaf_qz_cache[cfg] = cfg.to_quantizer()
+        return cfg, leaf_qz_cache[cfg]
 
     def make_gather_fn(step_key):
         if tcfg.mode == "replicated":
@@ -200,14 +239,18 @@ def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
         def gather(path, leaf, salt):
             dim = plan.gather_dims.get(path)
             if path not in cache:
+                # each leaf's backward quantizes with its POLICY-resolved
+                # quantizer (mixed-precision gradient compression in fsdp
+                # mode rides the per-leaf gather)
+                cfg_l, qz_l = resolve_leaf(path)
                 if dim is None:
                     cache[path] = comm.make_replicated_gather(
-                        qz, dp_axes, compute_dtype=tcfg.compute_dtype,
-                        server_requant=tcfg.quant.server_requant,
+                        qz_l, dp_axes, compute_dtype=tcfg.compute_dtype,
+                        server_requant=cfg_l.server_requant,
                         use_kernels=tcfg.use_kernels)
                 else:
                     cache[path] = comm.make_fsdp_gather(
-                        qz, dp_axes, dim=dim,
+                        qz_l, dp_axes, dim=dim,
                         tp_dim=plan.tp_dims.get(path),
                         compute_dtype=tcfg.compute_dtype,
                         use_kernels=tcfg.use_kernels)
@@ -232,7 +275,7 @@ def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
 
         new_ef = state.ef
         use_ef = (tcfg.error_feedback and state.ef is not None
-                  and not qz.is_identity)
+                  and not pex.is_identity)
         if use_ef:
             # error feedback: compensate last step's local quantization
             # error before quantizing (Karimireddy et al. line of work,
@@ -242,37 +285,42 @@ def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
 
         if tcfg.mode == "replicated" and dp_axes:
             if tcfg.fused_exchange:
-                # fused Algorithm 2: flatten the whole gradient pytree into
-                # one contiguous buffer and run a SINGLE quantized
-                # all-reduce over it (O(1) collectives per step instead of
-                # O(num_leaves) — see core/comm/exchange.py)
-                layout = comm.GradLayout.from_tree(grads)
+                # partitioned fused Algorithm 2: leaves grouped by resolved
+                # quantizer into contiguous segments, one fused quantized
+                # all-reduce per policy group — O(#groups) collectives per
+                # step, never O(#leaves) (see core/comm/exchange.py)
                 k = jax.random.fold_in(step_key, _FUSED_SALT)
-                flat = layout.flatten(grads)
+                bufs = pex.layout.flatten_groups(grads)
                 if use_ef:
-                    local = engine.local_qdq_flat(flat, k)
-                    new_ef = layout.unflatten(flat - local,
-                                              restore_dtype=False)
-                grads = layout.unflatten(engine.exchange_flat(flat, k))
+                    local = pex.local_qdq_parts(bufs, k)
+                    new_ef = pex.layout.unflatten_groups(
+                        [f - l for f, l in zip(bufs, local)],
+                        restore_dtype=False)
+                grads = pex.layout.unflatten_groups(
+                    pex.exchange_parts(bufs, k))
             else:
                 # legacy per-leaf quantized all-reduce of local grads
                 def exchange(path, g):
+                    cfg_l, qz_l = resolve_leaf(path)
                     flat = g.astype(jnp.float32).reshape(-1)
                     k = jax.random.fold_in(
                         step_key, zlib.crc32(path.encode()) & 0x7FFFFFFF)
                     out = comm.quantized_all_reduce_mean(
-                        flat, qz, k, dp_axes,
-                        server_requant=tcfg.quant.server_requant,
+                        flat, qz_l, k, dp_axes,
+                        server_requant=cfg_l.server_requant,
                         use_kernels=tcfg.use_kernels)
                     return out.reshape(g.shape).astype(g.dtype)
 
                 if use_ef:
                     def residual(path, g):
+                        _, qz_l = resolve_leaf(path)
+                        if qz_l.is_identity:
+                            return jnp.zeros(g.shape, jnp.float32)
                         flat = g.astype(jnp.float32).reshape(-1)
                         k = jax.random.fold_in(
                             step_key, zlib.crc32(path.encode()) & 0x7FFFFFFF)
                         local = comm.local_qdq_comm_layout(
-                            flat, qz, k, dp_axes,
+                            flat, qz_l, k, dp_axes,
                             use_kernels=tcfg.use_kernels)
                         return (flat - local).reshape(g.shape)
 
@@ -282,21 +330,24 @@ def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
                     exchange, model.param_paths(state.params), grads)
         elif tcfg.mode == "replicated" and not dp_axes:
             # single-machine Algorithm 2: quantize->dequantize locally
-            if not qz.is_identity and tcfg.fused_exchange:
-                layout = comm.GradLayout.from_tree(grads)
+            if not pex.is_identity and tcfg.fused_exchange:
                 k = jax.random.fold_in(step_key, _FUSED_SALT)
-                flat = layout.flatten(grads)
-                qflat = engine.qdq_local_flat(flat, k)
+                bufs = pex.layout.flatten_groups(grads)
+                qbufs = pex.qdq_local_parts(bufs, k)
                 if use_ef:
-                    new_ef = layout.unflatten(flat - qflat,
-                                              restore_dtype=False)
-                grads = layout.unflatten(qflat)
-            elif not qz.is_identity:
+                    new_ef = pex.layout.unflatten_groups(
+                        [f - q for f, q in zip(bufs, qbufs)],
+                        restore_dtype=False)
+                grads = pex.layout.unflatten_groups(qbufs)
+            elif not pex.is_identity:
                 def qdq(path, g):
+                    _, qz_l = resolve_leaf(path)
+                    if qz_l.is_identity:
+                        return g
                     k = jax.random.fold_in(
                         step_key, zlib.crc32(path.encode()) & 0x7FFFFFFF)
-                    return qz.qdq(g.astype(jnp.float32).reshape(-1), k
-                                  ).reshape(g.shape).astype(g.dtype)
+                    return qz_l.qdq(g.astype(jnp.float32).reshape(-1), k
+                                    ).reshape(g.shape).astype(g.dtype)
 
                 quantized = jax.tree_util.tree_map(
                     qdq, model.param_paths(state.params), grads)

@@ -1,0 +1,80 @@
+"""σ-clip mask-consistency regressions (no hypothesis dependency — these
+must run even without the optional test extras).
+
+``Quantizer.assign`` used to rebuild an all-True mask for its σ-clip, so a
+ragged bucket's zero padding deflated the σ estimate relative to ``fit``:
+the rounding saw different clipped values than the levels were fitted on.
+The real bucket mask is now threaded through both the quantizer and the
+comm wire path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import buckets as B
+from repro.core import clipping, make_quantizer
+from repro.core.comm import wire
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _ragged_outliers(n=40):
+    """Heavy-tailed ragged data where σ-clipping is actually engaged, so
+    the padded-vs-real σ estimates produce different indices."""
+    base = jax.random.laplace(jax.random.key(3), (n,))
+    return base.at[::5].mul(6.0)
+
+
+@pytest.mark.parametrize("name", ["orq-5", "terngrad", "qsgd-5"])
+def test_clip_ragged_bucket_fit_assign_consistent(name):
+    """quantize on a ragged flat with clip_c set must equal
+    clip-once-then-quantize-unclipped, level for level, index for index."""
+    d = 64                           # one ragged bucket, 24 padded slots
+    g = _ragged_outliers()
+    qz = make_quantizer(name, bucket_size=d, clip_c=1.5)
+    q = qz.quantize(g, jax.random.key(7))
+
+    qz0 = make_quantizer(name, bucket_size=d)      # no clip
+    bkt, mask = B.to_buckets(g, d)
+    clipped = clipping.sigma_clip(bkt, mask, 1.5)
+    lv = qz0.fit(clipped, mask)
+    idx = jnp.where(mask, qz0.assign(clipped, lv, jax.random.key(7)), 0)
+    np.testing.assert_array_equal(np.asarray(q.levels), np.asarray(lv))
+    np.testing.assert_array_equal(np.asarray(q.idx), np.asarray(idx))
+
+    # the discriminator: the legacy all-True-mask σ-clip (mask=None) gives
+    # DIFFERENT indices on this data — i.e. this test fails pre-fix
+    legacy = jnp.where(mask, qz.assign(bkt, lv, jax.random.key(7)), 0)
+    assert int((np.asarray(legacy) != np.asarray(q.idx)).sum()) > 0
+
+
+def test_clip_ragged_bucket_wire_path_consistent():
+    """The comm wire path (wire.encode, used by both collective phases and
+    the fused engines) threads the same mask through its σ-clip."""
+    d = 64
+    g = _ragged_outliers()
+    qz = make_quantizer("orq-5", bucket_size=d, clip_c=1.5)
+    bkt, mask = B.to_buckets(g, d)
+    words, lv = wire.encode(qz, bkt, mask, jax.random.key(9),
+                            use_kernels=False)
+
+    qz0 = make_quantizer("orq-5", bucket_size=d)
+    clipped = clipping.sigma_clip(bkt, mask, 1.5)
+    words0, lv0 = wire.encode(qz0, clipped, mask, jax.random.key(9),
+                              use_kernels=False)
+    np.testing.assert_array_equal(np.asarray(lv), np.asarray(lv0))
+    np.testing.assert_array_equal(np.asarray(words), np.asarray(words0))
+
+
+def test_clip_full_bucket_unchanged_by_fix():
+    """Bucket-aligned flats (no padding) are unaffected by the mask
+    threading: mask=None legacy behaviour == real-mask behaviour."""
+    d = 64
+    g = jax.random.laplace(jax.random.key(14), (2 * d,)) * 0.01
+    qz = make_quantizer("orq-5", bucket_size=d, clip_c=2.0)
+    bkt, mask = B.to_buckets(g, d)
+    lv = qz.fit(bkt, mask)
+    with_mask = qz.assign(bkt, lv, jax.random.key(3), mask=mask)
+    legacy = qz.assign(bkt, lv, jax.random.key(3))
+    np.testing.assert_array_equal(np.asarray(with_mask), np.asarray(legacy))

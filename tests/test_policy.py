@@ -1,0 +1,485 @@
+"""QuantPolicy API: parsing/resolution, the pluggable scheme registry, the
+partitioned per-group layout, and the engine-level guarantees —
+
+  * a UNIFORM policy through the partitioned engine must be bit-identical
+    to the single-engine fused exchange (same buffers, same keys, same
+    wire layout), including the error-feedback residuals, on an 8-device
+    mesh (subprocess, forced host devices — same pattern as
+    test_fused_exchange.py);
+  * a mixed ``norm=fp,default=orq-9`` policy costs fewer wire bytes than
+    uniform fp and issues O(#groups) collective launches in the train
+    step's jaxpr, never O(#leaves).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (QuantConfig, QuantPolicy, all_methods, comm,
+                        make_quantizer, register_scheme, unregister_scheme)
+from repro.core.quantizers import Quantizer
+
+jax.config.update("jax_platform_name", "cpu")
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_devices(body: str, n_devices: int = 8) -> str:
+    prog = textwrap.dedent(body)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", prog], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+# ---------------------------------------------------------------------------
+# resolution / parsing
+# ---------------------------------------------------------------------------
+
+class TestResolution:
+    def test_rule_order_first_match_wins(self):
+        p = QuantPolicy.parse("norm=terngrad, norm|bias=fp, default=orq-9")
+        assert p.resolve("final_norm").name == "terngrad"   # rule 1 first
+        assert p.resolve("g0/pos0['bias']").name == "fp"    # rule 2
+        assert p.resolve("g0/pos0['attn']['wk']").name == "orq-9"
+
+    def test_default_fallback(self):
+        p = QuantPolicy.parse("embed=bingrad-b, default=orq-9")
+        assert p.resolve("embed").name == "bingrad-b"
+        assert p.resolve("lm_head").name == "orq-9"
+        # no explicit default -> fp
+        p2 = QuantPolicy.parse("embed=bingrad-b")
+        assert p2.resolve("lm_head").name == "fp"
+
+    def test_regex_patterns(self):
+        p = QuantPolicy.parse(r"norm\d+=fp, default=orq-9")
+        assert p.resolve("g0/pos0['norm1']['scale']").name == "fp"
+        assert p.resolve("final_norm").name == "orq-9"
+
+    def test_regex_pattern_with_comma(self):
+        # commas inside a regex (quantifiers, char classes) must survive
+        # the entry split
+        p = QuantPolicy.parse(r"wo{1,2}=terngrad, g[0,2]/=fp, default=orq-9")
+        assert p.rules[0].pattern == r"wo{1,2}"
+        assert p.resolve("g1/pos0['ffn']['woo']").name == "terngrad"
+        assert p.resolve("g2/pos0['attn']['wq']").name == "fp"
+        assert p.resolve("g1/pos0['attn']['wq']").name == "orq-9"
+        with pytest.raises(ValueError, match="missing"):
+            QuantPolicy.parse("norm=fp, danglingtail")
+
+    def test_regex_pattern_with_lookahead_equals(self):
+        # '=' inside a lookaround survives: entries split on the LAST '='
+        p = QuantPolicy.parse(r"norm(?=\d)=fp, default=orq-9")
+        assert p.rules[0].pattern == r"norm(?=\d)"
+        assert p.resolve("g0/pos0['norm1']['scale']").name == "fp"
+        assert p.resolve("final_norm").name == "orq-9"
+        # ... and combined with an in-pattern comma: the entry only closes
+        # once the text after the last '=' is a bare scheme token
+        q = QuantPolicy.parse(r"w(?=o){1,2}=terngrad, default=orq-9")
+        assert q.rules[0].pattern == r"w(?=o){1,2}"
+        assert q.resolve("g0['ffn']['woo']").name == "terngrad"
+
+    def test_dict_unknown_field_clean_error(self):
+        with pytest.raises(ValueError, match="unknown QuantConfig field"):
+            QuantPolicy.parse('{"embed": {"nam": "orq-9"}}')
+
+    def test_dict_bad_value_type_clean_error(self):
+        # launchers catch ValueError, so bad JSON values must not escape
+        # as TypeError tracebacks
+        with pytest.raises(ValueError, match="bad policy value"):
+            QuantPolicy.parse('{"norm": 3}')
+
+    def test_unmatched_rules_reported(self):
+        p = QuantPolicy.parse("nrom=fp, bias=fp, default=orq-9")  # typo
+        paths = ["final_norm", "g0['attn']['wq']", "g0['bias']"]
+        assert p.unmatched_rules(paths) == ("nrom",)
+        assert QuantPolicy.parse("norm=fp").unmatched_rules(paths) == ()
+
+    def test_uniform_shorthand_and_backcompat(self):
+        for spec in ("orq-9", "  ORQ_9 "):
+            p = QuantPolicy.parse(spec)
+            assert p.is_uniform and p.resolve("anything").name == "orq-9"
+        cfg = QuantConfig(name="terngrad", bucket_size=128)
+        u = QuantPolicy.uniform(cfg)
+        assert u.is_uniform and u.resolve("x") is cfg
+        assert QuantPolicy.uniform("fp").default.name == "fp"
+
+    def test_defaults_thread_into_rules(self):
+        p = QuantPolicy.parse("norm=fp, default=orq-9", bucket_size=512,
+                              clip_c=2.5)
+        assert p.default.bucket_size == 512 and p.default.clip_c == 2.5
+        assert p.rules[0].cfg.bucket_size == 512
+
+    def test_dict_and_json_forms(self):
+        d = QuantPolicy.from_dict({"norm|bias": "fp", "default": "orq-9"})
+        j = QuantPolicy.parse('{"norm|bias": "fp", "default": "orq-9"}')
+        s = QuantPolicy.parse("norm|bias=fp, default=orq-9")
+        assert d == j == s
+        # dict values may be QuantConfig field dicts
+        f = QuantPolicy.from_dict(
+            {"embed": {"name": "qsgd-5", "bucket_size": 64}})
+        assert f.rules[0].cfg == QuantConfig(name="qsgd-5", bucket_size=64)
+
+    def test_trainconfig_quant_policy_conflict_warns(self):
+        import warnings as W
+
+        from repro.train import TrainConfig
+
+        with W.catch_warnings():
+            W.simplefilter("error")
+            # alias alone: no warning
+            TrainConfig(quant=QuantConfig(name="orq-9")).resolved_policy()
+            # policy alone: no warning
+            TrainConfig(policy="orq-9").resolved_policy()
+        with pytest.warns(DeprecationWarning, match="ignored"):
+            TrainConfig(policy="orq-9",
+                        quant=QuantConfig(name="terngrad")).resolved_policy()
+
+    def test_coerce(self):
+        p = QuantPolicy.parse("norm=fp, default=orq-9")
+        assert QuantPolicy.coerce(p) is p
+        assert QuantPolicy.coerce("orq-9").is_uniform
+        assert QuantPolicy.coerce(QuantConfig(name="fp")).is_uniform
+        assert not QuantPolicy.coerce({"norm": "fp"}).is_uniform
+        with pytest.raises(TypeError):
+            QuantPolicy.coerce(42)
+
+    def test_bad_pattern_errors(self):
+        with pytest.raises(ValueError, match="bad policy pattern"):
+            QuantPolicy.parse("no[rm=fp, default=orq-9")
+        with pytest.raises(ValueError, match="grammar"):
+            QuantPolicy.parse("no[rm=fp")
+
+    def test_bad_scheme_names_valid_schemes(self):
+        with pytest.raises(ValueError) as e:
+            QuantPolicy.parse("norm=fp, default=bogus-3")
+        msg = str(e.value)
+        assert "bogus-3" in msg and "orq-9" in msg and "grammar" in msg
+
+    def test_empty_pattern_rejected(self):
+        # re.search("") matches everything — a stray '=' must not
+        # silently capture the whole model
+        for spec in ("=fp,default=orq-9", " =fp"):
+            with pytest.raises(ValueError, match="empty policy pattern"):
+                QuantPolicy.parse(spec)
+
+    def test_bad_json(self):
+        with pytest.raises(ValueError, match="bad policy JSON"):
+            QuantPolicy.parse('{"norm": ')
+
+    def test_duplicate_default_rejected(self):
+        with pytest.raises(ValueError, match="duplicate"):
+            QuantPolicy.parse("default=fp, default=orq-9")
+
+    def test_describe_round_trips(self):
+        p = QuantPolicy.parse("norm|bias=fp,embed=bingrad-b,default=orq-9")
+        assert QuantPolicy.parse(p.describe()) == p
+
+
+# ---------------------------------------------------------------------------
+# scheme registry
+# ---------------------------------------------------------------------------
+
+class TestRegistry:
+    def test_all_methods_derived_not_hand_listed(self):
+        try:
+            register_scheme(
+                "myscheme",
+                lambda suffix, **kw: Quantizer(
+                    method="qsgd", num_levels=int(suffix or 5), **kw),
+                variants=("myscheme-5",))
+            assert "myscheme-5" in all_methods()
+            qz = make_quantizer("myscheme-7", bucket_size=64)
+            assert qz.num_levels == 7 and qz.bucket_size == 64
+            # policies resolve registered schemes too
+            p = QuantPolicy.parse("norm=myscheme-5, default=fp")
+            assert p.resolve("final_norm").name == "myscheme-5"
+        finally:
+            unregister_scheme("myscheme")
+        assert "myscheme-5" not in all_methods()
+        with pytest.raises(ValueError, match="valid schemes"):
+            make_quantizer("myscheme-5")
+
+    def test_live_ALL_METHODS_attribute(self):
+        import repro.core as core
+        assert core.ALL_METHODS == all_methods()
+
+    def test_bad_suffix_errors(self):
+        with pytest.raises(ValueError):
+            make_quantizer("bingrad-7")
+        with pytest.raises(ValueError):
+            make_quantizer("fp-3")
+
+    def test_unparseable_variant_rejected_at_register_time(self):
+        # an advertised variant that make_quantizer could never parse back
+        # must be rejected up front, not surface in help/error text
+        build = lambda suffix, **kw: Quantizer(method="qsgd", **kw)
+        for bad in ("myscheme-fast", "otherscheme-5"):
+            with pytest.raises(ValueError, match="parsed back"):
+                register_scheme("myscheme", build, variants=(bad,))
+        assert "myscheme" not in all_methods()
+
+
+# ---------------------------------------------------------------------------
+# partitioned layout
+# ---------------------------------------------------------------------------
+
+def _tree():
+    k = jax.random.key(0)
+    k1, k2, k3, k4 = jax.random.split(k, 4)
+    return {
+        "embed": jax.random.normal(k1, (16, 8)),
+        "norm": jax.random.normal(k2, (40,)).astype(jnp.bfloat16),
+        "w": jax.random.normal(k3, (33, 7)),
+        "bias": jax.random.normal(k4, ()),
+    }
+
+
+MIXED = "norm|bias=fp, embed=bingrad-b, default=orq-9"
+
+
+class TestPolicyLayout:
+    def test_grouping_and_offsets(self):
+        tree = _tree()
+        pl = comm.PolicyLayout.from_tree(tree, QuantPolicy.parse(MIXED))
+        # canonical leaf order: bias, embed, norm, w
+        names = [g.cfg.name for g in pl.groups]
+        assert sorted(names) == ["bingrad-b", "fp", "orq-9"]
+        by_name = {g.cfg.name: g for g in pl.groups}
+        assert by_name["fp"].size == 1 + 40          # bias + norm
+        assert by_name["bingrad-b"].size == 16 * 8
+        assert by_name["orq-9"].size == 33 * 7
+        # within-group offsets are contiguous
+        fp_slots = [pl.slots[i] for i in by_name["fp"].leaf_ids]
+        assert [s.offset for s in fp_slots] == [0, 1]
+
+    def test_roundtrip_mixed_dtypes(self):
+        tree = _tree()
+        pl = comm.PolicyLayout.from_tree(tree, QuantPolicy.parse(MIXED))
+        back = pl.unflatten_groups(pl.flatten_groups(tree))
+        for want, got in zip(jax.tree_util.tree_leaves(tree),
+                             jax.tree_util.tree_leaves(back)):
+            assert got.dtype == want.dtype and got.shape == want.shape
+            np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                          np.asarray(want, np.float32))
+        res = pl.unflatten_groups(pl.flatten_groups(tree),
+                                  restore_dtype=False)
+        assert all(x.dtype == jnp.float32
+                   for x in jax.tree_util.tree_leaves(res))
+
+    def test_uniform_layout_equals_gradlayout(self):
+        tree = _tree()
+        pl = comm.PolicyLayout.from_tree(tree, QuantPolicy.uniform("orq-9"))
+        gl = comm.GradLayout.from_tree(tree)
+        assert len(pl.groups) == 1 and pl.groups[0].size == gl.size
+        assert [(s.path, s.offset, s.size) for s in pl.slots] == \
+               [(s.path, s.offset, s.size) for s in gl.slots]
+        (buf,) = pl.flatten_groups(tree)
+        np.testing.assert_array_equal(np.asarray(buf),
+                                      np.asarray(gl.flatten(tree)))
+
+    def test_dead_rule_warns_at_layout_build(self):
+        tree = {"a": jnp.zeros(3), "b": jnp.zeros(4)}
+        with pytest.warns(UserWarning, match="matched no parameter leaf"):
+            comm.PolicyLayout.from_tree(
+                tree, QuantPolicy.parse("nosuchleaf=fp, default=orq-9"))
+
+    def test_paths_override(self):
+        tree = {"a": jnp.zeros(3), "b": jnp.zeros(4)}
+        paths = {"a": "final_norm", "b": "g0/attn/wq"}
+        pl = comm.PolicyLayout.from_tree(
+            tree, QuantPolicy.parse("norm=fp, default=orq-9"), paths=paths)
+        assert [g.cfg.name for g in pl.groups] == ["fp", "orq-9"]
+        assert pl.slots[0].path == "final_norm"
+
+    def test_policy_stats_mixed_beats_fp(self):
+        # acceptance: mixed policy costs fewer wire bytes than uniform fp
+        path_sizes = [("final_norm", 512), ("embed", 2 ** 16),
+                      ("g0/attn/wq", 2 ** 18), ("g0/norm1", 512)]
+        n = sum(s for _, s in path_sizes)
+        mixed = QuantPolicy.parse("norm=fp, default=orq-9", bucket_size=512)
+        launches, bytes_, labels = comm.policy_stats(mixed, path_sizes, 8)
+        _, fp_bytes = comm.fused_stats(make_quantizer("fp"),
+                                       [s for _, s in path_sizes], 8)
+        assert len(labels) == 2
+        assert launches == 1 + 4       # fp psum + quantized 2×a2a + 2×ag
+        assert bytes_ < fp_bytes
+        assert fp_bytes == 4.0 * n
+
+
+# ---------------------------------------------------------------------------
+# engine equivalence on an 8-device mesh
+# ---------------------------------------------------------------------------
+
+COMMON = """
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core import QuantConfig, QuantPolicy, comm, make_quantizer
+from repro.utils.compat import shard_map
+
+mesh = jax.make_mesh((8,), ("data",))
+DP = ("data",)
+L = 8
+
+def shmap(f, in_specs, out_specs):
+    return jax.jit(shard_map(f, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, axis_names={"data"}, check_vma=False))
+
+def ragged_tree(key, scale=0.1):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "w": jax.random.laplace(k1, (L, 33, 7)) * scale,
+        "norm": jax.random.laplace(k2, (L, 40)) * scale,
+        "m": {"embed": jax.random.laplace(k3, (L, 3, 5, 2)) * scale,
+              "bias": jax.random.laplace(k4, (L, 1)) * scale},
+    }
+
+def worker_slice(tree):
+    return jax.tree_util.tree_map(lambda x: x[0], tree)
+
+IN = jax.tree_util.tree_map(lambda x: P("data", *([None] * (x.ndim - 1))),
+                            {"w": jnp.zeros((L, 1, 1)),
+                             "norm": jnp.zeros((L, 1)),
+                             "m": {"embed": jnp.zeros((L, 1, 1, 1)),
+                                   "bias": jnp.zeros((L, 1))}})
+"""
+
+
+def test_uniform_partitioned_bitidentical_to_fused_8dev():
+    """Uniform policy through PartitionedExchange == the PR-1 single-engine
+    fused exchange, bit for bit: exchanged buffers AND error-feedback
+    residuals (same keys, same wire layout), on an 8-device mesh."""
+    run_devices(COMMON + """
+tree = ragged_tree(jax.random.key(0))
+for name in ("orq-9", "terngrad", "fp"):
+    qz = make_quantizer(name, bucket_size=64)
+    cfg = QuantConfig(name=name, bucket_size=64)
+    eng = comm.GradientExchange(qz, DP)
+    pex = comm.PartitionedExchange.build(QuantPolicy.uniform(cfg),
+                                         worker_slice(tree), DP)
+    assert len(pex.engines) == 1
+
+    def f(t):
+        t = worker_slice(t)
+        layout = comm.GradLayout.from_tree(t)
+        flat = layout.flatten(t)
+        key = jax.random.key(1)
+        ref = eng.exchange_flat(flat, key)
+        (buf,) = pex.layout.flatten_groups(t)
+        (got,) = pex.exchange_parts((buf,), key)
+        outs = [flat[None], buf[None], ref[None], got[None]]
+        if name != "fp":
+            ref_local = eng.local_qdq_flat(flat, key)
+            (got_local,) = pex.local_qdq_parts((buf,), key)
+            outs += [ref_local[None], got_local[None]]
+        return tuple(outs)
+
+    n_out = 4 if name == "fp" else 6
+    spec = tuple([P("data", None)] * n_out)
+    outs = shmap(f, (IN,), spec)(tree)
+    outs = [np.asarray(o) for o in outs]
+    np.testing.assert_array_equal(outs[0], outs[1])   # identical buffers
+    np.testing.assert_array_equal(outs[2], outs[3])   # identical exchange
+    if name != "fp":
+        # identical EF residual stream: flat - local must match bit for bit
+        np.testing.assert_array_equal(outs[4], outs[5])
+        np.testing.assert_array_equal(outs[0] - outs[4],
+                                      outs[1] - outs[5])
+    print(name, "UNIFORM-BITIDENTICAL OK")
+""")
+
+
+def test_mixed_policy_partitioned_8dev():
+    """Mixed norm|bias=fp policy: fp group is the exact across-worker mean,
+    quantized group is within quantization variance, every worker
+    reconstructs identical gradients, and EF residuals are zero exactly on
+    the fp leaves."""
+    run_devices(COMMON + """
+tree = ragged_tree(jax.random.key(2))
+policy = QuantPolicy.parse("norm|bias=fp, default=orq-9", bucket_size=64)
+pex = comm.PartitionedExchange.build(policy, worker_slice(tree), DP)
+assert len(pex.engines) == 2
+true_mean = jax.tree_util.tree_map(lambda x: np.asarray(x.mean(0)), tree)
+
+def f(t):
+    t = worker_slice(t)
+    key = jax.random.key(3)
+    bufs = pex.layout.flatten_groups(t)
+    mean = pex.layout.unflatten_groups(pex.exchange_parts(bufs, key))
+    local = pex.local_qdq_parts(bufs, key)
+    resid = pex.layout.unflatten_groups(
+        [f_ - l_ for f_, l_ in zip(bufs, local)], restore_dtype=False)
+    add = jax.tree_util.tree_map(lambda a: a[None], mean)
+    addr = jax.tree_util.tree_map(lambda a: a[None], resid)
+    return add, addr
+
+mean, resid = shmap(f, (IN,), (IN, IN))(tree)
+flat_mean = {k: np.asarray(v) for k, v in [
+    ("w", mean["w"]), ("norm", mean["norm"]),
+    ("embed", mean["m"]["embed"]), ("bias", mean["m"]["bias"])]}
+# fp leaves: exact mean; quantized leaves: within variance
+np.testing.assert_allclose(flat_mean["norm"][0], true_mean["norm"],
+                           rtol=1e-6, atol=1e-7)
+np.testing.assert_allclose(flat_mean["bias"][0], true_mean["m"]["bias"],
+                           rtol=1e-6, atol=1e-7)
+assert np.abs(flat_mean["w"][0] - true_mean["w"]).mean() < 0.05
+# EF residuals: identically zero on fp leaves, nonzero on quantized ones
+assert np.abs(np.asarray(resid["norm"])).max() == 0.0
+assert np.abs(np.asarray(resid["m"]["bias"])).max() == 0.0
+assert np.abs(np.asarray(resid["w"])).max() > 0.0
+print("MIXED OK")
+""")
+
+
+# ---------------------------------------------------------------------------
+# train step: O(#groups) collectives, never O(#leaves)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_train_step_collectives_o_groups():
+    """Acceptance: a mixed norm=fp,default=orq-9 policy on lm-100m keeps
+    the jaxpr at O(#groups) collective launches (2 all_to_all + 2
+    all_gather from the single quantized group), never O(#leaves), and
+    uniform-policy TrainConfig.policy matches the deprecated quant alias
+    count for count."""
+    from repro.configs.base import get_smoke_config
+    from repro.data import SyntheticLM
+    from repro.models import LM
+    from repro.optim.schedule import constant_lr
+    from repro.train import TrainConfig, make_train_step
+    from repro.train.step import init_state
+
+    cfg = get_smoke_config("lm-100m")
+    model = LM(cfg)
+    mesh = jax.make_mesh((1,), ("data",))
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=16, batch_size=2,
+                       seed=0)
+    n_leaves = len(jax.tree_util.tree_leaves(
+        jax.eval_shape(model.init, jax.random.key(0))))
+    assert n_leaves >= 10
+
+    def counts(tcfg):
+        state = init_state(model, mesh, tcfg, jax.random.key(0))
+        step_fn, _ = make_train_step(model, mesh, tcfg, constant_lr(0.05))
+        jx = str(jax.make_jaxpr(step_fn)(state, data.batch(0),
+                                         jax.random.key(1)))
+        return jx.count("all_to_all["), jx.count("all_gather[")
+
+    mixed = counts(TrainConfig(policy="norm=fp,default=orq-9",
+                               mode="replicated"))
+    assert mixed == (2, 2), mixed       # one quantized group, fp is a psum
+
+    uniform_policy = counts(TrainConfig(policy="orq-9", mode="replicated"))
+    uniform_alias = counts(TrainConfig(
+        quant=QuantConfig(name="orq-9", bucket_size=2048),
+        mode="replicated"))
+    assert uniform_policy == uniform_alias == (2, 2)

@@ -135,6 +135,8 @@ class TestClipping:
         b = make_quantizer("orq-5", clip_c=2.5).qdq(g, jax.random.key(0))
         assert a.shape == b.shape
         assert not bool(jnp.allclose(a, b))
+    # ragged-bucket σ-clip regression tests live in tests/test_clipping.py
+    # (they must run even without the optional hypothesis extra)
 
 
 class TestWire:
