@@ -10,6 +10,10 @@ issues O(1) collectives regardless of leaf count — see
 ``repro/core/comm/exchange.py``); and the partitioned per-policy-group
 exchange (``QuantPolicy``): launches + wire bytes for the recommended
 mixed recipe (fp norms/biases, quantized matmuls) vs uniform fp / orq-9.
+The ``fsdp_*`` rows report the fused ZeRO-3 exchange
+(``core/comm/fsdp_exchange.py``): one quantized reduce-scatter per policy
+group vs the per-leaf gather backward, with the sharded/replicated split
+taken from the train step's own ``plan_sharding_shapes``.
 
 Runnable standalone for CI smoke: ``PYTHONPATH=src:. python
 benchmarks/comm_cost.py --dry`` (reduced architecture set, prints the same
@@ -37,14 +41,46 @@ METHODS = ["fp", "signsgd", "bingrad-b", "terngrad", "orq-3", "qsgd-5",
 WORKERS = 4     # the paper's ImageNet runs use 4 workers
 
 
-def _leaf_path_sizes(cfg):
-    """[(gather-path, size), ...] — the strings policies resolve against."""
+def _leaf_traces(cfg):
+    """(model, abstract shapes, [(gather-path, size), ...]) — ONE abstract
+    init trace per arch, shared by every accounting row."""
     model = LM(cfg)
     shapes = jax.eval_shape(model.init, jax.random.key(0))
     paths = jax.tree_util.tree_leaves(model.param_paths(shapes))
     sizes = [int(np.prod(x.shape))
              for x in jax.tree_util.tree_leaves(shapes)]
-    return list(zip(paths, sizes))
+    return model, shapes, list(zip(paths, sizes))
+
+
+def fsdp_policy_rows(emit, model, shapes, path_sizes, tag: str):
+    """Fused fsdp (ZeRO-3) exchange for the mixed recipe: O(#groups)
+    launches + reduce-scatter wire bytes vs the per-leaf gather backward
+    (one exchange per leaf). Sharded-vs-replicated split comes from the
+    same planner the train step uses (``plan_sharding_shapes``)."""
+    from repro.train.step import plan_sharding_shapes
+    plan = plan_sharding_shapes(model, shapes, dp_axes=("data",),
+                                axis_sizes={"data": WORKERS, "model": 1})
+    sharded = {p for p, d in plan.full_shard_dims().items() if d is not None}
+    policy = QuantPolicy.parse(MIXED_POLICY, bucket_size=512)
+    launches, bytes_, labels = comm.policy_stats(
+        policy, path_sizes, WORKERS, sharded_paths=sharded)
+    # per-leaf fsdp: every leaf pays its own exchange (RS if sharded,
+    # full Algorithm 2 all-reduce otherwise)
+    pl_launches, pl_bytes = 0, 0.0
+    for path, size in path_sizes:
+        l, b, _ = comm.policy_stats(policy, [(path, size)], WORKERS,
+                                    sharded_paths=sharded)
+        pl_launches += l
+        pl_bytes += b
+    emit(csv_row(
+        f"table1_comm/fsdp_{tag}", 0.0,
+        f"policy={MIXED_POLICY.replace(',', ' ')};"
+        f"leaves={len(path_sizes)};sharded_leaves={len(sharded)};"
+        f"groups={len(labels)};launches_fused={launches};"
+        f"launches_perleaf={pl_launches};"
+        f"wire_fused={bytes_/2**20:.2f}MiB;"
+        f"wire_perleaf={pl_bytes/2**20:.2f}MiB;"
+        f"wire_saved_pct={100*(1-bytes_/pl_bytes):.1f}"))
 
 
 def policy_vs_uniform(emit, path_sizes, tag: str):
@@ -103,17 +139,19 @@ def run(emit, dry: bool = False):
                      f"info_x{info_ratio:.1f};packed_x{n*4/packed:.1f}"))
     # fused vs per-leaf exchange cost + mixed-policy partitioned cost
     if dry:
-        ps = _leaf_path_sizes(get_smoke_config("lm-100m"))
+        model, shapes, ps = _leaf_traces(get_smoke_config("lm-100m"))
         fused_vs_per_leaf(emit, [s for _, s in ps], "lm-100m-smoke")
         policy_vs_uniform(emit, ps, "lm-100m-smoke")
+        fsdp_policy_rows(emit, model, shapes, ps, "lm-100m-smoke")
         return
     # assigned archs: fused-vs-per-leaf cost + one full exchange per method
     # (one abstract init trace per arch, reused for both)
     for arch in ASSIGNED_ARCHS:
-        ps = _leaf_path_sizes(get_config(arch))
+        model, shapes, ps = _leaf_traces(get_config(arch))
         sizes = [s for _, s in ps]
         fused_vs_per_leaf(emit, sizes, arch)
         policy_vs_uniform(emit, ps, arch)
+        fsdp_policy_rows(emit, model, shapes, ps, arch)
         n = sum(sizes)
         for m in ["fp", "terngrad", "orq-9"]:
             qz = make_quantizer(m, bucket_size=512)

@@ -1,7 +1,9 @@
 """Paper Fig. 3 / Table 5 proxy: multi-worker distributed training with the
 full Algorithm 2 exchange (worker-quantize -> all_to_all -> server-average
 -> re-quantize -> broadcast). Runs in a subprocess with 4 fake devices (the
-paper's ImageNet runs use 4 workers) and compares FP vs ORQ vs QSGD."""
+paper's ImageNet runs use 4 workers) and compares FP vs ORQ vs QSGD; also
+reports traced collective counts for the fused-vs-per-leaf exchange in both
+replicated and fsdp (ZeRO-3) modes."""
 from __future__ import annotations
 
 import json
@@ -62,6 +64,24 @@ f_launch, f_bytes = comm.fused_stats(qz, sizes, 4)
 out["_collectives"] = {"counts": counts, "leaves": len(sizes),
                        "launches": [pl_launch, f_launch],
                        "wire_bytes": [pl_bytes, f_bytes]}
+
+# fsdp (ZeRO-3): fused per-group reduce-scatter vs per-leaf gather backward
+fcounts = {}
+for fused in (True, False):
+    tcfg = TrainConfig(quant=QuantConfig(name="orq-9", bucket_size=2048),
+                       mode="fsdp", fused_exchange=fused)
+    state = init_state(model, mesh, tcfg, jax.random.key(0))
+    step_fn, plan = make_train_step(model, mesh, tcfg, constant_lr(0.05))
+    jx = str(jax.make_jaxpr(step_fn)(state, data.batch(0), jax.random.key(1)))
+    fcounts["fused" if fused else "perleaf"] = (
+        jx.count("all_to_all["), jx.count("all_gather["))
+aparams = jax.eval_shape(model.init, jax.random.key(0))
+fex = comm.FsdpExchange.build(
+    tcfg.resolved_policy(), aparams, plan.dp_axes, paths=plan.paths,
+    shard_dims=plan.full_shard_dims(), n_shards=plan.n_dp)
+out["_fsdp"] = {"counts": fcounts, "groups": len(fex.layout.groups),
+                "launches": fex.collective_launches(),
+                "wire_bytes": fex.wire_bytes_per_worker()}
 print("RESULT " + json.dumps(out))
 """
 
@@ -78,6 +98,7 @@ def run(emit):
     line = [l for l in r.stdout.splitlines() if l.startswith("RESULT")][0]
     res = json.loads(line.split(" ", 1)[1])
     coll = res.pop("_collectives")
+    fsdp = res.pop("_fsdp", None)
     for name, loss in res.items():
         emit(csv_row(f"table5_distributed/{name}", 0.0,
                      f"final_loss={loss:.4f};workers=4;clip=2.5"))
@@ -89,6 +110,14 @@ def run(emit):
         f"leaves={coll['leaves']};traced_a2a={fused_a2a}v{pleaf_a2a};"
         f"traced_ag={fused_ag}v{pleaf_ag};launches={f_l}v{pl_l};"
         f"wire={f_b/2**20:.2f}v{pl_b/2**20:.2f}MiB"))
+    if fsdp:
+        fa2a, fag = fsdp["counts"]["fused"]
+        pa2a, pag = fsdp["counts"]["perleaf"]
+        emit(csv_row(
+            "table5_distributed/fsdp_fused_vs_perleaf", 0.0,
+            f"groups={fsdp['groups']};traced_a2a={fa2a}v{pa2a};"
+            f"traced_ag={fag}v{pag};launches={fsdp['launches']};"
+            f"wire={fsdp['wire_bytes']/2**20:.2f}MiB"))
     ok = (res["orq-9"] <= res["qsgd-9"] + 0.15
           and res["orq-3"] <= res["terngrad"] + 0.15)
     emit(csv_row("table5_distributed/claims", 0.0,

@@ -1,9 +1,12 @@
 """Quantized gradient communication, layered.
 
-    wire         pack/unpack + level tables — the uint32 payload format
-    collectives  phase-1/phase-2 shard_map primitives (Algorithm 2)
-    gather       custom-VJP FSDP / replicated parameter gathers
-    exchange     fused flat-buffer engine (GradLayout + GradientExchange)
+    wire           pack/unpack + level tables — the uint32 payload format
+    collectives    phase-1/phase-2 shard_map primitives (Algorithm 2)
+    gather         custom-VJP FSDP / replicated parameter gathers (per-leaf)
+    exchange       fused flat-buffer engine (GradLayout + GradientExchange,
+                   PolicyLayout + PartitionedExchange)
+    fsdp_exchange  shard-aware fused ZeRO-3 engine (FsdpLayout +
+                   FsdpExchange + the whole-tree custom-VJP gather)
 
 This package replaces the former ``repro.core.comm`` monolith; every name
 that module exported (including the historical private helpers some tests
@@ -19,6 +22,10 @@ from repro.core.comm.exchange import (GradientExchange, GradLayout,
                                       PartitionedExchange, PolicyLayout,
                                       fused_stats, per_leaf_stats,
                                       policy_stats)
+from repro.core.comm.fsdp_exchange import (FsdpExchange, FsdpGroup,
+                                           FsdpLayout, FsdpSlot,
+                                           make_fused_tree_gather,
+                                           reduce_scatter_mean_block)
 from repro.core.comm.gather import make_fsdp_gather, make_replicated_gather
 from repro.core.comm.wire import _assign, _bucket_len
 
@@ -30,12 +37,18 @@ __all__ = [
     "quantized_reduce_scatter_mean",
     "make_fsdp_gather",
     "make_replicated_gather",
+    "FsdpExchange",
+    "FsdpGroup",
+    "FsdpLayout",
+    "FsdpSlot",
     "GradLayout",
     "GradientExchange",
     "GroupSegment",
     "LeafSlot",
     "PartitionedExchange",
     "PolicyLayout",
+    "make_fused_tree_gather",
+    "reduce_scatter_mean_block",
     "fused_stats",
     "per_leaf_stats",
     "policy_stats",

@@ -36,7 +36,26 @@ from repro.utils import compat
 
 
 def _names(axis_names) -> Tuple[str, ...]:
-    return (axis_names,) if isinstance(axis_names, str) else tuple(axis_names)
+    """Normalize ``axis_names`` to an ORDERED tuple.
+
+    Axis order is semantically meaningful here: it fixes the worker
+    enumeration every collective in both phases relies on, and it must
+    agree with the mesh/PartitionSpec axis order. A ``set`` iterates in
+    hash order, which varies with ``PYTHONHASHSEED`` — two processes of a
+    multi-process run could then lower the same collective with different
+    axis orderings — and any fixed normalization (e.g. sorting) could
+    still disagree with the mesh order. So sets are rejected outright;
+    pass the ordered tuple the mesh was built with.
+    """
+    if isinstance(axis_names, str):
+        return (axis_names,)
+    if isinstance(axis_names, (set, frozenset)):
+        raise TypeError(
+            "axis_names must be an ordered tuple (or a single name), not "
+            f"a set: {sorted(axis_names)!r} — set iteration order is "
+            "PYTHONHASHSEED-dependent and the collective axis order must "
+            "match the mesh axis order")
+    return tuple(axis_names)
 
 
 def axis_size(axis_names) -> int:

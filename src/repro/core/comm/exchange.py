@@ -214,6 +214,20 @@ class GradientExchange:
             4 if self.server_requant else 3)
         return per_span * len(self.spans(n))
 
+    # -- reduce-scatter accounting (the fsdp phase-1-only exchange) --------
+    @staticmethod
+    def rs_stats(qz: Quantizer, n: int, n_workers: int) -> Tuple[int, float]:
+        """(launches, wire bytes per worker) for ONE fused quantized
+        reduce-scatter of ``n`` elements — phase-1 uplink only, no
+        server->worker broadcast. The single source of the RS formula for
+        ``policy_stats(sharded_paths=...)`` and ``FsdpExchange``."""
+        if qz.is_identity:
+            return 1, 4.0 * n                    # one psum_scatter
+        chunk = -(-n // max(n_workers, 1))
+        d_eff = wire.bucket_len(chunk, qz.bucket_size)
+        nbc = -(-chunk // d_eff)
+        return 2, float(wire.wire_unit_bytes(qz, nbc * n_workers, d_eff))
+
     def wire_bytes_per_worker(self, n: int, n_workers: int) -> float:
         """Bytes one worker transmits per exchange (uplink phase 1 +
         phase-2 broadcast of its own chunk), after chunk/bucket padding."""
@@ -421,19 +435,38 @@ class PartitionedExchange:
 
 
 def policy_stats(policy: QuantPolicy, path_sizes, n_workers: int, *,
-                 max_chunk_elems: Optional[int] = None
+                 max_chunk_elems: Optional[int] = None,
+                 sharded_paths=None
                  ) -> Tuple[int, float, Tuple[str, ...]]:
     """(launches, wire bytes per worker, group labels) for a policy over
     ``[(path, size), ...]`` leaves — static accounting without a tree
-    (benchmarks)."""
-    groups: Dict[QuantConfig, int] = {}
+    (benchmarks).
+
+    ``sharded_paths`` (a container of paths, e.g. the dp-divisible leaves
+    of an fsdp ``ShardingPlan``) splits the accounting into SHARDED
+    segments — exchanged by the fused quantized reduce-scatter, phase-1
+    uplink only, labelled ``<scheme>/rs`` — and replicated segments that
+    keep the full Algorithm 2 all-reduce cost. Sharded leaf sizes are
+    rounded up to a multiple of ``n_workers`` (the layout requires exact
+    divisibility; the rounding only guards accounting callers)."""
+    sharded_paths = frozenset(sharded_paths or ())
+    groups: Dict[Tuple[QuantConfig, bool], int] = {}
     for path, size in path_sizes:
         cfg = policy.resolve(path)
-        groups[cfg] = groups.get(cfg, 0) + int(size)
+        key = (cfg, path in sharded_paths)
+        groups[key] = groups.get(key, 0) + int(size)
     launches, bytes_, labels = 0, 0.0, []
-    for cfg, n in groups.items():
+    for (cfg, sharded), n in groups.items():
+        qz = cfg.to_quantizer()
+        if sharded:
+            n = -(-n // n_workers) * n_workers
+            l, b = GradientExchange.rs_stats(qz, n, n_workers)
+            launches += l
+            bytes_ += b
+            labels.append(f"{cfg.name}/rs")
+            continue
         eng = GradientExchange(
-            cfg.to_quantizer(), ("data",),
+            qz, ("data",),
             server_requant=cfg.server_requant,
             max_chunk_elems=max_chunk_elems)
         launches += eng.collective_launches(n)

@@ -1,0 +1,443 @@
+"""Fused policy-aware FSDP (ZeRO-3) gradient exchange.
+
+The per-leaf fsdp gather (``make_fsdp_gather``) issues one quantized
+reduce-scatter per parameter leaf — a 100+ leaf model pays 100+ collective
+launches, ragged-bucket paddings, and level-table transfers per step, and
+there is nowhere to hang an error-feedback residual because each leaf's
+exchange lives inside its own custom-VJP. This module is the shard-aware
+sibling of ``PolicyLayout``/``PartitionedExchange`` (``exchange.py``):
+
+    FsdpLayout     static partition plan: leaves grouped by resolved
+                   QuantConfig into contiguous per-group flat buffers whose
+                   element order respects each leaf's dp-shard coordinates —
+                   worker w's reduce-scatter chunk is exactly the
+                   concatenation of worker w's parameter-shard slices;
+    FsdpExchange   one fused quantized reduce-scatter per SHARDED policy
+                   group (phase 1 only: fsdp has no server->worker
+                   broadcast, the next forward's parameter all-gather is
+                   the downlink) plus one fused quantized all-reduce per
+                   REPLICATED group (leaves with no dp-divisible dim), with
+                   per-group wire accounting and error-feedback residuals;
+    make_fused_tree_gather
+                   the custom-VJP whole-tree gather the train step calls:
+                   forward = one fused bf16 all-gather per sharded group
+                   (the ZeRO-3 parameter broadcast), backward = the fused
+                   exchange above. Error-feedback residuals ride the
+                   cotangent of the residual-buffer input, so
+                   ``value_and_grad(loss, argnums=(0, 1))`` returns
+                   (sharded grads, new residuals) in one pass and the
+                   residual stream persists in ``TrainState.ef``.
+
+Buffer layout of one sharded group (L dp workers, leaves a, b):
+
+        row 0: [ a.shard0 | b.shard0 ]      rows = all_to_all'd chunks;
+        row 1: [ a.shard1 | b.shard1 ]      worker w keeps the mean of
+        ...                                 row w == grads for exactly
+        row L-1: [ a.shardL-1 | b.shardL-1 ]   its own param shards.
+
+Collective launches are O(#policy groups), never O(#leaves). Tensor
+parallelism: flattening a TP-sharded cotangent into a single dp buffer
+would force XLA to replicate it over the ``model`` axis, so callers keep
+the per-leaf gather (with its nested-manual trick) whenever
+``n_model > 1`` — see ``train/step.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.api import QuantConfig
+from repro.core.comm.collectives import (_names, _rs_mean_parts, axis_size,
+                                         local_qdq_comm_layout,
+                                         quantized_reduce_scatter_mean)
+from repro.core.comm.exchange import GradientExchange
+from repro.core.policy import QuantPolicy
+from repro.core.quantizers import Quantizer
+from repro.utils.pytree import tree_flatten_with_path_strs
+
+
+def reduce_scatter_mean_block(g, qz: Quantizer, key, axis_names, *, dim: int,
+                              use_kernels: bool = True,
+                              param_dtype=jnp.float32):
+    """Quantized reduce-scatter of ONE full-size cotangent block along
+    ``dim``: returns this worker's shard of the across-worker mean, in the
+    stored-shard shape. The single-leaf primitive shared by the per-leaf
+    fsdp gather backward (``make_fsdp_gather``) and by tests.
+
+    ``key`` must already be folded per-worker (callers fold in the dp axis
+    index in the primal context — see ``make_fsdp_gather``)."""
+    names = _names(axis_names)
+    L = axis_size(names)
+    gm = jnp.moveaxis(g.astype(jnp.float32), dim, 0)
+    lead, rest = gm.shape[0], gm.shape[1:]
+    chunk = (lead // L) * int(np.prod(rest)) if rest else lead // L
+    parts = gm.reshape(L, chunk)
+    if qz.is_identity:
+        mean_chunk = lax.psum_scatter(
+            parts, names, scatter_dimension=0, tiled=False) / L
+    else:
+        valid = jnp.ones((L, chunk), dtype=bool)
+        mean_chunk = _rs_mean_parts(parts, valid, qz, key, names,
+                                    use_kernels)
+    out = mean_chunk.reshape((lead // L,) + rest)
+    return jnp.moveaxis(out, 0, dim).astype(param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# layout
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FsdpSlot:
+    """One leaf's span inside its group buffer (FULL-leaf coordinates)."""
+
+    path: str
+    shape: Tuple[int, ...]       # full (unsharded) leaf shape
+    dtype: Any
+    dim: Optional[int]           # dp-shard dim in full coords; None = repl.
+    offset: int                  # sharded: offset inside each worker ROW
+                                 # (elements of one shard); replicated:
+                                 # offset inside the full group buffer
+    size: int                    # full element count
+
+
+@dataclasses.dataclass(frozen=True)
+class FsdpGroup:
+    """One policy group's contiguous segment."""
+
+    cfg: QuantConfig
+    sharded: bool                # True: reduce-scatter; False: all-reduce
+    leaf_ids: Tuple[int, ...]    # canonical leaf order indices, ascending
+    size: int                    # full element count of the group buffer
+
+
+@dataclasses.dataclass(frozen=True)
+class FsdpLayout:
+    """Static shard-aware partition plan for a ZeRO-3 parameter tree.
+
+    Leaves are grouped by ``(resolved QuantConfig, sharded?)``; sharded
+    groups are laid out worker-major (row w = worker w's shard slices of
+    every leaf, concatenated in canonical order), so a reduce-scatter of
+    the flattened buffer hands each worker a chunk that unflattens
+    directly onto its stored parameter shards.
+    """
+
+    treedef: Any
+    slots: Tuple[FsdpSlot, ...]
+    groups: Tuple[FsdpGroup, ...]
+    leaf_group: Tuple[int, ...]          # leaf i -> index into groups
+    n_shards: int                        # L, the dp worker count
+
+    @classmethod
+    def from_tree(cls, tree, policy: QuantPolicy, *, paths, shard_dims,
+                  n_shards: int) -> "FsdpLayout":
+        """``paths``: pytree of path strings aligned with ``tree``;
+        ``shard_dims``: path -> dp-shard dim in FULL leaf coords (None =
+        replicated); ``n_shards``: dp worker count. Every sharded leaf's
+        ``shape[dim]`` must divide by ``n_shards`` (``plan_sharding``
+        guarantees it)."""
+        pairs, treedef = tree_flatten_with_path_strs(tree)
+        path_strs = list(jax.tree_util.tree_leaves(paths))
+        assert len(path_strs) == len(pairs), (len(path_strs), len(pairs))
+
+        group_ix: Dict[Tuple[QuantConfig, bool], int] = {}
+        g_cfg: List[Tuple[QuantConfig, bool]] = []
+        g_leaves: List[List[int]] = []
+        g_off: List[int] = []
+        slots: List[FsdpSlot] = []
+        leaf_group: List[int] = []
+        for i, ((_, leaf), path) in enumerate(zip(pairs, path_strs)):
+            cfg = policy.resolve(path)
+            dim = shard_dims.get(path)
+            if dim is not None and (not leaf.shape
+                                    or leaf.shape[dim] % n_shards):
+                raise ValueError(
+                    f"leaf {path!r} shape {leaf.shape} is not divisible "
+                    f"by {n_shards} along dim {dim}")
+            sharded = dim is not None
+            gkey = (cfg, sharded)
+            gi = group_ix.setdefault(gkey, len(g_cfg))
+            if gi == len(g_cfg):
+                g_cfg.append(gkey)
+                g_leaves.append([])
+                g_off.append(0)
+            size = int(np.prod(leaf.shape)) if leaf.shape else 1
+            slots.append(FsdpSlot(path=path, shape=tuple(leaf.shape),
+                                  dtype=leaf.dtype, dim=dim,
+                                  offset=g_off[gi], size=size))
+            # sharded rows advance by ONE shard's elements; replicated
+            # buffers by the full leaf
+            g_off[gi] += size // n_shards if sharded else size
+            g_leaves[gi].append(i)
+            leaf_group.append(gi)
+        groups = tuple(
+            FsdpGroup(cfg=c, sharded=sh, leaf_ids=tuple(ls),
+                      size=off * (n_shards if sh else 1))
+            for (c, sh), ls, off in zip(g_cfg, g_leaves, g_off))
+        return cls(treedef=treedef, slots=tuple(slots), groups=groups,
+                   leaf_group=tuple(leaf_group), n_shards=n_shards)
+
+    @property
+    def size(self) -> int:
+        return sum(g.size for g in self.groups)
+
+    # -- forward: fused parameter all-gather -------------------------------
+    def gather_full(self, tree, axis_names, *, compute_dtype=jnp.bfloat16):
+        """Sharded-param pytree -> full-leaf pytree (``compute_dtype``),
+        ONE all_gather per sharded group (the ZeRO-3 parameter broadcast;
+        replicated leaves just cast). Runs inside shard_map over the dp
+        axes."""
+        names = _names(axis_names)
+        L = self.n_shards
+        leaves = jax.tree_util.tree_leaves(tree)
+        assert len(leaves) == len(self.slots), (len(leaves), len(self.slots))
+        full: List[Any] = [None] * len(leaves)
+        for g in self.groups:
+            if not g.sharded:
+                for i in g.leaf_ids:
+                    full[i] = leaves[i].astype(compute_dtype)
+                continue
+            row = jnp.concatenate([
+                jnp.moveaxis(leaves[i].astype(compute_dtype),
+                             self.slots[i].dim, 0).reshape(-1)
+                for i in g.leaf_ids])
+            rows = lax.all_gather(row, names, axis=0, tiled=False)  # (L, .)
+            for i in g.leaf_ids:
+                s = self.slots[i]
+                shard = s.size // L
+                rest = s.shape[:s.dim] + s.shape[s.dim + 1:]
+                seg = rows[:, s.offset:s.offset + shard]
+                seg = seg.reshape((s.shape[s.dim],) + rest)
+                full[i] = jnp.moveaxis(seg, 0, s.dim)
+        return jax.tree_util.tree_unflatten(self.treedef, full)
+
+    # -- backward: buffers <-> trees ---------------------------------------
+    def flatten_groups(self, tree) -> Tuple[jnp.ndarray, ...]:
+        """Full-leaf cotangent pytree -> one (group.size,) f32 buffer per
+        group. Sharded groups are worker-major (see class docstring)."""
+        L = self.n_shards
+        leaves = jax.tree_util.tree_leaves(tree)
+        assert len(leaves) == len(self.slots), (len(leaves), len(self.slots))
+        bufs = []
+        for g in self.groups:
+            if not g.sharded:
+                bufs.append(jnp.concatenate(
+                    [leaves[i].astype(jnp.float32).reshape(-1)
+                     for i in g.leaf_ids]))
+                continue
+            rows = jnp.concatenate([
+                jnp.moveaxis(leaves[i].astype(jnp.float32),
+                             self.slots[i].dim, 0).reshape(L, -1)
+                for i in g.leaf_ids], axis=1)
+            bufs.append(rows.reshape(-1))
+        return tuple(bufs)
+
+    def unflatten_outputs(self, outs: Sequence[jnp.ndarray], *,
+                          param_dtype=jnp.float32):
+        """Per-group exchange outputs -> pytree aligned with the STORED
+        (sharded) parameters: sharded groups receive their own
+        (group.size / L,) mean chunk, replicated groups the full
+        (group.size,) mean buffer."""
+        assert len(outs) == len(self.groups), (len(outs), len(self.groups))
+        L = self.n_shards
+        leaves = []
+        for i, s in enumerate(self.slots):
+            out = outs[self.leaf_group[i]]
+            if s.dim is None:
+                leaf = out[s.offset:s.offset + s.size].reshape(s.shape)
+            else:
+                shard = s.size // L
+                rest = s.shape[:s.dim] + s.shape[s.dim + 1:]
+                seg = out[s.offset:s.offset + shard]
+                seg = seg.reshape((s.shape[s.dim] // L,) + rest)
+                leaf = jnp.moveaxis(seg, 0, s.dim)
+            leaves.append(leaf.astype(param_dtype))
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FsdpExchange:
+    """Per-policy-group fused ZeRO-3 exchange over an ``FsdpLayout``.
+
+    Sharded groups run ONE quantized reduce-scatter (phase 1 only — the
+    next forward's fused parameter all-gather is the downlink); replicated
+    groups run the full Algorithm 2 all-reduce via a ``GradientExchange``.
+    ``exchange_bufs``/``residual_bufs`` share one key schedule so
+    error-feedback residuals stay bit-consistent with what was sent.
+    """
+
+    layout: FsdpLayout
+    engines: Tuple[GradientExchange, ...]    # aligned with layout.groups;
+                                             # sharded groups use only .qz
+    use_kernels: bool = True
+
+    @classmethod
+    def build(cls, policy: QuantPolicy, tree, axis_names, *, paths,
+              shard_dims, n_shards: int, use_kernels: bool = True,
+              max_chunk_elems: Optional[int] = None) -> "FsdpExchange":
+        """``max_chunk_elems`` caps replicated-group collectives only: a
+        sharded group's buffer must reduce-scatter in one piece (its rows
+        are the worker chunks)."""
+        layout = FsdpLayout.from_tree(tree, policy, paths=paths,
+                                      shard_dims=shard_dims,
+                                      n_shards=n_shards)
+        engines = tuple(
+            GradientExchange(
+                g.cfg.to_quantizer(), axis_names,
+                server_requant=g.cfg.server_requant,
+                use_kernels=use_kernels,
+                max_chunk_elems=None if g.sharded else max_chunk_elems)
+            for g in layout.groups)
+        return cls(layout=layout, engines=engines, use_kernels=use_kernels)
+
+    @property
+    def axis_names(self):
+        return self.engines[0].axis_names if self.engines else ()
+
+    @property
+    def is_identity(self) -> bool:
+        return all(e.qz.is_identity for e in self.engines)
+
+    def _group_key(self, key: jax.Array, gi: int) -> jax.Array:
+        # mirrors PartitionedExchange: a single group keeps the unfolded key
+        return key if len(self.engines) == 1 else jax.random.fold_in(key, gi)
+
+    # -- distributed paths (inside shard_map over the dp axes) -------------
+    def exchange_bufs(self, bufs: Sequence[jnp.ndarray], key: jax.Array,
+                      worker_id) -> Tuple[jnp.ndarray, ...]:
+        """Per-group local cotangent buffers -> per-group outputs: sharded
+        groups get this worker's (size/L,) mean chunk, replicated groups
+        the full (size,) mean. ``worker_id`` must come from the primal
+        context (axis_index cannot lower in transposed contexts)."""
+        outs = []
+        for gi, (eng, g) in enumerate(zip(self.engines, self.layout.groups)):
+            gk = self._group_key(key, gi)
+            if g.sharded:
+                outs.append(quantized_reduce_scatter_mean(
+                    bufs[gi], eng.qz, gk, eng.axis_names,
+                    worker_id=worker_id, use_kernels=self.use_kernels))
+            else:
+                outs.append(eng.exchange_flat(bufs[gi], gk,
+                                              worker_id=worker_id))
+        return tuple(outs)
+
+    def residual_bufs(self, bufs: Sequence[jnp.ndarray], key: jax.Array,
+                      worker_id) -> Tuple[Optional[jnp.ndarray], ...]:
+        """Error-feedback residuals e = b − Q⁻¹(Q(b)), bit-consistent with
+        ``exchange_bufs`` (same spans, same folded keys); identity groups
+        have no quantization error and carry no residual buffer (None —
+        matching ``ef_group_sizes``)."""
+        res = []
+        for gi, (eng, g) in enumerate(zip(self.engines, self.layout.groups)):
+            if eng.qz.is_identity:
+                res.append(None)
+                continue
+            gk = self._group_key(key, gi)
+            if g.sharded:
+                local = local_qdq_comm_layout(
+                    bufs[gi], eng.qz, gk, eng.axis_names,
+                    worker_id=worker_id, use_kernels=self.use_kernels)
+            else:
+                local = eng.local_qdq_flat(bufs[gi], gk,
+                                           worker_id=worker_id)
+            res.append(bufs[gi] - local)
+        return tuple(res)
+
+    def ef_group_sizes(self) -> Tuple[Optional[int], ...]:
+        """Per-group residual-buffer element counts, group-aligned: the
+        FULL group size for quantized groups (a worker's residual covers
+        its whole local contribution), None for identity groups (an exact
+        exchange leaves nothing to feed back — no buffer is allocated)."""
+        return tuple(None if eng.qz.is_identity else g.size
+                     for eng, g in zip(self.engines, self.layout.groups))
+
+    # -- static cost accounting (benchmarks / tests) -----------------------
+    def quantized_group_count(self) -> int:
+        return sum(1 for e in self.engines if not e.qz.is_identity)
+
+    def collective_launches(self) -> int:
+        """Backward launches for one step: sharded groups pay phase 1 only
+        (``GradientExchange.rs_stats``: 2 all_to_all; fp = 1 psum_scatter),
+        replicated groups the full Algorithm 2 count."""
+        L = self.layout.n_shards
+        return sum(
+            GradientExchange.rs_stats(eng.qz, g.size, L)[0] if g.sharded
+            else eng.collective_launches(g.size)
+            for eng, g in zip(self.engines, self.layout.groups))
+
+    def wire_bytes_per_worker(self) -> float:
+        """Gradient bytes one worker transmits per step (sharded groups:
+        phase-1 uplink only; the parameter all-gather downlink is bf16
+        and belongs to the forward)."""
+        L = self.layout.n_shards
+        return sum(
+            GradientExchange.rs_stats(eng.qz, g.size, L)[1] if g.sharded
+            else eng.wire_bytes_per_worker(g.size, L)
+            for eng, g in zip(self.engines, self.layout.groups))
+
+
+# ---------------------------------------------------------------------------
+# the custom-VJP whole-tree gather
+# ---------------------------------------------------------------------------
+
+def make_fused_tree_gather(ex: FsdpExchange, *,
+                           compute_dtype=jnp.bfloat16,
+                           param_dtype=jnp.float32):
+    """Returns ``gather(shard_params, ef_bufs, key) -> full_params``.
+
+    fwd: one fused bf16 all-gather per sharded policy group (replicated
+         leaves cast in place) — the whole-tree ZeRO-3 parameter broadcast.
+    bwd: the fused policy-aware exchange — cotangents are flattened into
+         per-group buffers, error-feedback residuals (if ``ef_bufs`` is not
+         None) are added, each group runs its single quantized
+         reduce-scatter (sharded) or all-reduce (replicated), and the
+         result unflattens onto the STORED parameter shards. The NEW
+         residual stream is returned as the cotangent of ``ef_bufs``, so
+
+             value_and_grad(loss_fn, argnums=(0, 1))(params, ef)
+
+         yields ``(sharded_grads, new_ef)`` in one backward pass; the
+         train step persists ``new_ef`` in ``TrainState.ef``.
+
+    Pass ``ef_bufs=None`` to disable error feedback (no residual compute,
+    no residual cotangent)."""
+    names = _names(ex.axis_names)
+
+    @jax.custom_vjp
+    def gather(shard_params, ef_bufs, key):
+        del ef_bufs, key
+        return ex.layout.gather_full(shard_params, names,
+                                     compute_dtype=compute_dtype)
+
+    def fwd(shard_params, ef_bufs, key):
+        # capture the worker id in the PRIMAL context: axis_index cannot
+        # lower from the transposed/hoisted backward context
+        wid = lax.axis_index(names)
+        return gather(shard_params, ef_bufs, key), (key, wid, ef_bufs)
+
+    def bwd(res, g_full):
+        key, wid, ef_bufs = res
+        bufs = ex.layout.flatten_groups(g_full)
+        if ef_bufs is not None:
+            # e_{t-1} compensates this step's send: b = g + e (identity
+            # groups carry no residual buffer — see ef_group_sizes)
+            bufs = tuple(b if e is None else b + e
+                         for b, e in zip(bufs, ef_bufs))
+        outs = ex.exchange_bufs(bufs, key, wid)
+        new_ef = (ex.residual_bufs(bufs, key, wid)
+                  if ef_bufs is not None else None)
+        shard_ct = ex.layout.unflatten_outputs(outs, param_dtype=param_dtype)
+        key_ct = np.zeros(key.shape, dtype=jax.dtypes.float0)
+        return shard_ct, new_ef, key_ct
+
+    gather.defvjp(fwd, bwd)
+    return gather

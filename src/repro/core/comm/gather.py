@@ -16,8 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.core.comm.collectives import (_names, _rs_mean_parts, axis_size,
-                                         quantized_all_reduce_mean)
+from repro.core.comm.collectives import _names, quantized_all_reduce_mean
+from repro.core.comm.fsdp_exchange import reduce_scatter_mean_block
 from repro.core.quantizers import Quantizer
 from repro.utils import compat
 from repro.utils.compat import shard_map
@@ -63,21 +63,11 @@ def make_fsdp_gather(
         return gather(w, key), (key, wid)
 
     def _local_rs(g, key):
-        """Quantized RS of one (possibly per-tp-shard) cotangent block."""
-        L = axis_size(names)
-        gm = jnp.moveaxis(g.astype(jnp.float32), dim, 0)
-        lead, rest = gm.shape[0], gm.shape[1:]
-        chunk = (lead // L) * int(np.prod(rest)) if rest else lead // L
-        parts = gm.reshape(L, chunk)
-        if qz.is_identity:
-            mean_chunk = lax.psum_scatter(
-                parts, names, scatter_dimension=0, tiled=False) / L
-        else:
-            valid = jnp.ones((L, chunk), dtype=bool)
-            mean_chunk = _rs_mean_parts(parts, valid, qz, key, names,
-                                        use_kernels)
-        out = mean_chunk.reshape((lead // L,) + rest)
-        return jnp.moveaxis(out, 0, dim).astype(param_dtype)
+        """Quantized RS of one (possibly per-tp-shard) cotangent block —
+        the shared single-leaf primitive from ``fsdp_exchange``."""
+        return reduce_scatter_mean_block(g, qz, key, names, dim=dim,
+                                         use_kernels=use_kernels,
+                                         param_dtype=param_dtype)
 
     def bwd(res, g):
         key, wid = res

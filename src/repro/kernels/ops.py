@@ -2,11 +2,18 @@
 
 ``interpret`` defaults to True off-TPU (this container is CPU-only; interpret
 mode executes the kernel bodies in Python for correctness validation) and to
-False on a real TPU backend. The wrappers keep kernel use optional: the
-``use_kernels`` flag lets the comm layer fall back to the pure-jnp reference
-path (also the numerics oracle) — both are tested equal.
+False on a real TPU backend. The ``REPRO_PALLAS_INTERPRET`` environment
+variable overrides the backend autodetection in either direction
+(``1``/``true``/``yes``/``on`` forces interpret mode — e.g. to debug kernel
+numerics ON a TPU — and ``0``/``false``/``no``/``off`` forces compiled
+kernels); it is read at trace time, so set it before the first jit of a
+step function. The wrappers keep kernel use optional: the ``use_kernels``
+flag lets the comm layer fall back to the pure-jnp reference path (also the
+numerics oracle) — both are tested equal.
 """
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
@@ -17,8 +24,20 @@ from repro.kernels import dequant_avg as _dequant
 from repro.kernels import quant_rr as _quant
 from repro.kernels import ref as _ref
 
+_TRUE = ("1", "true", "yes", "on")
+_FALSE = ("0", "false", "no", "off")
+
 
 def _interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "").strip().lower()
+    if env in _TRUE:
+        return True
+    if env in _FALSE:
+        return False
+    if env:
+        raise ValueError(
+            f"REPRO_PALLAS_INTERPRET={env!r}: expected one of "
+            f"{_TRUE + _FALSE} (or unset for backend autodetection)")
     return jax.default_backend() != "tpu"
 
 

@@ -54,6 +54,9 @@ def main(argv=None):
     ap.add_argument("--per-leaf-exchange", action="store_true",
                     help="legacy one-collective-per-leaf exchange "
                          "(default: fused flat-buffer engine)")
+    ap.add_argument("--error-feedback", action="store_true",
+                    help="accumulate EF residuals (replicated mode and "
+                         "fused fsdp; persisted in TrainState.ef)")
     ap.add_argument("--exchange-chunk", type=int, default=None,
                     help="cap fused-collective size (elements) for memory")
     ap.add_argument("--model-parallel", type=int, default=1)
@@ -76,6 +79,7 @@ def main(argv=None):
         policy=policy,
         mode=args.mode,
         fused_exchange=not args.per_leaf_exchange,
+        error_feedback=args.error_feedback,
         exchange_chunk_elems=args.exchange_chunk)
     lr_fn = step_decay(args.lr, [args.steps // 2, 3 * args.steps // 4])
     state = init_state(model, mesh, tcfg, jax.random.key(args.seed))

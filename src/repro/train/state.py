@@ -12,4 +12,10 @@ class TrainState(NamedTuple):
     opt: Any                    # optimizer state, sharded like params
     step: jnp.ndarray           # scalar int32
     ef: Any = None              # error-feedback residuals (beyond-paper;
-                                # replicated mode, TrainConfig.error_feedback)
+                                # TrainConfig.error_feedback). Replicated
+                                # mode: a params-shaped f32 tree. Fused
+                                # fsdp mode: one flat f32 buffer per policy
+                                # group, stacked over the dp axes (each
+                                # worker's slice is the residual of its own
+                                # local contribution) — checkpointed and
+                                # donated with the rest of the state.

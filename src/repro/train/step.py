@@ -5,9 +5,18 @@ Layout (ZeRO-3):
   * every f32 master-param leaf is sharded over the combined dp axes
     (``pod`` x ``data``) along its d_model-sized dim, and over ``model``
     along its largest remaining dim (tensor/expert parallelism — XLA auto);
-  * inside the step, each leaf is gathered bf16 at its point of use
-    (per scanned layer group) through a custom-VJP whose backward is the
-    quantized reduce-scatter (``mode='fsdp'``);
+  * with the FUSED exchange (``fused_exchange=True``, pure-dp meshes) the
+    whole parameter tree is gathered bf16 up front through ONE custom-VJP
+    (``core/comm/fsdp_exchange.py``): forward = one fused all-gather per
+    policy group, backward = one fused quantized reduce-scatter per
+    sharded group (+ one fused quantized all-reduce per replicated group)
+    with an error-feedback residual stream persisted in ``TrainState.ef``
+    — O(#policy groups) gradient collectives per step;
+  * with the per-leaf fallback (``fused_exchange=False``, or whenever
+    ``model`` parallelism is active — flattening TP-sharded cotangents
+    into a dp buffer would replicate them over ``model``) each leaf is
+    gathered bf16 at its point of use (per scanned layer group) through a
+    custom-VJP whose backward is the quantized reduce-scatter;
   * leaves with no dp-divisible dim stay replicated and exchange gradients
     through the quantized all-reduce (Algorithm 2 incl. server re-quant).
 
@@ -44,7 +53,7 @@ from repro.optim import optimizers as opt_lib
 from repro.optim.schedule import constant_lr
 from repro.train.state import TrainState
 from repro.utils.compat import shard_map
-from repro.utils.sharding import choose_fsdp_dim
+from repro.utils.sharding import choose_fsdp_dim, spec_dp_dim
 
 # key-fold salt separating the fused whole-tree exchange stream from the
 # legacy per-leaf (crc32-of-path) streams
@@ -65,9 +74,12 @@ class TrainConfig:
     weight_decay: float = 0.0
     use_kernels: bool = True
     error_feedback: bool = False    # beyond-paper: EF residual accumulation
-                                    # (replicated mode; see EXPERIMENTS.md)
-    fused_exchange: bool = True     # one flat-buffer collective per step
-                                    # (False = legacy per-leaf exchange)
+                                    # (replicated mode + fused fsdp;
+                                    # see EXPERIMENTS.md)
+    fused_exchange: bool = True     # one flat-buffer collective per policy
+                                    # group per step (False = legacy
+                                    # per-leaf exchange; fsdp also falls
+                                    # back per-leaf when n_model > 1)
     exchange_chunk_elems: Optional[int] = None  # size cap per fused
                                                 # collective (memory knob)
     compute_dtype: Any = jnp.bfloat16
@@ -116,6 +128,16 @@ class ShardingPlan:
         return jax.tree_util.tree_map(
             strip, self.specs, is_leaf=lambda x: isinstance(x, P))
 
+    def full_shard_dims(self) -> Dict[str, Optional[int]]:
+        """path -> dp-shard dim in FULL leaf coordinates (stacked leading
+        dims included; ``gather_dims`` is in per-repeat slice coords). The
+        fused fsdp exchange lays its group buffers out by these."""
+        specs = jax.tree_util.tree_leaves(
+            self.specs, is_leaf=lambda x: isinstance(x, P))
+        paths = jax.tree_util.tree_leaves(self.paths)
+        return {p: spec_dp_dim(s, self.dp_axes)
+                for p, s in zip(paths, specs)}
+
 
 def _dp_axes(mesh) -> Tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
@@ -123,11 +145,19 @@ def _dp_axes(mesh) -> Tuple[str, ...]:
 
 def plan_sharding(model: LM, aparams, mesh) -> ShardingPlan:
     """Choose per-leaf FSDP + TP dims from abstract parameter shapes."""
+    return plan_sharding_shapes(
+        model, aparams, dp_axes=_dp_axes(mesh),
+        axis_sizes=dict(zip(mesh.axis_names, mesh.devices.shape)))
+
+
+def plan_sharding_shapes(model: LM, aparams, *, dp_axes: Tuple[str, ...],
+                         axis_sizes: Dict[str, int]) -> ShardingPlan:
+    """Mesh-free core of :func:`plan_sharding`: the plan depends only on
+    the axis names/sizes, so static accounting callers (benchmarks) can
+    build one without constructing a device mesh."""
     cfg = model.cfg
-    dp_axes = _dp_axes(mesh)
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    n_dp = int(np.prod([sizes[a] for a in dp_axes])) if dp_axes else 1
-    n_model = sizes.get("model", 1)
+    n_dp = int(np.prod([axis_sizes[a] for a in dp_axes])) if dp_axes else 1
+    n_model = axis_sizes.get("model", 1)
     paths = model.param_paths(aparams)
     gather_dims: Dict[str, Optional[int]] = {}
     tp_dims: Dict[str, Optional[int]] = {}
@@ -137,8 +167,10 @@ def plan_sharding(model: LM, aparams, mesh) -> ShardingPlan:
         stacked = path.startswith("g") or path.startswith("enc/g")
         off = 1 if stacked else 0
         slice_shape = shape[off:]
-        fdim = choose_fsdp_dim(slice_shape, n_dp,
-                               prefer_sizes=(cfg.d_model,))
+        # no dp axes (e.g. a model-only mesh) -> nothing to shard over
+        fdim = (choose_fsdp_dim(slice_shape, n_dp,
+                                prefer_sizes=(cfg.d_model,))
+                if dp_axes else None)
         gather_dims[path] = fdim
         # TP dim: prefer the experts dim, else the largest remaining dim
         tp_candidates = [
@@ -174,16 +206,52 @@ def _make_optimizer(tcfg: TrainConfig):
     raise ValueError(tcfg.optimizer)
 
 
+def _fused_fsdp_active(tcfg: TrainConfig, plan: ShardingPlan) -> bool:
+    """Whether the fused whole-tree fsdp exchange runs. Pure-dp meshes
+    only: flattening TP-sharded cotangents into a dp buffer would force
+    XLA to replicate them over ``model``, so TP keeps the per-leaf gather
+    (with its nested-manual trick)."""
+    return (tcfg.mode == "fsdp" and tcfg.fused_exchange
+            and bool(plan.dp_axes) and plan.n_model == 1)
+
+
+def _fsdp_ef_group_sizes(model: LM, aparams, tcfg: TrainConfig,
+                         plan: ShardingPlan
+                         ) -> Optional[Tuple[Optional[int], ...]]:
+    """Group-aligned residual-buffer sizes for fsdp error feedback (None
+    entries for identity groups, which have no quantization error and get
+    no buffer), or None overall when EF does not apply (replicated mode,
+    per-leaf fsdp, no EF, or a fully-fp policy)."""
+    if not (tcfg.error_feedback and _fused_fsdp_active(tcfg, plan)):
+        return None
+    fex = comm.FsdpExchange.build(
+        tcfg.resolved_policy(), aparams, plan.dp_axes, paths=plan.paths,
+        shard_dims=plan.full_shard_dims(), n_shards=plan.n_dp)
+    sizes = fex.ef_group_sizes()
+    return sizes if any(n is not None for n in sizes) else None
+
+
 def init_state(model: LM, mesh, tcfg: TrainConfig, key) -> TrainState:
     """Initialize TrainState with plan-consistent shardings."""
-    plan = plan_sharding(model, jax.eval_shape(model.init, key), mesh)
+    aparams = jax.eval_shape(model.init, key)
+    plan = plan_sharding(model, aparams, mesh)
     optimizer = _make_optimizer(tcfg)
+    ef_sizes = _fsdp_ef_group_sizes(model, aparams, tcfg, plan)
+    dp_ent = (plan.dp_axes if len(plan.dp_axes) > 1
+              else (plan.dp_axes[0] if plan.dp_axes else None))
 
     def build(key):
         params = model.init(key)
-        ef = (jax.tree_util.tree_map(jnp.zeros_like, params)
-              if (tcfg.error_feedback and tcfg.mode == "replicated")
-              else None)
+        if tcfg.error_feedback and tcfg.mode == "replicated":
+            ef = jax.tree_util.tree_map(jnp.zeros_like, params)
+        elif ef_sizes is not None:
+            # per-worker residual buffers, stacked over the dp axes
+            # (group-aligned; identity groups carry None)
+            ef = tuple(None if n is None
+                       else jnp.zeros((plan.n_dp * n,), jnp.float32)
+                       for n in ef_sizes)
+        else:
+            ef = None
         return TrainState(params=params, opt=optimizer.init(params),
                           step=jnp.int32(0), ef=ef)
 
@@ -197,6 +265,10 @@ def init_state(model: LM, mesh, tcfg: TrainConfig, key) -> TrainState:
         if tcfg.optimizer == "adamw":
             out_sh = out_sh._replace(opt=opt_lib.AdamState(
                 mu=psh, nu=psh, count=NamedSharding(mesh, P())))
+        if ef_sizes is not None:
+            out_sh = out_sh._replace(ef=tuple(
+                None if n is None else NamedSharding(mesh, P(dp_ent))
+                for n in ef_sizes))
     return jax.jit(build, out_shardings=out_sh)(key)
 
 
@@ -220,6 +292,42 @@ def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
         policy, aparams, dp_axes, paths=plan.paths,
         use_kernels=tcfg.use_kernels,
         max_chunk_elems=tcfg.exchange_chunk_elems)
+    # fused fsdp engine: ONE custom-VJP over the whole sharded tree whose
+    # forward is a fused per-group parameter all-gather and whose backward
+    # is one fused quantized reduce-scatter per sharded policy group (+
+    # one fused all-reduce per replicated group) with the EF residual
+    # stream riding the residual-buffer cotangent — O(#groups) gradient
+    # collectives per step (see core/comm/fsdp_exchange.py)
+    fused_fsdp = _fused_fsdp_active(tcfg, plan)
+    fex = tree_gather = None
+    if fused_fsdp:
+        fex = comm.FsdpExchange.build(
+            policy, aparams, dp_axes, paths=plan.paths,
+            shard_dims=plan.full_shard_dims(), n_shards=plan.n_dp,
+            use_kernels=tcfg.use_kernels,
+            max_chunk_elems=tcfg.exchange_chunk_elems)
+        if fex.layout.size > 1_000_000_000:
+            # the fused path holds the whole gathered bf16 tree + full
+            # f32 cotangent buffers per device during the step, vs the
+            # per-leaf path's one-scanned-layer-group residency — make
+            # the trade-off visible before a 27B+ config OOMs on it
+            warnings.warn(
+                f"fused fsdp exchange gathers all {fex.layout.size:.2e} "
+                f"parameters per device each step (O(full model) live "
+                f"memory); if parameter-memory-bound, set "
+                f"fused_exchange=False for per-layer-group ZeRO-3 "
+                f"residency (see EXPERIMENTS.md)", stacklevel=2)
+        tree_gather = comm.make_fused_tree_gather(
+            fex, compute_dtype=tcfg.compute_dtype)
+    # a fully-fp policy has nothing to feed back: no ef buffers at all
+    # (matches _fsdp_ef_group_sizes / init_state)
+    use_fsdp_ef = (tcfg.error_feedback and fused_fsdp
+                   and not fex.is_identity)
+    if tcfg.error_feedback and tcfg.mode == "fsdp" and not fused_fsdp:
+        warnings.warn(
+            "error_feedback needs the fused fsdp exchange (fused_exchange="
+            "True on a pure-dp mesh); the per-leaf fsdp path has no "
+            "residual stream — ignoring error_feedback", stacklevel=2)
 
     leaf_qz_cache: Dict[QuantConfig, Any] = {}
 
@@ -263,6 +371,26 @@ def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
 
     def local_step(state: TrainState, batch, key):
         step_key = jax.random.fold_in(key, state.step)
+
+        if fused_fsdp:
+            # whole-tree fused gather/exchange: grads come back aligned
+            # with the STORED parameter shards; the new EF residuals ride
+            # the cotangent of the residual-buffer argument
+            k = jax.random.fold_in(step_key, _FUSED_SALT)
+
+            def fsdp_loss_fn(params, ef_bufs):
+                return model.loss(tree_gather(params, ef_bufs, k), batch)
+
+            if use_fsdp_ef:
+                (loss, metrics), (grads, new_ef) = jax.value_and_grad(
+                    fsdp_loss_fn, argnums=(0, 1), has_aux=True)(
+                        state.params, state.ef)
+            else:
+                (loss, metrics), grads = jax.value_and_grad(
+                    fsdp_loss_fn, has_aux=True)(state.params, None)
+                new_ef = state.ef
+            return _finish(state, grads, new_ef, loss, metrics)
+
         gather = make_gather_fn(step_key)
 
         def loss_fn(params):
@@ -357,6 +485,9 @@ def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
                         grads, quantized)
                 grads = quantized
 
+        return _finish(state, grads, new_ef, loss, metrics)
+
+    def _finish(state: TrainState, grads, new_ef, loss, metrics):
         lr = lr_fn(state.step)
         updates, new_opt = optimizer.update(grads, state.opt, state.params,
                                             lr)
@@ -369,10 +500,15 @@ def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
         return TrainState(params=new_params, opt=new_opt,
                           step=state.step + 1, ef=new_ef), metrics
 
+    # NOTE both jit paths donate the train state (params + optimizer + EF
+    # residuals update in place); axis_names is an ORDERED tuple end-to-end
+    # — a set would iterate in PYTHONHASHSEED-dependent order and
+    # multi-process workers could lower collectives with different axis
+    # orderings (see core/comm/collectives._names).
     if not dp_axes or tcfg.mode == "replicated":
         # replicated mode still runs under shard_map for the dp collectives
         if not dp_axes:
-            return jax.jit(local_step), plan
+            return jax.jit(local_step, donate_argnums=(0,)), plan
         pspec = jax.tree_util.tree_map(lambda _: P(), aparams)
         state_specs = TrainState(
             params=pspec, opt=_opt_specs(optimizer, tcfg, pspec), step=P(),
@@ -388,15 +524,17 @@ def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
                                   {"nll": P(), "aux": P(),
                                    "tokens": P(), "loss": P(),
                                    "lr": P()}),
-                       axis_names=set(dp_axes), check_vma=False)
-        return jax.jit(fn), plan
+                       axis_names=dp_axes, check_vma=False)
+        return jax.jit(fn, donate_argnums=(0,)), plan
 
     # fsdp mode
     manual = plan.manual_specs()
-    state_specs = TrainState(params=manual,
-                             opt=_opt_specs(optimizer, tcfg, manual),
-                             step=P())
     dp_ent = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    state_specs = TrainState(
+        params=manual, opt=_opt_specs(optimizer, tcfg, manual), step=P(),
+        ef=(tuple(None if n is None else P(dp_ent)
+                  for n in fex.ef_group_sizes())
+            if use_fsdp_ef else None))
     batch_specs = {"tokens": P(dp_ent)}
     if cfg.encoder:
         batch_specs["enc_embeds"] = P(dp_ent)
@@ -405,7 +543,7 @@ def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
     fn = shard_map(local_step, mesh=mesh,
                    in_specs=(state_specs, batch_specs, P()),
                    out_specs=(state_specs, metric_specs),
-                   axis_names=set(dp_axes), check_vma=False)
+                   axis_names=dp_axes, check_vma=False)
     return jax.jit(fn, donate_argnums=(0,)), plan
 
 

@@ -68,6 +68,11 @@ def shard_map(f, *, mesh=None, in_specs, out_specs, axis_names=None,
         if mesh is not None:
             kw["mesh"] = mesh
         if axis_names is not None:
+            # the set conversion happens ONLY here, at the jax boundary,
+            # where axis_names is genuinely membership-semantic (which
+            # axes are manual). Everything order-sensitive — the
+            # collectives in repro.core.comm — receives the caller's
+            # ordered tuple, never this set.
             kw["axis_names"] = set(axis_names)
         return jax.shard_map(f, **kw)
 

@@ -40,6 +40,21 @@ def choose_fsdp_dim(
     return max(candidates, key=lambda i: shape[i])
 
 
+def spec_dp_dim(spec: P, dp_axes: Tuple[str, ...]) -> Optional[int]:
+    """The dimension a PartitionSpec shards over the dp axes (in FULL leaf
+    coordinates — stacked leading dims included), or None if the leaf is
+    dp-replicated. This is the shard coordinate the fused fsdp exchange
+    lays its group buffers out by."""
+    dp = set(dp_axes)
+    for i, ent in enumerate(spec):
+        if ent is None:
+            continue
+        names = ent if isinstance(ent, (tuple, list)) else (ent,)
+        if any(a in dp for a in names):
+            return i
+    return None
+
+
 def leaf_fsdp_spec(
     shape: Sequence[int],
     n_shards: int,
