@@ -15,6 +15,12 @@ The ``fsdp_*`` rows report the fused ZeRO-3 exchange
 group vs the per-leaf gather backward, with the sharded/replicated split
 taken from the train step's own ``plan_sharding_shapes``.
 
+The ``hier_*`` rows price the hierarchical two-level (ICI/DCN) exchange
+on the 2x16x16 multi-pod production mesh (dp = pod(2) x data(16)): per-link
+bytes and transmission times for flat (quantize over the combined dp axes)
+vs two_level (full-precision intra-pod mean, quantized Algorithm 2 over
+the pod/DCN axis only) — the quantized DCN traffic shrinks by ~1/16.
+
 Runnable standalone for CI smoke: ``PYTHONPATH=src:. python
 benchmarks/comm_cost.py --dry`` (reduced architecture set, prints the same
 CSV rows).
@@ -83,6 +89,42 @@ def fsdp_policy_rows(emit, model, shapes, path_sizes, tag: str):
         f"wire_saved_pct={100*(1-bytes_/pl_bytes):.1f}"))
 
 
+def hierarchy_rows(emit, path_sizes, tag: str):
+    """Flat vs two-level per-link cost on the 2x16x16 multi-pod mesh:
+    ICI (fast intra-pod) vs DCN (slow inter-pod) bytes per worker per
+    exchange, with times at the launch/mesh.py link bandwidths. The
+    acceptance bar is >= 4x fewer QUANTIZED DCN bytes for two_level."""
+    from repro.launch.mesh import DCN_BW, ICI_BW
+    n_inter, n_intra = 2, 16          # pod x data of the 2x16x16 mesh
+    n = sum(s for _, s in path_sizes)
+    policy = QuantPolicy.parse(MIXED_POLICY, bucket_size=512)
+    rows = {}
+    for mode, two in [("flat", False), ("two_level", True)]:
+        st = comm.link_stats(make_quantizer("orq-9", bucket_size=512), n,
+                             n_intra=n_intra, n_inter=n_inter,
+                             two_level=two)
+        pst, _ = comm.policy_link_stats(policy, path_sizes,
+                                        n_intra=n_intra, n_inter=n_inter,
+                                        two_level=two)
+        rows[mode] = st
+        emit(csv_row(
+            f"table1_comm/hier_{tag}_{mode}", 0.0,
+            f"mesh=2x16x16;dp=pod2*data16;scheme=orq-9;"
+            f"ici={st['ici_bytes']/2**20:.2f}MiB;"
+            f"dcn={st['dcn_bytes']/2**20:.2f}MiB;"
+            f"dcn_quant={st['dcn_q_bytes']/2**20:.2f}MiB;"
+            f"t_ici={st['ici_bytes']/ICI_BW*1e3:.2f}ms;"
+            f"t_dcn={st['dcn_bytes']/DCN_BW*1e3:.2f}ms;"
+            f"launches={int(st['launches'])};"
+            f"mixed_policy_dcn_quant={pst['dcn_q_bytes']/2**20:.2f}MiB"))
+    ratio = (rows["flat"]["dcn_q_bytes"]
+             / max(rows["two_level"]["dcn_q_bytes"], 1.0))
+    emit(csv_row(
+        f"table1_comm/hier_{tag}_dcn_saving", 0.0,
+        f"dcn_quant_flat_over_two_level={ratio:.1f}x;"
+        f"pass_4x={'yes' if ratio >= 4.0 else 'NO'}"))
+
+
 def policy_vs_uniform(emit, path_sizes, tag: str):
     """Partitioned per-group exchange for the mixed recipe vs uniform fp /
     orq-9: per-group launches and wire bytes per worker."""
@@ -143,6 +185,7 @@ def run(emit, dry: bool = False):
         fused_vs_per_leaf(emit, [s for _, s in ps], "lm-100m-smoke")
         policy_vs_uniform(emit, ps, "lm-100m-smoke")
         fsdp_policy_rows(emit, model, shapes, ps, "lm-100m-smoke")
+        hierarchy_rows(emit, ps, "lm-100m-smoke")
         return
     # assigned archs: fused-vs-per-leaf cost + one full exchange per method
     # (one abstract init trace per arch, reused for both)
@@ -152,6 +195,7 @@ def run(emit, dry: bool = False):
         fused_vs_per_leaf(emit, sizes, arch)
         policy_vs_uniform(emit, ps, arch)
         fsdp_policy_rows(emit, model, shapes, ps, arch)
+        hierarchy_rows(emit, ps, arch)
         n = sum(sizes)
         for m in ["fp", "terngrad", "orq-9"]:
             qz = make_quantizer(m, bucket_size=512)

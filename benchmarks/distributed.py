@@ -3,7 +3,10 @@ full Algorithm 2 exchange (worker-quantize -> all_to_all -> server-average
 -> re-quantize -> broadcast). Runs in a subprocess with 4 fake devices (the
 paper's ImageNet runs use 4 workers) and compares FP vs ORQ vs QSGD; also
 reports traced collective counts for the fused-vs-per-leaf exchange in both
-replicated and fsdp (ZeRO-3) modes."""
+replicated and fsdp (ZeRO-3) modes, and — on a second (2, 4) pod x data
+host mesh of 8 fake devices — the per-axis traced collective counts of the
+hierarchical two-level exchange (quantized all_to_all/all_gather over
+``pod`` only; full-precision reduce_scatter/all_gather over ``data``)."""
 from __future__ import annotations
 
 import json
@@ -86,17 +89,54 @@ print("RESULT " + json.dumps(out))
 """
 
 
-def run(emit):
+PROG_HIER = """
+import jax, json
+from repro.configs.base import get_smoke_config
+from repro.data import SyntheticLM
+from repro.models import LM
+from repro.optim.schedule import constant_lr
+from repro.train import TrainConfig, make_train_step
+from repro.train.step import init_state
+from repro.utils.jaxpr import collective_axis_counts
+
+cfg = get_smoke_config("lm-100m")
+model = LM(cfg)
+mesh = jax.make_mesh((2, 4), ("pod", "data"))
+data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=16, batch_size=8,
+                   seed=0)
+out = {}
+for mode in ("replicated", "fsdp"):
+    for hier in ("flat", "two_level"):
+        tcfg = TrainConfig(policy="orq-9", mode=mode, hierarchy=hier)
+        state = init_state(model, mesh, tcfg, jax.random.key(0))
+        step_fn, _ = make_train_step(model, mesh, tcfg, constant_lr(0.05))
+        closed = jax.make_jaxpr(step_fn)(state, data.batch(0),
+                                         jax.random.key(1))
+        counts = collective_axis_counts(closed)
+        out[f"{mode}/{hier}"] = {
+            f"{p}@{'*'.join(map(str, ax))}": n
+            for (p, ax), n in sorted(counts.items())
+            if p in ("all_to_all", "all_gather", "reduce_scatter",
+                     "psum_scatter")}
+print("RESULT " + json.dumps(out))
+"""
+
+
+def _run_prog(prog: str, n_devices: int) -> dict:
     env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     env["JAX_PLATFORMS"] = "cpu"
-    r = subprocess.run([sys.executable, "-c", textwrap.dedent(PROG)],
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(prog)],
                        env=env, capture_output=True, text=True,
                        timeout=3600)
     assert r.returncode == 0, r.stdout + r.stderr
     line = [l for l in r.stdout.splitlines() if l.startswith("RESULT")][0]
-    res = json.loads(line.split(" ", 1)[1])
+    return json.loads(line.split(" ", 1)[1])
+
+
+def run(emit):
+    res = _run_prog(PROG, 4)
     coll = res.pop("_collectives")
     fsdp = res.pop("_fsdp", None)
     for name, loss in res.items():
@@ -122,3 +162,18 @@ def run(emit):
           and res["orq-3"] <= res["terngrad"] + 0.15)
     emit(csv_row("table5_distributed/claims", 0.0,
                  f"ordering={'PASS' if ok else 'SOFT-FAIL'}"))
+
+    # hierarchical two-level exchange: per-axis traced collective counts
+    # on a (2, 4) pod x data host mesh (8 fake devices)
+    hier = _run_prog(PROG_HIER, 8)
+    for case, counts in hier.items():
+        body = ";".join(f"{k}={v}" for k, v in sorted(counts.items()))
+        emit(csv_row(
+            f"table5_distributed/hier_{case.replace('/', '_')}", 0.0,
+            f"mesh=2x4(pod*data);{body}"))
+    two = hier["replicated/two_level"]
+    quant_on_data = any("@" in k and "data" in k.split("@")[1]
+                        for k in two if k.startswith("all_to_all"))
+    emit(csv_row(
+        "table5_distributed/hier_claims", 0.0,
+        f"quantized_a2a_pod_only={'PASS' if not quant_on_data else 'FAIL'}"))

@@ -4,6 +4,19 @@ Arrays are fetched to host (fully addressable or replicated views) and
 written as a flat npz keyed by the pytree key-path; a JSON manifest records
 the treedef so restore round-trips arbitrary nests of dict/tuple/list and
 NamedTuple-free optimizer states. Scalars and step counters ride along.
+
+Crash safety: both files are written to temp paths and committed with
+``os.replace``, and the manifest is ALSO embedded inside the npz itself
+(``__manifest__`` entry), so the npz replace is the single atomic commit
+point — a crash mid-save can never leave a manifest pointing at a stale or
+truncated npz; the previous checkpoint stays loadable. The external
+``.manifest.json`` is kept for inspection and for checkpoints written by
+older versions.
+
+Restore is strict: shape mismatches, dtype mismatches (an f32 checkpoint
+restored into a bf16 leaf would otherwise truncate silently), and
+missing/extra keys all raise ``ValueError`` naming the offending key —
+never ``assert`` (stripped under ``python -O``) and never a silent cast.
 """
 from __future__ import annotations
 
@@ -21,29 +34,72 @@ def _flatten(tree):
             for path, leaf in leaves}
 
 
+def _npz_path(path: str) -> str:
+    return path if path.endswith(".npz") else path + ".npz"
+
+
 def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten(tree)
     order = sorted(flat)
-    np.savez_compressed(path, **{f"arr_{i}": flat[k]
-                                 for i, k in enumerate(order)})
     manifest = {"keys": order, "step": step}
-    with open(path + ".manifest.json", "w") as f:
+    npz = _npz_path(path)
+    tmp = npz + ".tmp"
+    # file-object write: np.savez must not append its own ".npz" suffix to
+    # the temp name. A crash here leaves only *.tmp litter — the committed
+    # files are untouched until os.replace below.
+    with open(tmp, "wb") as f:
+        np.savez_compressed(
+            f, __manifest__=np.asarray(json.dumps(manifest)),
+            **{f"arr_{i}": flat[k] for i, k in enumerate(order)})
+    os.replace(tmp, npz)     # the atomic commit point
+    mpath = path + ".manifest.json"
+    tmp_m = mpath + ".tmp"
+    with open(tmp_m, "w") as f:
         json.dump(manifest, f)
+    os.replace(tmp_m, mpath)
+
+
+def _load_manifest(path: str, data) -> dict:
+    if "__manifest__" in data:
+        return json.loads(str(data["__manifest__"][()]))
+    # pre-embedding checkpoints: external manifest only
+    with open(path + ".manifest.json") as f:
+        return json.load(f)
 
 
 def load_checkpoint(path: str, like: Any):
-    """Restore into the structure of ``like`` (shapes must match)."""
-    with open(path + ".manifest.json") as f:
-        manifest = json.load(f)
-    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    """Restore into the structure of ``like``. Shapes AND dtypes must match
+    exactly; key set mismatches raise with the offending paths named."""
+    data = np.load(_npz_path(path))
+    manifest = _load_manifest(path, data)
     by_key = {k: data[f"arr_{i}"] for i, k in enumerate(manifest["keys"])}
 
     paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    want_keys = [jax.tree_util.keystr(p) for p, _ in paths]
+    missing = [k for k in want_keys if k not in by_key]
+    extra = sorted(set(by_key) - set(want_keys))
+    if missing or extra:
+        raise ValueError(
+            f"checkpoint {path!r} does not match the restore target: "
+            f"missing keys {missing[:5]}{'...' if len(missing) > 5 else ''} "
+            f"(total {len(missing)}), extra keys "
+            f"{extra[:5]}{'...' if len(extra) > 5 else ''} "
+            f"(total {len(extra)})")
+
     leaves = []
-    for path_, leaf in paths:
-        key = jax.tree_util.keystr(path_)
+    for key, (_, leaf) in zip(want_keys, paths):
         arr = by_key[key]
-        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"checkpoint leaf {key!r} has shape {tuple(arr.shape)} but "
+                f"the restore target expects {tuple(leaf.shape)}")
+        want_dtype = np.dtype(leaf.dtype)
+        if np.dtype(arr.dtype) != want_dtype:
+            raise ValueError(
+                f"checkpoint leaf {key!r} has dtype {arr.dtype} but the "
+                f"restore target expects {want_dtype}; refusing to cast "
+                f"silently — convert the checkpoint (or the target tree) "
+                f"explicitly if the narrowing is intended")
         leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves), manifest["step"]

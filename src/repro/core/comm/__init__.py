@@ -11,6 +11,11 @@
 This package replaces the former ``repro.core.comm`` monolith; every name
 that module exported (including the historical private helpers some tests
 reach for) is re-exported here so old call sites keep working unmodified.
+
+``hierarchical`` adds the two-level (ICI/DCN) mode: axis splitting
+(``split_dp_axes``), the full-precision intra-pod scatter/gather
+primitives, and the per-link accounting (``link_stats`` /
+``policy_link_stats``) that prices ICI vs DCN bytes separately.
 """
 from repro.core.comm.collectives import (_names, _rs_mean_parts, axis_size,
                                          local_qdq_comm_layout,
@@ -20,8 +25,13 @@ from repro.core.comm.collectives import (_names, _rs_mean_parts, axis_size,
 from repro.core.comm.exchange import (GradientExchange, GradLayout,
                                       GroupSegment, LeafSlot,
                                       PartitionedExchange, PolicyLayout,
-                                      fused_stats, per_leaf_stats,
+                                      fused_stats, link_stats,
+                                      per_leaf_stats, policy_link_stats,
                                       policy_stats)
+from repro.core.comm.hierarchical import (intra_all_gather, intra_chunk_len,
+                                          intra_reduce_scatter_mean,
+                                          resolve_hierarchy,
+                                          shard_valid_mask, split_dp_axes)
 from repro.core.comm.fsdp_exchange import (FsdpExchange, FsdpGroup,
                                            FsdpLayout, FsdpSlot,
                                            make_fused_tree_gather,
@@ -52,4 +62,12 @@ __all__ = [
     "fused_stats",
     "per_leaf_stats",
     "policy_stats",
+    "link_stats",
+    "policy_link_stats",
+    "resolve_hierarchy",
+    "split_dp_axes",
+    "intra_all_gather",
+    "intra_chunk_len",
+    "intra_reduce_scatter_mean",
+    "shard_valid_mask",
 ]

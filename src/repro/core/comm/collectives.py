@@ -96,6 +96,16 @@ def _rs_mean_parts(parts, valid, qz: Quantizer, key, names, use_kernels):
     return mean_bkt.reshape(-1)[:chunk]
 
 
+def _valid_parts(valid, n: int, L: int, chunk: int) -> jnp.ndarray:
+    """(L, chunk) bool validity for an (n,) buffer split into L chunks.
+    ``valid`` optionally overrides the default arange<n mask — the
+    hierarchical exchange passes the GLOBAL validity of an intra-scattered
+    shard so its padding can't skew level fits."""
+    if valid is None:
+        return (jnp.arange(L * chunk) < n).reshape(L, chunk)
+    return jnp.pad(valid, (0, L * chunk - n)).reshape(L, chunk)
+
+
 def quantized_reduce_scatter_mean(
     flat: jnp.ndarray,
     qz: Quantizer,
@@ -104,6 +114,7 @@ def quantized_reduce_scatter_mean(
     *,
     worker_id=None,
     use_kernels: bool = True,
+    valid=None,
 ) -> jnp.ndarray:
     """Each worker holds a full local gradient ``flat`` (n,). Returns this
     worker's (chunk,) slice of the across-worker *mean*, chunk = ceil(n/L).
@@ -111,7 +122,8 @@ def quantized_reduce_scatter_mean(
 
     ``worker_id`` defaults to ``axis_index`` of the dp axes; custom-VJP
     backward callers must pass it explicitly (axis_index cannot lower from
-    transposed/hoisted contexts)."""
+    transposed/hoisted contexts). ``valid`` optionally marks which of the
+    n positions are real data (default: all of them)."""
     n = flat.shape[0]
     names = _names(axis_names)
     L = axis_size(names)
@@ -121,7 +133,7 @@ def quantized_reduce_scatter_mean(
         return lax.psum_scatter(
             padded.reshape(L, chunk), names, scatter_dimension=0,
             tiled=False) / L
-    valid = (jnp.arange(L * chunk) < n).reshape(L, chunk)
+    valid = _valid_parts(valid, n, L, chunk)
     if worker_id is None:
         worker_id = lax.axis_index(names)
     key = jax.random.fold_in(key, worker_id)
@@ -141,10 +153,12 @@ def local_qdq_comm_layout(
     *,
     worker_id=None,
     use_kernels: bool = True,
+    valid=None,
 ) -> jnp.ndarray:
     """This worker's own dequantized gradient, bit-identical to what it
     contributed to ``quantized_reduce_scatter_mean`` (same chunk/bucket
-    layout, same folded key). Used by error feedback: e ← g − Q⁻¹(Q(g))."""
+    layout, same folded key, same ``valid`` mask). Used by error feedback:
+    e ← g − Q⁻¹(Q(g))."""
     n = flat.shape[0]
     names = _names(axis_names)
     L = axis_size(names)
@@ -153,8 +167,7 @@ def local_qdq_comm_layout(
     d_eff = _bucket_len(chunk, qz.bucket_size)
     pad2 = -(-chunk // d_eff) * d_eff - chunk
     parts = jnp.pad(padded.reshape(L, chunk), ((0, 0), (0, pad2)))
-    valid = jnp.pad((jnp.arange(L * chunk) < n).reshape(L, chunk),
-                    ((0, 0), (0, pad2)))
+    valid = jnp.pad(_valid_parts(valid, n, L, chunk), ((0, 0), (0, pad2)))
     bkt = parts.reshape(-1, d_eff)
     mask = valid.reshape(-1, d_eff)
     levels = qz.fit(bkt, mask)
@@ -176,9 +189,12 @@ def quantized_all_reduce_mean(
     worker_id=None,
     server_requant: bool = True,
     use_kernels: bool = True,
+    valid=None,
 ) -> jnp.ndarray:
     """Full Algorithm 2 exchange. Returns the (n,) mean gradient, identical
-    on every worker (the phase-2 decode is deterministic)."""
+    on every worker (the phase-2 decode is deterministic). ``valid``
+    optionally marks the real positions of ``flat`` (both phases fit their
+    levels on valid data only)."""
     n = flat.shape[0]
     names = _names(axis_names)
     L = axis_size(names)
@@ -187,7 +203,8 @@ def quantized_all_reduce_mean(
 
     chunk = -(-n // L)
     mean_chunk = quantized_reduce_scatter_mean(
-        flat, qz, key, names, worker_id=worker_id, use_kernels=use_kernels)
+        flat, qz, key, names, worker_id=worker_id, use_kernels=use_kernels,
+        valid=valid)
 
     if not server_requant:
         full = lax.all_gather(mean_chunk, names, axis=0, tiled=False)
@@ -198,8 +215,14 @@ def quantized_all_reduce_mean(
     d_eff = _bucket_len(chunk, qz.bucket_size)
     pad = -(-chunk // d_eff) * d_eff - chunk
     bkt = jnp.pad(mean_chunk, (0, pad)).reshape(-1, d_eff)
-    pos = me * chunk + jnp.arange(chunk + pad)
-    mask = ((pos < n) & (jnp.arange(chunk + pad) < chunk)).reshape(-1, d_eff)
+    if valid is None:
+        pos = me * chunk + jnp.arange(chunk + pad)
+        mask = (pos < n) & (jnp.arange(chunk + pad) < chunk)
+    else:
+        vchunk = lax.dynamic_slice(
+            jnp.pad(valid, (0, L * chunk - n)), (me * chunk,), (chunk,))
+        mask = jnp.pad(vchunk, (0, pad))
+    mask = mask.reshape(-1, d_eff)
     key2 = jax.random.fold_in(jax.random.fold_in(key, 0x5EC0), me)
     words, levels = wire.encode(qz, bkt, mask, key2, use_kernels=use_kernels)
     words = lax.all_gather(words, names, axis=0, tiled=False)

@@ -39,9 +39,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from jax import lax
+
 from repro.core.api import QuantConfig
-from repro.core.comm import wire
-from repro.core.comm.collectives import (local_qdq_comm_layout,
+from repro.core.comm import hierarchical, wire
+from repro.core.comm.collectives import (_names, local_qdq_comm_layout,
                                          quantized_all_reduce_mean)
 from repro.core.policy import QuantPolicy
 from repro.core.quantizers import Quantizer
@@ -127,12 +129,22 @@ class GradLayout:
 class GradientExchange:
     """Fused Algorithm 2 exchange over a GradLayout's flat buffer.
 
+    ``axis_names`` is the QUANTIZED (inter/DCN) axis tuple. When
+    ``intra_axes`` is non-empty the exchange runs hierarchically (the
+    two-level ICI/DCN mode, see ``core/comm/hierarchical.py``): a
+    full-precision reduce-scatter-mean over the fast intra axes first,
+    the quantized Algorithm 2 only on the resulting shard over
+    ``axis_names``, and a final full-precision all-gather back over the
+    intra axes. With ``intra_axes=()`` (the default) this is the flat
+    exchange, bit-identical to the pre-hierarchy engine.
+
     ``max_chunk_elems`` optionally caps the per-collective buffer size (a
-    memory-control knob for very large models): the fused buffer is split
-    into ceil(n / cap) contiguous spans, each exchanged independently with
-    a per-span folded key. Launches stay O(n / cap), independent of leaf
-    count. ``local_qdq_flat`` applies the identical span/key schedule, so
-    error-feedback residuals remain bit-consistent with what was sent.
+    memory-control knob for very large models): the (shard) buffer is
+    split into ceil(n / cap) contiguous spans, each exchanged
+    independently with a per-span folded key. Launches stay O(n / cap),
+    independent of leaf count. ``local_qdq_flat``/``local_qdq_shard``
+    apply the identical span/key schedule, so error-feedback residuals
+    remain bit-consistent with what was sent.
     """
 
     qz: Quantizer
@@ -140,12 +152,19 @@ class GradientExchange:
     server_requant: bool = True
     use_kernels: bool = True
     max_chunk_elems: Optional[int] = None
+    intra_axes: Tuple[str, ...] = ()
 
     def __post_init__(self):
         if self.max_chunk_elems is not None and self.max_chunk_elems <= 0:
             raise ValueError(
                 f"max_chunk_elems must be positive, got "
                 f"{self.max_chunk_elems}")
+        if self.intra_axes:
+            overlap = set(_names(self.intra_axes)) & set(
+                _names(self.axis_names))
+            if overlap:
+                raise ValueError(
+                    f"intra_axes and axis_names overlap: {sorted(overlap)}")
 
     # -- span schedule (static) -------------------------------------------
     def spans(self, n: int) -> List[Tuple[int, int]]:
@@ -157,32 +176,96 @@ class GradientExchange:
     def _span_key(self, key: jax.Array, i: int) -> jax.Array:
         return jax.random.fold_in(key, i) if self.max_chunk_elems else key
 
+    # -- hierarchical (two-level) helpers ----------------------------------
+    def _intra_fold(self, key: jax.Array, intra_id=None) -> jax.Array:
+        """Decorrelate the rounding stream across intra shards (each shard
+        quantizes different data). ``intra_id`` must be passed from the
+        primal context by custom-VJP callers; no fold in flat mode, so the
+        degenerate two_level key schedule equals the flat one."""
+        if not self.intra_axes:
+            return key
+        if intra_id is None:
+            intra_id = lax.axis_index(_names(self.intra_axes))
+        return jax.random.fold_in(key, intra_id)
+
+    def intra_scatter(self, flat: jnp.ndarray):
+        """(n,) buffer -> (shard, valid) after the full-precision intra
+        reduce-scatter-mean; ``(flat, None)`` in flat mode."""
+        if not self.intra_axes:
+            return flat, None
+        return (hierarchical.intra_reduce_scatter_mean(flat, self.intra_axes),
+                hierarchical.shard_valid_mask(flat.shape[0], self.intra_axes))
+
+    def intra_gather(self, shard: jnp.ndarray, n: int) -> jnp.ndarray:
+        """Inverse of :meth:`intra_scatter` (full-precision all_gather)."""
+        if not self.intra_axes:
+            return shard
+        return hierarchical.intra_all_gather(shard, self.intra_axes, n)
+
     # -- distributed paths (inside shard_map over the dp axes) -------------
-    def exchange_flat(self, flat: jnp.ndarray, key: jax.Array, *,
-                      worker_id=None) -> jnp.ndarray:
-        """(n,) local gradient buffer -> (n,) across-worker mean, identical
-        on every worker. One quantized all-reduce per span."""
+    def exchange_shard(self, shard: jnp.ndarray, key: jax.Array, *,
+                       valid=None, worker_id=None,
+                       intra_id=None) -> jnp.ndarray:
+        """Quantized Algorithm 2 all-reduce of an (already intra-averaged)
+        shard over the quantized ``axis_names`` only. One quantized
+        all-reduce per span; ``valid`` masks scatter padding out of the
+        level fits."""
+        key = self._intra_fold(key, intra_id)
         outs = [
             quantized_all_reduce_mean(
-                flat[a:b], self.qz, self._span_key(key, i), self.axis_names,
+                shard[a:b], self.qz, self._span_key(key, i), self.axis_names,
                 worker_id=worker_id, server_requant=self.server_requant,
-                use_kernels=self.use_kernels)
-            for i, (a, b) in enumerate(self.spans(flat.shape[0]))
+                use_kernels=self.use_kernels,
+                valid=None if valid is None else valid[a:b])
+            for i, (a, b) in enumerate(self.spans(shard.shape[0]))
         ]
         return outs[0] if len(outs) == 1 else jnp.concatenate(outs)
+
+    def local_qdq_shard(self, shard: jnp.ndarray, key: jax.Array, *,
+                        valid=None, worker_id=None,
+                        intra_id=None) -> jnp.ndarray:
+        """This worker's own dequantized shard, bit-identical to its
+        :meth:`exchange_shard` phase-1 contribution (same spans, same
+        folded keys, same mask). Error feedback in two-level mode lives on
+        this shard — the quantized (inter) axis only."""
+        key = self._intra_fold(key, intra_id)
+        outs = [
+            local_qdq_comm_layout(
+                shard[a:b], self.qz, self._span_key(key, i), self.axis_names,
+                worker_id=worker_id, use_kernels=self.use_kernels,
+                valid=None if valid is None else valid[a:b])
+            for i, (a, b) in enumerate(self.spans(shard.shape[0]))
+        ]
+        return outs[0] if len(outs) == 1 else jnp.concatenate(outs)
+
+    def exchange_flat(self, flat: jnp.ndarray, key: jax.Array, *,
+                      worker_id=None, intra_id=None) -> jnp.ndarray:
+        """(n,) local gradient buffer -> (n,) across-worker mean, identical
+        on every worker. Flat mode: one quantized all-reduce per span.
+        Two-level mode: fp intra scatter -> quantized shard exchange over
+        the inter axes -> fp intra gather (``worker_id``/``intra_id`` are
+        the INTER/INTRA axis indices for custom-VJP callers)."""
+        if not self.intra_axes:
+            return self.exchange_shard(flat, key, worker_id=worker_id)
+        n = flat.shape[0]
+        shard, valid = self.intra_scatter(flat)
+        mean = self.exchange_shard(shard, key, valid=valid,
+                                   worker_id=worker_id, intra_id=intra_id)
+        return self.intra_gather(mean, n)
 
     def local_qdq_flat(self, flat: jnp.ndarray, key: jax.Array, *,
                        worker_id=None) -> jnp.ndarray:
         """This worker's own dequantized fused buffer, bit-identical to its
         phase-1 contribution (same spans, same chunk/bucket layout, same
-        folded keys). Error feedback: e ← g − Q⁻¹(Q(g)) on the FUSED layout."""
-        outs = [
-            local_qdq_comm_layout(
-                flat[a:b], self.qz, self._span_key(key, i), self.axis_names,
-                worker_id=worker_id, use_kernels=self.use_kernels)
-            for i, (a, b) in enumerate(self.spans(flat.shape[0]))
-        ]
-        return outs[0] if len(outs) == 1 else jnp.concatenate(outs)
+        folded keys). Error feedback: e ← g − Q⁻¹(Q(g)) on the FUSED layout.
+        Flat mode only — two-level error feedback lives on the intra shard
+        (:meth:`local_qdq_shard`), not the full buffer."""
+        if self.intra_axes:
+            raise ValueError(
+                "local_qdq_flat is the flat-mode residual; a two-level "
+                "engine's residual lives on the intra shard — use "
+                "intra_scatter + local_qdq_shard")
+        return self.local_qdq_shard(flat, key, worker_id=worker_id)
 
     def exchange(self, tree, key: jax.Array, *, layout: Optional[GradLayout]
                  = None, worker_id=None):
@@ -371,15 +454,24 @@ class PartitionedExchange:
     @classmethod
     def build(cls, policy: QuantPolicy, tree, axis_names, *, paths=None,
               use_kernels: bool = True,
-              max_chunk_elems: Optional[int] = None) -> "PartitionedExchange":
+              max_chunk_elems: Optional[int] = None,
+              intra_axes: Tuple[str, ...] = ()) -> "PartitionedExchange":
+        """``axis_names`` is the QUANTIZED (inter) axis tuple; a non-empty
+        ``intra_axes`` turns every group engine hierarchical (two-level
+        ICI/DCN mode — see ``GradientExchange``)."""
         layout = PolicyLayout.from_tree(tree, policy, paths=paths)
         engines = tuple(
             GradientExchange(
                 g.cfg.to_quantizer(), axis_names,
                 server_requant=g.cfg.server_requant,
-                use_kernels=use_kernels, max_chunk_elems=max_chunk_elems)
+                use_kernels=use_kernels, max_chunk_elems=max_chunk_elems,
+                intra_axes=tuple(intra_axes))
             for g in layout.groups)
         return cls(layout=layout, engines=engines)
+
+    @property
+    def intra_axes(self) -> Tuple[str, ...]:
+        return self.engines[0].intra_axes if self.engines else ()
 
     def _group_key(self, key: jax.Array, gi: int) -> jax.Array:
         # single group == the uniform fused exchange: key stays unfolded so
@@ -416,6 +508,53 @@ class PartitionedExchange:
         bufs = self.layout.flatten_groups(tree)
         return self.layout.unflatten_groups(
             self.exchange_parts(bufs, key, worker_id=worker_id))
+
+    # -- two-level (hierarchical) shard-part paths -------------------------
+    def intra_scatter_parts(self, bufs: Sequence[jnp.ndarray]):
+        """Per-group fp intra reduce-scatter-mean: (shards, valids)."""
+        pairs = [eng.intra_scatter(buf)
+                 for eng, buf in zip(self.engines, bufs)]
+        return tuple(p[0] for p in pairs), tuple(p[1] for p in pairs)
+
+    def exchange_shard_parts(self, shards: Sequence[jnp.ndarray],
+                             key: jax.Array, valids, *,
+                             worker_id=None) -> Tuple[jnp.ndarray, ...]:
+        """Per-group quantized shard exchange over the inter axes (the key
+        schedule matches :meth:`exchange_parts` group folding)."""
+        return tuple(
+            eng.exchange_shard(s, self._group_key(key, gi), valid=v,
+                               worker_id=worker_id)
+            for gi, (eng, s, v) in enumerate(zip(self.engines, shards,
+                                                 valids)))
+
+    def local_qdq_shard_parts(self, shards: Sequence[jnp.ndarray],
+                              key: jax.Array, valids, *,
+                              worker_id=None) -> Tuple[jnp.ndarray, ...]:
+        """Per-group fused local shard quantize->dequantize, bit-consistent with
+        :meth:`exchange_shard_parts`; identity groups pass through
+        unchanged (zero residual)."""
+        return tuple(
+            s if eng.qz.is_identity
+            else eng.local_qdq_shard(s, self._group_key(key, gi), valid=v,
+                                     worker_id=worker_id)
+            for gi, (eng, s, v) in enumerate(zip(self.engines, shards,
+                                                 valids)))
+
+    def intra_gather_parts(self, shards: Sequence[jnp.ndarray]
+                           ) -> Tuple[jnp.ndarray, ...]:
+        """Per-group fp intra all-gather back to full group buffers."""
+        return tuple(
+            eng.intra_gather(s, g.size)
+            for eng, s, g in zip(self.engines, shards, self.layout.groups))
+
+    def ef_shard_sizes(self, n_intra: int) -> Tuple[Optional[int], ...]:
+        """Per-group two-level error-feedback residual lengths (one intra
+        shard per worker — the residual lives on the quantized inter axis
+        only); None for identity groups (nothing to feed back)."""
+        return tuple(
+            None if eng.qz.is_identity
+            else hierarchical.intra_chunk_len(g.size, n_intra)
+            for eng, g in zip(self.engines, self.layout.groups))
 
     # -- single-device path ------------------------------------------------
     def qdq_local_parts(self, bufs: Sequence[jnp.ndarray],
@@ -473,6 +612,90 @@ def policy_stats(policy: QuantPolicy, path_sizes, n_workers: int, *,
         bytes_ += eng.wire_bytes_per_worker(n, n_workers)
         labels.append(cfg.name)
     return launches, bytes_, tuple(labels)
+
+
+def link_stats(qz: Quantizer, n: int, *, n_intra: int, n_inter: int,
+               two_level: bool, server_requant: bool = True,
+               sharded: bool = False,
+               max_chunk_elems: Optional[int] = None) -> Dict[str, float]:
+    """Per-LINK wire bytes one worker transmits for ONE exchange of ``n``
+    elements on an (n_inter pods) x (n_intra chips/pod) dp mesh:
+
+        ici_bytes    bytes on the fast intra-pod (ICI) links
+        dcn_bytes    bytes crossing the slow inter-pod (DCN) boundary
+        dcn_q_bytes  the quantized subset of dcn_bytes (the paper's wire)
+        launches     collective launches (incl. the fp intra phases)
+
+    Traffic model: all_to_all/all_gather traffic is uniformly addressed, so
+    the fraction (n_inter-1)/n_inter of a flat collective's bytes crosses
+    pods; ring reduce-scatter/all-gather over one axis sends
+    (L-1)/L * payload per worker. ``sharded=True`` accounts the fsdp
+    phase-1-only reduce-scatter (no downlink; the parameter all-gather
+    belongs to the forward). Convert to seconds with the ``launch/mesh.py``
+    bandwidth constants (ICI_BW / DCN_BW)."""
+    L = n_intra * n_inter
+    dcn_frac = (n_inter - 1) / n_inter if n_inter > 1 else 0.0
+    if not two_level:
+        if sharded:
+            launches, total = GradientExchange.rs_stats(qz, n, L)
+        else:
+            eng = GradientExchange(qz, ("dp",),
+                                   server_requant=server_requant,
+                                   max_chunk_elems=max_chunk_elems)
+            launches = eng.collective_launches(n)
+            total = eng.wire_bytes_per_worker(n, L)
+        dcn = total * dcn_frac
+        return {"ici_bytes": total - dcn, "dcn_bytes": dcn,
+                "dcn_q_bytes": 0.0 if qz.is_identity else dcn,
+                "launches": float(launches)}
+    # two-level: fp intra phases + quantized inter exchange of the shard
+    shard = -(-n // n_intra)
+    ici = 4.0 * n * (n_intra - 1) / n_intra        # intra reduce-scatter
+    launches = 1
+    if sharded:
+        l_i, inter_total = GradientExchange.rs_stats(qz, shard, n_inter)
+    else:
+        eng = GradientExchange(qz, ("pod",), server_requant=server_requant,
+                               max_chunk_elems=max_chunk_elems)
+        l_i = eng.collective_launches(shard)
+        inter_total = eng.wire_bytes_per_worker(shard, n_inter)
+        ici += 4.0 * n * (n_intra - 1) / n_intra   # final intra all-gather
+        launches += 1
+    launches += l_i
+    dcn = inter_total * dcn_frac
+    return {"ici_bytes": ici + inter_total - dcn, "dcn_bytes": dcn,
+            "dcn_q_bytes": 0.0 if qz.is_identity else dcn,
+            "launches": float(launches)}
+
+
+def policy_link_stats(policy: QuantPolicy, path_sizes, *, n_intra: int,
+                      n_inter: int, two_level: bool, sharded_paths=None,
+                      max_chunk_elems: Optional[int] = None
+                      ) -> Tuple[Dict[str, float], Tuple[str, ...]]:
+    """Aggregate :func:`link_stats` over a policy's groups (the per-link
+    sibling of :func:`policy_stats`): returns the summed per-link dict and
+    the group labels. Sharded leaves (fsdp reduce-scatter, phase-1 only)
+    are rounded up to a worker multiple like in :func:`policy_stats`."""
+    L = n_intra * n_inter
+    sharded_paths = frozenset(sharded_paths or ())
+    groups: Dict[Tuple[QuantConfig, bool], int] = {}
+    for path, size in path_sizes:
+        key = (policy.resolve(path), path in sharded_paths)
+        groups[key] = groups.get(key, 0) + int(size)
+    total = {"ici_bytes": 0.0, "dcn_bytes": 0.0, "dcn_q_bytes": 0.0,
+             "launches": 0.0}
+    labels = []
+    for (cfg, sharded), n in groups.items():
+        if sharded:
+            n = -(-n // L) * L
+        st = link_stats(cfg.to_quantizer(), n, n_intra=n_intra,
+                        n_inter=n_inter, two_level=two_level,
+                        server_requant=cfg.server_requant, sharded=sharded,
+                        max_chunk_elems=max_chunk_elems)
+        for k in total:
+            total[k] += st[k]
+        labels.append(f"{cfg.name}/rs" if sharded else cfg.name)
+    return total, tuple(labels)
 
 
 def per_leaf_stats(qz: Quantizer, sizes: Sequence[int], n_workers: int, *,

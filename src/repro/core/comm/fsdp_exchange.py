@@ -55,7 +55,7 @@ from repro.core.api import QuantConfig
 from repro.core.comm.collectives import (_names, _rs_mean_parts, axis_size,
                                          local_qdq_comm_layout,
                                          quantized_reduce_scatter_mean)
-from repro.core.comm.exchange import GradientExchange
+from repro.core.comm.exchange import GradientExchange, link_stats
 from repro.core.policy import QuantPolicy
 from repro.core.quantizers import Quantizer
 from repro.utils.pytree import tree_flatten_with_path_strs
@@ -273,35 +273,88 @@ class FsdpExchange:
     groups run the full Algorithm 2 all-reduce via a ``GradientExchange``.
     ``exchange_bufs``/``residual_bufs`` share one key schedule so
     error-feedback residuals stay bit-consistent with what was sent.
+
+    With ``intra_axes`` set (the two-level ICI/DCN mode, see
+    ``core/comm/hierarchical.py``) every group's quantized phase runs over
+    the inter (``pod``) axes only, on data already averaged in full
+    precision over the fast intra axes:
+
+      * sharded groups: the worker-major buffer ``(L_p, L_i, chunk)`` is
+        fp-psum_scattered over the intra axes (each worker keeps the
+        intra-mean rows destined for its data-column across pods), then
+        quantized-reduce-scattered over ``pod`` — the DCN uplink shrinks
+        by 1/L_i and each worker still ends with exactly its param-shard
+        mean chunk;
+      * replicated groups: fp intra scatter -> quantized Algorithm 2 over
+        ``pod`` -> fp intra gather (``GradientExchange`` two-level mode).
+
+    Error-feedback residuals then live on the intra SHARD — the quantized
+    inter axis only — so ``ef_group_sizes`` shrinks by the same 1/L_i.
     """
 
     layout: FsdpLayout
     engines: Tuple[GradientExchange, ...]    # aligned with layout.groups;
                                              # sharded groups use only .qz
+    dp_axes: Tuple[str, ...] = ("data",)     # FULL ordered dp tuple (the
+                                             # parameter all-gather axes)
+    intra_axes: Tuple[str, ...] = ()         # fast fp axes; () = flat
+    n_intra: int = 1                         # static size of intra_axes
     use_kernels: bool = True
 
     @classmethod
     def build(cls, policy: QuantPolicy, tree, axis_names, *, paths,
               shard_dims, n_shards: int, use_kernels: bool = True,
-              max_chunk_elems: Optional[int] = None) -> "FsdpExchange":
-        """``max_chunk_elems`` caps replicated-group collectives only: a
+              max_chunk_elems: Optional[int] = None,
+              intra_axes=(), n_intra: int = 1) -> "FsdpExchange":
+        """``axis_names`` is the FULL ordered dp tuple; a non-empty
+        ``intra_axes`` (with its static size ``n_intra``) switches on the
+        two-level mode — the quantized collectives then run over the
+        remaining (inter) axes only, which must precede the intra axes in
+        ``axis_names`` (the worker-major rows are inter-major).
+        ``max_chunk_elems`` caps replicated-group collectives only: a
         sharded group's buffer must reduce-scatter in one piece (its rows
         are the worker chunks)."""
+        dp = _names(axis_names)
+        intra = tuple(intra_axes)
+        inter = tuple(a for a in dp if a not in intra)
+        if intra:
+            if dp != inter + intra:
+                raise ValueError(
+                    f"inter axes {inter} must precede intra axes {intra} "
+                    f"in the dp tuple {dp} (worker-major rows are "
+                    f"inter-major)")
+            if n_intra <= 1 or n_shards % n_intra:
+                raise ValueError(
+                    f"n_intra must be > 1 and divide n_shards="
+                    f"{n_shards}, got {n_intra}")
+        else:
+            n_intra = 1
         layout = FsdpLayout.from_tree(tree, policy, paths=paths,
                                       shard_dims=shard_dims,
                                       n_shards=n_shards)
         engines = tuple(
             GradientExchange(
-                g.cfg.to_quantizer(), axis_names,
+                g.cfg.to_quantizer(), inter,
                 server_requant=g.cfg.server_requant,
                 use_kernels=use_kernels,
-                max_chunk_elems=None if g.sharded else max_chunk_elems)
+                max_chunk_elems=None if g.sharded else max_chunk_elems,
+                intra_axes=intra)
             for g in layout.groups)
-        return cls(layout=layout, engines=engines, use_kernels=use_kernels)
+        return cls(layout=layout, engines=engines, dp_axes=dp,
+                   intra_axes=intra, n_intra=n_intra,
+                   use_kernels=use_kernels)
 
     @property
     def axis_names(self):
-        return self.engines[0].axis_names if self.engines else ()
+        return self.dp_axes
+
+    @property
+    def inter_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in self.dp_axes if a not in self.intra_axes)
+
+    @property
+    def n_inter(self) -> int:
+        return self.layout.n_shards // self.n_intra
 
     @property
     def is_identity(self) -> bool:
@@ -311,63 +364,189 @@ class FsdpExchange:
         # mirrors PartitionedExchange: a single group keeps the unfolded key
         return key if len(self.engines) == 1 else jax.random.fold_in(key, gi)
 
+    def _split_wid(self, worker_id):
+        """Combined dp worker id -> (inter_id, intra_id). The combined
+        enumeration is inter-major (inter axes precede intra axes), so the
+        split is arithmetic — no extra primal-context captures needed."""
+        if not self.intra_axes:
+            return worker_id, None
+        return worker_id // self.n_intra, worker_id % self.n_intra
+
+    # -- two-level sharded-group primitive ---------------------------------
+    def _sharded_intra_scatter(self, buf: jnp.ndarray) -> jnp.ndarray:
+        """(L_p*L_i*chunk,) worker-major group buffer -> this worker's
+        (L_p*chunk,) fp intra-mean: the rows destined for its data-column
+        across all pods (exactly what the quantized inter reduce-scatter
+        consumes)."""
+        L = self.layout.n_shards
+        chunk = buf.shape[0] // L
+        parts = buf.reshape(self.n_inter, self.n_intra, chunk)
+        intra_mean = lax.psum_scatter(
+            parts, _names(self.intra_axes), scatter_dimension=1,
+            tiled=False) / self.n_intra
+        return intra_mean.reshape(-1)
+
     # -- distributed paths (inside shard_map over the dp axes) -------------
-    def exchange_bufs(self, bufs: Sequence[jnp.ndarray], key: jax.Array,
-                      worker_id) -> Tuple[jnp.ndarray, ...]:
-        """Per-group local cotangent buffers -> per-group outputs: sharded
-        groups get this worker's (size/L,) mean chunk, replicated groups
-        the full (size,) mean. ``worker_id`` must come from the primal
-        context (axis_index cannot lower in transposed contexts)."""
-        outs = []
+    def exchange_with_residuals(
+        self, bufs: Sequence[jnp.ndarray], key: jax.Array, worker_id,
+        ef_bufs=None,
+    ) -> Tuple[Tuple[jnp.ndarray, ...], Optional[Tuple[Any, ...]]]:
+        """The one-pass backward exchange: per-group local cotangent
+        buffers -> (per-group outputs, new EF residuals or None).
+
+        ``worker_id`` is the COMBINED dp axis index captured in the primal
+        context (axis_index cannot lower in transposed contexts).
+        ``ef_bufs`` (group-aligned, None entries for identity groups) are
+        added to each group's quantizer input — the raw buffer in flat
+        mode, the intra-mean shard in two-level mode — and the matching
+        residuals e = b − Q⁻¹(Q(b)) come back as the second result.
+        Sharded groups get this worker's (size/L,) mean chunk, replicated
+        groups the full (size,) mean."""
+        want_ef = ef_bufs is not None
+        if not want_ef:
+            ef_bufs = (None,) * len(self.engines)
+        wid_inter, wid_intra = self._split_wid(worker_id)
+        outs: List[jnp.ndarray] = []
+        res: List[Optional[jnp.ndarray]] = []
         for gi, (eng, g) in enumerate(zip(self.engines, self.layout.groups)):
             gk = self._group_key(key, gi)
+            ef = ef_bufs[gi]
+            if not self.intra_axes:
+                b = bufs[gi] if ef is None else bufs[gi] + ef
+                if g.sharded:
+                    outs.append(quantized_reduce_scatter_mean(
+                        b, eng.qz, gk, self.dp_axes,
+                        worker_id=worker_id, use_kernels=self.use_kernels))
+                    if want_ef and not eng.qz.is_identity:
+                        res.append(b - local_qdq_comm_layout(
+                            b, eng.qz, gk, self.dp_axes,
+                            worker_id=worker_id,
+                            use_kernels=self.use_kernels))
+                    else:
+                        res.append(None)
+                else:
+                    outs.append(eng.exchange_flat(b, gk,
+                                                  worker_id=worker_id))
+                    if want_ef and not eng.qz.is_identity:
+                        res.append(b - eng.local_qdq_flat(
+                            b, gk, worker_id=worker_id))
+                    else:
+                        res.append(None)
+                continue
+            # two-level: quantize only on the inter (pod) axes
             if g.sharded:
+                shard = self._sharded_intra_scatter(bufs[gi])
+                b = shard if ef is None else shard + ef
+                kk = eng._intra_fold(gk, wid_intra)
                 outs.append(quantized_reduce_scatter_mean(
-                    bufs[gi], eng.qz, gk, eng.axis_names,
-                    worker_id=worker_id, use_kernels=self.use_kernels))
+                    b, eng.qz, kk, eng.axis_names, worker_id=wid_inter,
+                    use_kernels=self.use_kernels))
+                if want_ef and not eng.qz.is_identity:
+                    res.append(b - local_qdq_comm_layout(
+                        b, eng.qz, kk, eng.axis_names, worker_id=wid_inter,
+                        use_kernels=self.use_kernels))
+                else:
+                    res.append(None)
             else:
-                outs.append(eng.exchange_flat(bufs[gi], gk,
-                                              worker_id=worker_id))
-        return tuple(outs)
+                shard, valid = eng.intra_scatter(bufs[gi])
+                b = shard if ef is None else shard + ef
+                mean_shard = eng.exchange_shard(
+                    b, gk, valid=valid, worker_id=wid_inter,
+                    intra_id=wid_intra)
+                outs.append(eng.intra_gather(mean_shard, g.size))
+                if want_ef and not eng.qz.is_identity:
+                    res.append(b - eng.local_qdq_shard(
+                        b, gk, valid=valid, worker_id=wid_inter,
+                        intra_id=wid_intra))
+                else:
+                    res.append(None)
+        return tuple(outs), (tuple(res) if want_ef else None)
+
+    def exchange_bufs(self, bufs: Sequence[jnp.ndarray], key: jax.Array,
+                      worker_id) -> Tuple[jnp.ndarray, ...]:
+        """Per-group local cotangent buffers -> per-group outputs (see
+        :meth:`exchange_with_residuals`, which the train step's backward
+        uses to also stream the EF residuals in the same pass)."""
+        return self.exchange_with_residuals(bufs, key, worker_id)[0]
 
     def residual_bufs(self, bufs: Sequence[jnp.ndarray], key: jax.Array,
                       worker_id) -> Tuple[Optional[jnp.ndarray], ...]:
         """Error-feedback residuals e = b − Q⁻¹(Q(b)), bit-consistent with
         ``exchange_bufs`` (same spans, same folded keys); identity groups
         have no quantization error and carry no residual buffer (None —
-        matching ``ef_group_sizes``)."""
+        matching ``ef_group_sizes``). Two-level residuals live on the
+        intra-mean shard (this standalone path re-runs the fp intra
+        scatter; the train step uses the combined
+        :meth:`exchange_with_residuals` instead)."""
+        wid_inter, wid_intra = self._split_wid(worker_id)
         res = []
         for gi, (eng, g) in enumerate(zip(self.engines, self.layout.groups)):
             if eng.qz.is_identity:
                 res.append(None)
                 continue
             gk = self._group_key(key, gi)
+            if not self.intra_axes:
+                if g.sharded:
+                    local = local_qdq_comm_layout(
+                        bufs[gi], eng.qz, gk, self.dp_axes,
+                        worker_id=worker_id, use_kernels=self.use_kernels)
+                else:
+                    local = eng.local_qdq_flat(bufs[gi], gk,
+                                               worker_id=worker_id)
+                res.append(bufs[gi] - local)
+                continue
             if g.sharded:
-                local = local_qdq_comm_layout(
-                    bufs[gi], eng.qz, gk, eng.axis_names,
-                    worker_id=worker_id, use_kernels=self.use_kernels)
+                shard = self._sharded_intra_scatter(bufs[gi])
+                kk = eng._intra_fold(gk, wid_intra)
+                res.append(shard - local_qdq_comm_layout(
+                    shard, eng.qz, kk, eng.axis_names, worker_id=wid_inter,
+                    use_kernels=self.use_kernels))
             else:
-                local = eng.local_qdq_flat(bufs[gi], gk,
-                                           worker_id=worker_id)
-            res.append(bufs[gi] - local)
+                shard, valid = eng.intra_scatter(bufs[gi])
+                res.append(shard - eng.local_qdq_shard(
+                    shard, gk, valid=valid, worker_id=wid_inter,
+                    intra_id=wid_intra))
         return tuple(res)
 
     def ef_group_sizes(self) -> Tuple[Optional[int], ...]:
         """Per-group residual-buffer element counts, group-aligned: the
-        FULL group size for quantized groups (a worker's residual covers
-        its whole local contribution), None for identity groups (an exact
-        exchange leaves nothing to feed back — no buffer is allocated)."""
-        return tuple(None if eng.qz.is_identity else g.size
-                     for eng, g in zip(self.engines, self.layout.groups))
+        quantizer-input length for quantized groups (the FULL group size in
+        flat mode; the 1/L_i intra shard in two-level mode — residuals
+        live on the quantized inter axis only), None for identity groups
+        (an exact exchange leaves nothing to feed back — no buffer is
+        allocated)."""
+        sizes = []
+        for eng, g in zip(self.engines, self.layout.groups):
+            if eng.qz.is_identity:
+                sizes.append(None)
+            elif not self.intra_axes:
+                sizes.append(g.size)
+            elif g.sharded:
+                sizes.append(g.size // self.n_intra)
+            else:
+                sizes.append(-(-g.size // self.n_intra))
+        return tuple(sizes)
 
     # -- static cost accounting (benchmarks / tests) -----------------------
     def quantized_group_count(self) -> int:
         return sum(1 for e in self.engines if not e.qz.is_identity)
 
+    def _group_link_stats(self, eng: GradientExchange, g) -> dict:
+        return link_stats(
+            eng.qz, g.size, n_intra=self.n_intra, n_inter=self.n_inter,
+            two_level=bool(self.intra_axes),
+            server_requant=eng.server_requant, sharded=g.sharded,
+            max_chunk_elems=eng.max_chunk_elems)
+
     def collective_launches(self) -> int:
         """Backward launches for one step: sharded groups pay phase 1 only
         (``GradientExchange.rs_stats``: 2 all_to_all; fp = 1 psum_scatter),
-        replicated groups the full Algorithm 2 count."""
+        replicated groups the full Algorithm 2 count; two-level adds the
+        fp intra scatter (and, for replicated groups, gather)."""
+        if self.intra_axes:
+            return int(sum(self._group_link_stats(eng, g)["launches"]
+                           for eng, g in zip(self.engines,
+                                             self.layout.groups)))
         L = self.layout.n_shards
         return sum(
             GradientExchange.rs_stats(eng.qz, g.size, L)[0] if g.sharded
@@ -377,12 +556,28 @@ class FsdpExchange:
     def wire_bytes_per_worker(self) -> float:
         """Gradient bytes one worker transmits per step (sharded groups:
         phase-1 uplink only; the parameter all-gather downlink is bf16
-        and belongs to the forward)."""
+        and belongs to the forward). Two-level mode counts both links
+        (fp ICI + quantized DCN); see ``link_bytes_per_worker`` for the
+        split."""
+        if self.intra_axes:
+            lb = self.link_bytes_per_worker()
+            return lb["ici_bytes"] + lb["dcn_bytes"]
         L = self.layout.n_shards
         return sum(
             GradientExchange.rs_stats(eng.qz, g.size, L)[1] if g.sharded
             else eng.wire_bytes_per_worker(g.size, L)
             for eng, g in zip(self.engines, self.layout.groups))
+
+    def link_bytes_per_worker(self) -> dict:
+        """Per-link accounting {ici_bytes, dcn_bytes, dcn_q_bytes,
+        launches} summed over groups (``exchange.link_stats`` model)."""
+        total = {"ici_bytes": 0.0, "dcn_bytes": 0.0, "dcn_q_bytes": 0.0,
+                 "launches": 0.0}
+        for eng, g in zip(self.engines, self.layout.groups):
+            st = self._group_link_stats(eng, g)
+            for k in total:
+                total[k] += st[k]
+        return total
 
 
 # ---------------------------------------------------------------------------
@@ -427,14 +622,12 @@ def make_fused_tree_gather(ex: FsdpExchange, *,
     def bwd(res, g_full):
         key, wid, ef_bufs = res
         bufs = ex.layout.flatten_groups(g_full)
-        if ef_bufs is not None:
-            # e_{t-1} compensates this step's send: b = g + e (identity
-            # groups carry no residual buffer — see ef_group_sizes)
-            bufs = tuple(b if e is None else b + e
-                         for b, e in zip(bufs, ef_bufs))
-        outs = ex.exchange_bufs(bufs, key, wid)
-        new_ef = (ex.residual_bufs(bufs, key, wid)
-                  if ef_bufs is not None else None)
+        # e_{t-1} compensates this step's send: b = g + e, added to each
+        # group's quantizer input (the raw buffer in flat mode, the
+        # intra-mean shard in two-level mode — identity groups carry no
+        # residual buffer; see ef_group_sizes). One pass computes both the
+        # exchange outputs and the new residual stream.
+        outs, new_ef = ex.exchange_with_residuals(bufs, key, wid, ef_bufs)
         shard_ct = ex.layout.unflatten_outputs(outs, param_dtype=param_dtype)
         key_ct = np.zeros(key.shape, dtype=jax.dtypes.float0)
         return shard_ct, new_ef, key_ct

@@ -38,6 +38,7 @@ from repro.serve.step import make_prefill_step, make_serve_step, \
 from repro.train import TrainConfig, make_train_step
 from repro.train.state import TrainState
 from repro.utils.pytree import tree_count
+from repro.utils.sharding import dp_axis_names
 
 
 
@@ -60,8 +61,8 @@ def model_flops(cfg, shape, n_tokens: int) -> float:
 
 
 def lower_case(arch: str, shape_name: str, *, multi_pod: bool,
-               quant: str, mode: str = "fsdp", cfg_overrides=None,
-               mesh_shape=None):
+               quant: str, mode: str = "fsdp", hierarchy: str = "auto",
+               cfg_overrides=None, mesh_shape=None):
     import dataclasses as _dc
     cfg = get_config(arch)
     if cfg_overrides:
@@ -86,7 +87,7 @@ def lower_case(arch: str, shape_name: str, *, multi_pod: bool,
             # jnp path is numerically identical (tested) and partitions
             # cleanly. On real TPU the kernels run as per-shard calls.
             tcfg = TrainConfig(policy=QuantPolicy.parse(quant), mode=mode,
-                               use_kernels=False)
+                               hierarchy=hierarchy, use_kernels=False)
             step_fn, plan = make_train_step(model, mesh, tcfg)
             aparams = jax.eval_shape(model.init, jax.random.key(0))
             shardings = plan.shardings(mesh)
@@ -100,7 +101,7 @@ def lower_case(arch: str, shape_name: str, *, multi_pod: bool,
                     lambda a, s: sds(a.shape, a.dtype, s), aparams,
                     shardings),
                 step=sds((), jnp.int32, rep))
-            dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+            dp = dp_axis_names(mesh)
             dp_ent = dp if len(dp) > 1 else dp[0]
             batch = input_specs(cfg, shape)
             batch_sds = {
@@ -123,8 +124,7 @@ def lower_case(arch: str, shape_name: str, *, multi_pod: bool,
                 p_sds = jax.tree_util.tree_map(
                     lambda a, s: sds(a.shape, a.dtype, s), aparams, psh)
                 from jax.sharding import NamedSharding, PartitionSpec as P
-                dp = tuple(a for a in ("pod", "data")
-                           if a in mesh.axis_names)
+                dp = dp_axis_names(mesh)
                 dp_ent = dp if len(dp) > 1 else dp[0]
                 batch = input_specs(cfg, shape)
                 batch_sds = {
@@ -152,8 +152,7 @@ def lower_case(arch: str, shape_name: str, *, multi_pod: bool,
                 c_sds = jax.tree_util.tree_map(
                     lambda a, s: sds(a.shape, a.dtype, s), acache, csh)
                 from jax.sharding import NamedSharding, PartitionSpec as P
-                dp = tuple(a for a in ("pod", "data")
-                           if a in mesh.axis_names)
+                dp = dp_axis_names(mesh)
                 dp_ent = (dp if len(dp) > 1 else dp[0]) if batch_dp else None
                 tok_sds = sds((shape.global_batch, 1), jnp.int32,
                               NamedSharding(mesh, P(dp_ent)))
@@ -234,6 +233,10 @@ def main(argv=None):
                     help="scheme name or QuantPolicy string (see "
                          "repro.launch.train --help for the grammar)")
     ap.add_argument("--mode", default="fsdp")
+    ap.add_argument("--hierarchy", default="auto",
+                    choices=["flat", "two_level", "auto"],
+                    help="gradient-exchange topology on multi-pod meshes "
+                         "(two_level quantizes only the inter-pod DCN hop)")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--all", action="store_true",
                     help="run every (arch x shape) for this mesh")
@@ -247,7 +250,8 @@ def main(argv=None):
         tag = f"{arch}_{shape}_{'2x16x16' if args.multi_pod else '16x16'}"
         try:
             res = lower_case(arch, shape, multi_pod=args.multi_pod,
-                             quant=args.quant, mode=args.mode)
+                             quant=args.quant, mode=args.mode,
+                             hierarchy=args.hierarchy)
         except Exception as e:  # noqa: BLE001
             failures += 1
             res = {"arch": arch, "shape": shape, "error": repr(e)[:2000]}

@@ -12,7 +12,10 @@ import jax
 # TPU v5e hardware constants used by the roofline analysis
 PEAK_FLOPS_BF16 = 197e12        # per chip, FLOP/s
 HBM_BW = 819e9                  # per chip, B/s
-ICI_BW = 50e9                   # per link, B/s
+ICI_BW = 50e9                   # per link, B/s (fast intra-pod)
+DCN_BW = 12.5e9                 # per host, B/s (100 Gbps inter-pod NIC —
+                                # the slow link the two-level hierarchical
+                                # exchange reserves quantization for)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -21,8 +24,36 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh(data: int | None = None, model: int = 1):
-    """Mesh over the actually-available devices (for real runs/tests)."""
+def _positive_int(name: str, value) -> int:
+    if not isinstance(value, int) or isinstance(value, bool) or value < 1:
+        raise ValueError(
+            f"{name} must be a positive integer, got {value!r}")
+    return value
+
+
+def make_host_mesh(data: int | None = None, model: int = 1, *,
+                   pods: int = 1):
+    """Mesh over the actually-available devices (for real runs/tests).
+
+    ``pods > 1`` adds a leading "pod" axis — the multi-pod topology the
+    two-level hierarchical exchange splits into (inter=pod, intra=data).
+    Every factor is validated up front so a bad launch dies with a clear
+    message here instead of a downstream XLA shape failure.
+    """
     n = len(jax.devices())
-    data = data or (n // model)
+    model = _positive_int("model", model)
+    pods = _positive_int("pods", pods)
+    if n % (model * pods):
+        raise ValueError(
+            f"model*pods={model}*{pods} does not divide the device count "
+            f"{n}; pick factors of {n}")
+    if data is None:
+        data = n // (model * pods)
+    data = _positive_int("data", data)
+    if pods * data * model != n:
+        raise ValueError(
+            f"mesh shape pods*data*model = {pods}*{data}*{model} = "
+            f"{pods * data * model} must equal the device count {n}")
+    if pods > 1:
+        return jax.make_mesh((pods, data, model), ("pod", "data", "model"))
     return jax.make_mesh((data, model), ("data", "model"))

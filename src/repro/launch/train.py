@@ -51,6 +51,16 @@ def main(argv=None):
     ap.add_argument("--clip-c", type=float, default=None)
     ap.add_argument("--mode", default="replicated",
                     choices=["replicated", "fsdp"])
+    ap.add_argument("--hierarchy", default="auto",
+                    choices=["flat", "two_level", "auto"],
+                    help="two_level runs the quantized exchange only over "
+                         "the slow inter-pod (DCN) axis after a full-"
+                         "precision intra-pod mean; auto picks two_level "
+                         "whenever the dp mesh has >= 2 axes")
+    ap.add_argument("--pods", type=int, default=1,
+                    help="leading pod axis size of the host mesh (>1 "
+                         "builds the multi-pod ('pod','data','model') "
+                         "topology the two-level exchange splits)")
     ap.add_argument("--per-leaf-exchange", action="store_true",
                     help="legacy one-collective-per-leaf exchange "
                          "(default: fused flat-buffer engine)")
@@ -74,10 +84,14 @@ def main(argv=None):
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
     model = LM(cfg)
-    mesh = make_host_mesh(model=args.model_parallel)
+    try:
+        mesh = make_host_mesh(model=args.model_parallel, pods=args.pods)
+    except ValueError as e:
+        ap.error(str(e))
     tcfg = TrainConfig(
         policy=policy,
         mode=args.mode,
+        hierarchy=args.hierarchy,
         fused_exchange=not args.per_leaf_exchange,
         error_feedback=args.error_feedback,
         exchange_chunk_elems=args.exchange_chunk)

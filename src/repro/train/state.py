@@ -12,10 +12,14 @@ class TrainState(NamedTuple):
     opt: Any                    # optimizer state, sharded like params
     step: jnp.ndarray           # scalar int32
     ef: Any = None              # error-feedback residuals (beyond-paper;
-                                # TrainConfig.error_feedback). Replicated
-                                # mode: a params-shaped f32 tree. Fused
-                                # fsdp mode: one flat f32 buffer per policy
-                                # group, stacked over the dp axes (each
-                                # worker's slice is the residual of its own
-                                # local contribution) — checkpointed and
-                                # donated with the rest of the state.
+                                # TrainConfig.error_feedback). Flat
+                                # replicated mode: a params-shaped f32
+                                # tree. Fused fsdp AND two-level
+                                # replicated mode: one flat f32 buffer per
+                                # policy group, stacked over the dp axes
+                                # (each worker's slice is the residual of
+                                # its own quantizer input — the full local
+                                # contribution in flat fsdp, the 1/L_intra
+                                # intra shard in two-level mode) —
+                                # checkpointed and donated with the rest
+                                # of the state.

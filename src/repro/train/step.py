@@ -25,6 +25,13 @@ paper-faithful Algorithm 2 loop used by the convergence benchmarks (with a
 1-device mesh it degenerates to the paper's single-machine experiments:
 the gradient is quantize->dequantized locally every step).
 
+On multi-pod meshes ``TrainConfig.hierarchy`` ("auto" by default) selects
+the two-level ICI/DCN topology: every fused exchange first averages in
+full precision over the fast intra-pod ``data`` axis and runs the
+quantized phases only over the slow inter-pod ``pod`` axis, with EF
+residuals living on the quantized intra-shard (see
+``core/comm/hierarchical.py`` and EXPERIMENTS.md).
+
 Quantization is configured through ``TrainConfig.policy`` (a
 ``repro.core.QuantPolicy`` or anything coercible to one): each leaf's
 scheme is resolved from its gather path, the replicated fused exchange
@@ -53,7 +60,8 @@ from repro.optim import optimizers as opt_lib
 from repro.optim.schedule import constant_lr
 from repro.train.state import TrainState
 from repro.utils.compat import shard_map
-from repro.utils.sharding import choose_fsdp_dim, spec_dp_dim
+from repro.utils.sharding import (choose_fsdp_dim, dp_axis_names,
+                                  spec_dp_dim)
 
 # key-fold salt separating the fused whole-tree exchange stream from the
 # legacy per-leaf (crc32-of-path) streams
@@ -69,6 +77,13 @@ class TrainConfig:
     policy: Optional[Any] = None
     quant: QuantConfig = QuantConfig(name="fp")
     mode: str = "fsdp"              # fsdp | replicated
+    hierarchy: str = "auto"         # flat | two_level | auto: two_level
+                                    # quantizes only over the slow
+                                    # inter-pod ("pod", DCN) axes after a
+                                    # full-precision intra-pod mean —
+                                    # "auto" switches it on whenever the
+                                    # dp mesh has >= 2 axes (see
+                                    # core/comm/hierarchical.py)
     optimizer: str = "sgd"          # sgd | adamw  (paper: SGD+momentum 0.9)
     momentum: float = 0.9
     weight_decay: float = 0.0
@@ -140,7 +155,48 @@ class ShardingPlan:
 
 
 def _dp_axes(mesh) -> Tuple[str, ...]:
-    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    # the single shared dp-axis selection (utils/sharding.dp_axis_names):
+    # the hierarchy split below relies on this exact ordering, so per-file
+    # copies of the tuple comprehension are an actual correctness bug
+    return dp_axis_names(mesh)
+
+
+def _exchange_axes(tcfg: TrainConfig, dp_axes: Tuple[str, ...], mesh,
+                   plan: Optional["ShardingPlan"] = None
+                   ) -> Tuple[Tuple[str, ...], Tuple[str, ...], int]:
+    """Resolve ``tcfg.hierarchy`` against the mesh and the active exchange
+    path: ``(intra_axes, inter_axes, n_intra)``. Flat mode (and every
+    degenerate case) returns ``((), dp_axes, 1)``.
+
+    Two-level needs the fused engines (the per-leaf fallbacks keep the
+    flat combined-axis exchange): an explicitly requested "two_level" that
+    cannot run warns; "auto" falls back silently.
+    """
+    flat = (), tuple(dp_axes), 1
+    if not dp_axes:
+        return flat
+    intra, inter = comm.split_dp_axes(dp_axes, tcfg.hierarchy)
+    if not intra:
+        return flat
+    if tcfg.mode == "replicated":
+        fused_ok = tcfg.fused_exchange
+        why = "fused_exchange=False (per-leaf replicated exchange)"
+    else:
+        fused_ok = plan is not None and _fused_fsdp_active(tcfg, plan)
+        why = "the per-leaf fsdp gather path (fused_exchange=False or " \
+              "model parallelism active)"
+    if not fused_ok:
+        if tcfg.hierarchy == "two_level":
+            warnings.warn(
+                f"hierarchy='two_level' needs the fused exchange but {why} "
+                f"is selected — falling back to the flat combined-axis "
+                f"exchange", stacklevel=2)
+        return flat
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_intra = int(np.prod([sizes[a] for a in intra]))
+    if n_intra <= 1:
+        return flat
+    return intra, inter, n_intra
 
 
 def plan_sharding(model: LM, aparams, mesh) -> ShardingPlan:
@@ -215,19 +271,32 @@ def _fused_fsdp_active(tcfg: TrainConfig, plan: ShardingPlan) -> bool:
             and bool(plan.dp_axes) and plan.n_model == 1)
 
 
-def _fsdp_ef_group_sizes(model: LM, aparams, tcfg: TrainConfig,
-                         plan: ShardingPlan
-                         ) -> Optional[Tuple[Optional[int], ...]]:
-    """Group-aligned residual-buffer sizes for fsdp error feedback (None
-    entries for identity groups, which have no quantization error and get
-    no buffer), or None overall when EF does not apply (replicated mode,
-    per-leaf fsdp, no EF, or a fully-fp policy)."""
-    if not (tcfg.error_feedback and _fused_fsdp_active(tcfg, plan)):
+def _ef_group_sizes(aparams, tcfg: TrainConfig, plan: ShardingPlan,
+                    mesh) -> Optional[Tuple[Optional[int], ...]]:
+    """Group-aligned per-worker residual-buffer sizes for the TUPLE form
+    of error feedback (fused fsdp, and the two-level fused replicated
+    exchange whose residuals live on the quantized inter axis), with None
+    entries for identity groups. Returns None overall when EF is off, a
+    fully-fp policy leaves nothing to feed back, or EF rides the
+    params-shaped tree instead (flat replicated mode)."""
+    if not tcfg.error_feedback:
         return None
-    fex = comm.FsdpExchange.build(
-        tcfg.resolved_policy(), aparams, plan.dp_axes, paths=plan.paths,
-        shard_dims=plan.full_shard_dims(), n_shards=plan.n_dp)
-    sizes = fex.ef_group_sizes()
+    intra, inter, n_intra = _exchange_axes(tcfg, plan.dp_axes, mesh, plan)
+    if tcfg.mode == "fsdp":
+        if not _fused_fsdp_active(tcfg, plan):
+            return None
+        fex = comm.FsdpExchange.build(
+            tcfg.resolved_policy(), aparams, plan.dp_axes, paths=plan.paths,
+            shard_dims=plan.full_shard_dims(), n_shards=plan.n_dp,
+            intra_axes=intra, n_intra=n_intra)
+        sizes = fex.ef_group_sizes()
+        return sizes if any(n is not None for n in sizes) else None
+    if not intra:
+        return None          # flat replicated EF stays params-shaped
+    pex = comm.PartitionedExchange.build(
+        tcfg.resolved_policy(), aparams, inter, paths=plan.paths,
+        intra_axes=intra)
+    sizes = pex.ef_shard_sizes(n_intra)
     return sizes if any(n is not None for n in sizes) else None
 
 
@@ -236,20 +305,22 @@ def init_state(model: LM, mesh, tcfg: TrainConfig, key) -> TrainState:
     aparams = jax.eval_shape(model.init, key)
     plan = plan_sharding(model, aparams, mesh)
     optimizer = _make_optimizer(tcfg)
-    ef_sizes = _fsdp_ef_group_sizes(model, aparams, tcfg, plan)
+    ef_sizes = _ef_group_sizes(aparams, tcfg, plan, mesh)
     dp_ent = (plan.dp_axes if len(plan.dp_axes) > 1
               else (plan.dp_axes[0] if plan.dp_axes else None))
 
     def build(key):
         params = model.init(key)
-        if tcfg.error_feedback and tcfg.mode == "replicated":
-            ef = jax.tree_util.tree_map(jnp.zeros_like, params)
-        elif ef_sizes is not None:
+        if ef_sizes is not None:
             # per-worker residual buffers, stacked over the dp axes
-            # (group-aligned; identity groups carry None)
+            # (group-aligned; identity groups carry None). Covers fused
+            # fsdp AND the two-level replicated exchange, whose residuals
+            # are intra shards on the quantized inter axis.
             ef = tuple(None if n is None
                        else jnp.zeros((plan.n_dp * n,), jnp.float32)
                        for n in ef_sizes)
+        elif tcfg.error_feedback and tcfg.mode == "replicated":
+            ef = jax.tree_util.tree_map(jnp.zeros_like, params)
         else:
             ef = None
         return TrainState(params=params, opt=optimizer.init(params),
@@ -284,14 +355,22 @@ def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
     plan = plan_sharding(model, aparams, mesh)
     optimizer = _make_optimizer(tcfg)
     policy = tcfg.resolved_policy()
+    # hierarchy resolution: two_level splits the dp axes into fast intra
+    # (ICI, full-precision mean) and slow inter (DCN, quantized Algorithm
+    # 2) halves; flat (and every degenerate case) keeps intra empty and
+    # the engines behave exactly as before
+    intra_axes, inter_axes, n_intra = _exchange_axes(tcfg, dp_axes, mesh,
+                                                     plan)
+    two_level = bool(intra_axes)
     # partitioned fused engine: leaves grouped by resolved quantizer into
     # contiguous segments, one fused exchange per policy group (a uniform
     # policy degenerates to the single-group engine, bit-identical to the
     # pre-policy fused exchange)
     pex = comm.PartitionedExchange.build(
-        policy, aparams, dp_axes, paths=plan.paths,
+        policy, aparams, inter_axes, paths=plan.paths,
         use_kernels=tcfg.use_kernels,
-        max_chunk_elems=tcfg.exchange_chunk_elems)
+        max_chunk_elems=tcfg.exchange_chunk_elems,
+        intra_axes=intra_axes)
     # fused fsdp engine: ONE custom-VJP over the whole sharded tree whose
     # forward is a fused per-group parameter all-gather and whose backward
     # is one fused quantized reduce-scatter per sharded policy group (+
@@ -305,7 +384,8 @@ def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
             policy, aparams, dp_axes, paths=plan.paths,
             shard_dims=plan.full_shard_dims(), n_shards=plan.n_dp,
             use_kernels=tcfg.use_kernels,
-            max_chunk_elems=tcfg.exchange_chunk_elems)
+            max_chunk_elems=tcfg.exchange_chunk_elems,
+            intra_axes=intra_axes, n_intra=n_intra)
         if fex.layout.size > 1_000_000_000:
             # the fused path holds the whole gathered bf16 tree + full
             # f32 cotangent buffers per device during the step, vs the
@@ -404,15 +484,35 @@ def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
         new_ef = state.ef
         use_ef = (tcfg.error_feedback and state.ef is not None
                   and not pex.is_identity)
-        if use_ef:
+        if use_ef and not two_level:
             # error feedback: compensate last step's local quantization
             # error before quantizing (Karimireddy et al. line of work,
-            # cited by the paper as complementary)
+            # cited by the paper as complementary). Two-level residuals
+            # are intra SHARDS (added after the fp intra scatter below),
+            # not a params-shaped tree.
             grads = jax.tree_util.tree_map(
                 lambda g, e: g + e.astype(g.dtype), grads, state.ef)
 
         if tcfg.mode == "replicated" and dp_axes:
-            if tcfg.fused_exchange:
+            if tcfg.fused_exchange and two_level:
+                # two-level fused exchange: fp intra-pod scatter-mean ->
+                # quantized Algorithm 2 on the shard over the inter (pod)
+                # axes only -> fp intra gather. EF residuals live on the
+                # quantized shard (per-group tuple in TrainState.ef).
+                k = jax.random.fold_in(step_key, _FUSED_SALT)
+                bufs = pex.layout.flatten_groups(grads)
+                shards, valids = pex.intra_scatter_parts(bufs)
+                if use_ef:
+                    shards = tuple(s if e is None else s + e
+                                   for s, e in zip(shards, state.ef))
+                    local = pex.local_qdq_shard_parts(shards, k, valids)
+                    new_ef = tuple(None if e is None else s - l
+                                   for e, s, l in zip(state.ef, shards,
+                                                      local))
+                mean_shards = pex.exchange_shard_parts(shards, k, valids)
+                grads = pex.layout.unflatten_groups(
+                    pex.intra_gather_parts(mean_shards))
+            elif tcfg.fused_exchange:
                 # partitioned fused Algorithm 2: leaves grouped by resolved
                 # quantizer into contiguous segments, one fused quantized
                 # all-reduce per policy group — O(#groups) collectives per
@@ -510,9 +610,22 @@ def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
         if not dp_axes:
             return jax.jit(local_step, donate_argnums=(0,)), plan
         pspec = jax.tree_util.tree_map(lambda _: P(), aparams)
+        rep_ef_sizes = None
+        if tcfg.error_feedback and two_level:
+            # two-level EF: per-group intra-shard buffers stacked over the
+            # dp axes (mirrors _ef_group_sizes / init_state)
+            sizes = pex.ef_shard_sizes(n_intra)
+            rep_ef_sizes = (sizes if any(n is not None for n in sizes)
+                            else None)
+        rep_dp_ent = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+        if rep_ef_sizes is not None:
+            ef_specs = tuple(None if n is None else P(rep_dp_ent)
+                             for n in rep_ef_sizes)
+        else:
+            ef_specs = pspec if tcfg.error_feedback else None
         state_specs = TrainState(
             params=pspec, opt=_opt_specs(optimizer, tcfg, pspec), step=P(),
-            ef=pspec if tcfg.error_feedback else None)
+            ef=ef_specs)
         batch_specs = {"tokens": P(dp_axes if len(dp_axes) > 1
                                    else dp_axes[0])}
         if cfg.encoder:

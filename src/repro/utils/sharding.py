@@ -11,6 +11,22 @@ from typing import Optional, Sequence, Tuple
 
 from jax.sharding import PartitionSpec as P
 
+# Canonical data-parallel mesh axes, slow-to-fast (pod = inter-pod DCN,
+# data = intra-pod ICI). Every dp-axis selection in the repo goes through
+# dp_axis_names so the ordering can never drift between call sites.
+DP_AXIS_ORDER: Tuple[str, ...] = ("pod", "data")
+
+
+def dp_axis_names(mesh) -> Tuple[str, ...]:
+    """The mesh's data-parallel axes as an ORDERED tuple (pod before data).
+
+    This is THE selection the train step, the launchers, and the dry-run
+    lowering all share: the hierarchical exchange splits this tuple into
+    (inter, intra) halves, so a silent copy-paste drift between call sites
+    would desynchronize the collective axis order across processes.
+    """
+    return tuple(a for a in DP_AXIS_ORDER if a in mesh.axis_names)
+
 
 def choose_fsdp_dim(
     shape: Sequence[int],

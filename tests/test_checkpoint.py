@@ -1,0 +1,174 @@
+"""Checkpoint crash-safety and strict-restore suite (PR satellite).
+
+``save_checkpoint`` must be atomic: a crash at ANY point mid-save leaves
+the previously committed checkpoint loadable (temp files are the only
+litter). ``load_checkpoint`` must raise real ``ValueError``s — not
+``assert`` (stripped under ``python -O``), not a silent dtype cast — on
+shape mismatches, dtype mismatches, and missing/extra keys.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _tree():
+    return {"a": jnp.arange(6.0).reshape(2, 3),
+            "b": (jnp.ones((4,), jnp.int32), {"c": jnp.zeros(())})}
+
+
+def _like(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+class TestAtomicSave:
+    def test_crash_mid_npz_write_keeps_previous(self, tmp_path,
+                                                monkeypatch):
+        """Kill the save while the npz temp file is being written: the
+        committed v1 checkpoint must still load, bit for bit."""
+        path = str(tmp_path / "ck.npz")
+        tree1 = _tree()
+        save_checkpoint(path, tree1, step=1)
+
+        real_savez = np.savez_compressed
+
+        def dying_savez(f, **kw):
+            f.write(b"PK\x03\x04 truncated garbage")
+            raise RuntimeError("simulated crash mid-write")
+
+        monkeypatch.setattr(np, "savez_compressed", dying_savez)
+        tree2 = jax.tree_util.tree_map(lambda x: x + 100, tree1)
+        with pytest.raises(RuntimeError, match="simulated crash"):
+            save_checkpoint(path, tree2, step=2)
+        monkeypatch.setattr(np, "savez_compressed", real_savez)
+
+        back, step = load_checkpoint(path, _like(tree1))
+        assert step == 1
+        for want, got in zip(jax.tree_util.tree_leaves(tree1),
+                             jax.tree_util.tree_leaves(back)):
+            np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+        # the only residue is the temp file, which the next save replaces
+        leftovers = [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+        assert leftovers == ["ck.npz.tmp"], leftovers
+        save_checkpoint(path, tree2, step=2)
+        assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+        _, step = load_checkpoint(path, _like(tree1))
+        assert step == 2
+
+    def test_crash_between_npz_and_manifest_still_consistent(self, tmp_path,
+                                                             monkeypatch):
+        """A crash after the npz commit but before the external manifest
+        replace must still load CONSISTENTLY (the manifest is embedded in
+        the npz — the npz replace is the atomic commit point)."""
+        path = str(tmp_path / "ck.npz")
+        tree1 = _tree()
+        save_checkpoint(path, tree1, step=1)
+
+        real_replace = os.replace
+
+        def replace_npz_only(src, dst):
+            if dst.endswith(".manifest.json"):
+                raise RuntimeError("simulated crash before manifest commit")
+            return real_replace(src, dst)
+
+        monkeypatch.setattr(os, "replace", replace_npz_only)
+        tree2 = jax.tree_util.tree_map(lambda x: x + 100, tree1)
+        with pytest.raises(RuntimeError, match="simulated crash"):
+            save_checkpoint(path, tree2, step=2)
+        monkeypatch.setattr(os, "replace", real_replace)
+
+        back, step = load_checkpoint(path, _like(tree1))
+        # the committed npz carries its own manifest: new data + new step,
+        # never a stale-manifest/new-data mix
+        assert step == 2
+        np.testing.assert_array_equal(np.asarray(back["a"]),
+                                      np.asarray(tree1["a"]) + 100)
+
+    def test_external_manifest_fallback(self, tmp_path):
+        """Checkpoints written without the embedded manifest (older
+        format) still load via the external .manifest.json."""
+        path = str(tmp_path / "old.npz")
+        tree = _tree()
+        flat = {jax.tree_util.keystr(p): np.asarray(l)
+                for p, l in jax.tree_util.tree_flatten_with_path(tree)[0]}
+        order = sorted(flat)
+        np.savez_compressed(path, **{f"arr_{i}": flat[k]
+                                     for i, k in enumerate(order)})
+        with open(path + ".manifest.json", "w") as f:
+            json.dump({"keys": order, "step": 5}, f)
+        back, step = load_checkpoint(path, _like(tree))
+        assert step == 5
+        np.testing.assert_array_equal(np.asarray(back["a"]),
+                                      np.asarray(tree["a"]))
+
+
+class TestStrictRestore:
+    def test_shape_mismatch_raises_valueerror(self, tmp_path):
+        path = str(tmp_path / "ck.npz")
+        save_checkpoint(path, _tree(), step=0)
+        bad = _tree()
+        bad["a"] = jnp.zeros((3, 2))
+        with pytest.raises(ValueError, match=r"'a'.*\(2, 3\).*\(3, 2\)"):
+            load_checkpoint(path, bad)
+
+    def test_shape_check_survives_python_O(self, tmp_path):
+        """The old guard was an ``assert`` — gone under ``python -O``.
+        Run the mismatch load in an optimized subprocess and require the
+        ValueError."""
+        import subprocess
+        import sys
+        path = str(tmp_path / "ck.npz")
+        save_checkpoint(path, {"a": jnp.zeros((4,))}, step=0)
+        prog = (
+            "import jax.numpy as jnp, pytest\n"
+            "from repro.checkpoint import load_checkpoint\n"
+            "try:\n"
+            f"    load_checkpoint({path!r}, {{'a': jnp.zeros((5,))}})\n"
+            "except ValueError:\n"
+            "    print('RAISED')\n"
+        )
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        env = dict(os.environ, PYTHONPATH=os.path.join(root, "src"),
+                   JAX_PLATFORMS="cpu")
+        out = subprocess.run([sys.executable, "-O", "-c", prog], env=env,
+                             capture_output=True, text=True, timeout=600)
+        assert out.returncode == 0, out.stdout + out.stderr
+        assert "RAISED" in out.stdout
+
+    def test_dtype_mismatch_raises_not_casts(self, tmp_path):
+        """Restoring an f32 checkpoint into a bf16 leaf used to truncate
+        silently — it must now refuse."""
+        path = str(tmp_path / "ck.npz")
+        save_checkpoint(path, {"w": jnp.ones((8,), jnp.float32)}, step=0)
+        with pytest.raises(ValueError, match="float32.*bfloat16"):
+            load_checkpoint(path, {"w": jnp.zeros((8,), jnp.bfloat16)})
+        with pytest.raises(ValueError, match="dtype"):
+            load_checkpoint(path, {"w": jnp.zeros((8,), jnp.int32)})
+
+    def test_missing_and_extra_keys_raise_with_names(self, tmp_path):
+        path = str(tmp_path / "ck.npz")
+        save_checkpoint(path, {"a": jnp.zeros(3), "b": jnp.zeros(2)},
+                        step=0)
+        with pytest.raises(ValueError, match="missing keys.*'c'"):
+            load_checkpoint(path, {"a": jnp.zeros(3), "b": jnp.zeros(2),
+                                   "c": jnp.zeros(1)})
+        with pytest.raises(ValueError, match="extra keys.*'b'"):
+            load_checkpoint(path, {"a": jnp.zeros(3)})
+
+    def test_exact_roundtrip_still_works(self, tmp_path):
+        path = str(tmp_path / "ck.npz")
+        tree = _tree()
+        save_checkpoint(path, tree, step=3)
+        back, step = load_checkpoint(path, _like(tree))
+        assert step == 3
+        for want, got in zip(jax.tree_util.tree_leaves(tree),
+                             jax.tree_util.tree_leaves(back)):
+            assert got.dtype == want.dtype
+            np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
