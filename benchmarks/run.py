@@ -18,6 +18,7 @@ MODULES = [
     ("table4_clipping", "benchmarks.clipping"),
     ("table5_distributed", "benchmarks.distributed"),
     ("roofline", "benchmarks.roofline"),
+    ("kernels", "benchmarks.kernel_bench"),
 ]
 
 

@@ -158,7 +158,8 @@ def local_qdq_comm_layout(
     """This worker's own dequantized gradient, bit-identical to what it
     contributed to ``quantized_reduce_scatter_mean`` (same chunk/bucket
     layout, same folded key, same ``valid`` mask). Used by error feedback:
-    e ← g − Q⁻¹(Q(g))."""
+    e ← g − Q⁻¹(Q(g)). Runs the fused ``wire.qdq`` kernel — one
+    ``pallas_call``, no idx tensor or pack/unpack round-trip."""
     n = flat.shape[0]
     names = _names(axis_names)
     L = axis_size(names)
@@ -170,13 +171,10 @@ def local_qdq_comm_layout(
     valid = jnp.pad(_valid_parts(valid, n, L, chunk), ((0, 0), (0, pad2)))
     bkt = parts.reshape(-1, d_eff)
     mask = valid.reshape(-1, d_eff)
-    levels = qz.fit(bkt, mask)
     if worker_id is None:
         worker_id = lax.axis_index(names)
     key = jax.random.fold_in(key, worker_id)
-    idx = jnp.where(mask, wire.assign(qz, bkt, levels, key, use_kernels,
-                                      mask=mask), 0)
-    vals = Quantizer.decode(idx, levels)
+    vals = wire.qdq(qz, bkt, mask, key, use_kernels=use_kernels)
     return vals.reshape(L, -1)[:, :chunk].reshape(-1)[:n]
 
 

@@ -21,6 +21,13 @@ save wire bytes (small leaves share buckets instead of each paying its
 own ragged tail and level table — for few-large-leaf trees the byte
 counts are essentially equal and the win is the launch count).
 
+The compute side of every exchange (encode/decode/error-feedback qdq)
+goes through ``core/comm/wire.py``, which since PR 5 lowers to the FUSED
+one-pass Pallas kernels by default — one ``pallas_call`` per
+encode/decode sweep, no (nb, d) intermediates in HBM;
+``use_kernels=False`` (or ``REPRO_USE_KERNELS=0``) selects the pure-jnp
+reference oracle, bit-identically.
+
 The PARTITIONED mode (``PolicyLayout`` + ``PartitionedExchange``) extends
 this to per-parameter-group policies (``repro.core.QuantPolicy``): leaves
 are grouped by their resolved quantizer config into contiguous segments,

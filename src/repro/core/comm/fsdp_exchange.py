@@ -40,6 +40,12 @@ parallelism: flattening a TP-sharded cotangent into a single dp buffer
 would force XLA to replicate it over the ``model`` axis, so callers keep
 the per-leaf gather (with its nested-manual trick) whenever
 ``n_model > 1`` — see ``train/step.py``.
+
+Every quantized phase here (the reduce-scatter encode/decode and the
+error-feedback ``local_qdq``) goes through ``collectives``/``wire`` and
+therefore rides the FUSED one-pass Pallas kernels by default since PR 5
+(one ``pallas_call`` per sweep; ``use_kernels=False`` /
+``REPRO_USE_KERNELS=0`` select the bit-identical jnp oracle).
 """
 from __future__ import annotations
 

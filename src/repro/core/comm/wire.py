@@ -11,6 +11,22 @@ One "wire unit" is a pair ``(words, levels)``:
 Both collective phases (worker->server and server->worker) speak exactly
 this format; the functions here are the single place the encode/decode
 pipeline is defined, shared by ``collectives`` and ``exchange``.
+
+Since PR 5 the default path is the FUSED one-pass kernel pipeline
+(``kernels/fused_*``): ``encode`` lowers to exactly one ``pallas_call``
+(σ-clip -> level search -> random rounding -> bit-pack in one VMEM-tiled
+sweep — only the level FIT stays outside as cheap jnp, and for BinGrad-b
+even the fit fuses), and ``decode``/``decode_mean``/``decode_each`` lower
+to one ``pallas_call`` each (unpack + dequantize [+ average]). The PRNG
+bits are threaded in from the same threefry stream as before, so the
+fused path is bit-identical to the multi-pass one (``encode_multipass``
+et al., kept below as the parity baseline) and to the pure-jnp reference
+oracle that ``use_kernels=False`` — or the ``REPRO_USE_KERNELS=0`` env
+override — selects. One caveat: the MEAN decode kernels (fused and
+multi-pass alike) accumulate ``val/L`` per worker while the oracle sums
+then scales, so kernel-vs-oracle equality there is exact only when the
+worker count is a power of two (scaling by 2^-k never rounds) and
+float-close otherwise; every other op is exact everywhere.
 """
 from __future__ import annotations
 
@@ -21,6 +37,9 @@ import jax.numpy as jnp
 
 from repro.core.quantizers import Quantizer
 from repro.kernels import ops
+
+#: schemes that use unbiased random rounding (Eq. 7) on a fitted table
+_RR_METHODS = ("orq", "terngrad", "qsgd", "linear", "minmax2", "bingrad_pb")
 
 
 def bucket_len(chunk: int, d: int) -> int:
@@ -33,16 +52,17 @@ _bucket_len = bucket_len
 
 
 def assign(qz: Quantizer, bkt, levels, key, use_kernels: bool, mask=None):
-    """Rounding dispatch: random-rounding methods go through the Pallas
-    quant_rr kernel (VMEM-tiled; never materializes an (nb, d, s) tensor).
+    """MULTI-PASS rounding dispatch (the PR-1..4 pipeline): random-rounding
+    methods go through the Pallas quant_rr kernel. Kept as the building
+    block of ``encode_multipass`` / the parity baseline; the default
+    ``encode``/``qdq`` path fuses this stage into one kernel instead.
 
     ``mask`` is the real bucket-validity mask; the σ-clip must see it so
     padded ragged-tail positions feed the σ estimate exactly as in
     ``qz.fit`` (``None`` = all valid)."""
     from repro.core import clipping, rounding as R
 
-    if qz.method in ("orq", "terngrad", "qsgd", "linear", "minmax2",
-                     "bingrad_pb"):
+    if qz.method in _RR_METHODS:
         if qz.clip_c is not None:
             if mask is None:
                 mask = jnp.ones(bkt.shape, dtype=bool)
@@ -55,13 +75,52 @@ def assign(qz: Quantizer, bkt, levels, key, use_kernels: bool, mask=None):
 _assign = assign
 
 
+def _fused_mode(qz: Quantizer) -> str:
+    """Static rounding mode of the fused stage for ``qz`` ('' = no fused
+    path; fall back to the multi-pass composition)."""
+    if qz.method in _RR_METHODS:
+        return "rr"
+    if qz.method == "bingrad_b":
+        return "bin"
+    if qz.method == "signsgd":
+        return "sign"
+    return ""
+
+
 def encode(qz: Quantizer, bkt, mask, key, *,
            use_kernels: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Fit levels on masked buckets, round, and bit-pack.
+    """Fit levels on masked buckets, round, and bit-pack — the fused path.
 
     bkt/mask are (nb, d_eff); returns ``(words, levels)`` wire units with
     masked-out slots forced to index 0 (they never reach the decoder's
-    averaged output — callers slice them away)."""
+    averaged output — callers slice them away). Everything after the
+    level fit is ONE ``pallas_call`` (for BinGrad-b the fit fuses too);
+    bit-identical to :func:`encode_multipass` given the same key."""
+    from repro.core import rounding as R
+
+    mode = _fused_mode(qz)
+    if mode == "bin":
+        # b₀ search + conditional-mean levels + threshold + pack, one sweep
+        return ops.encode_bingrad(bkt, mask, clip_c=qz.clip_c,
+                                  lloyd_iters=qz.lloyd_iters,
+                                  use_kernels=use_kernels)
+    if not mode:
+        return encode_multipass(qz, bkt, mask, key, use_kernels=use_kernels)
+    levels = qz.fit(bkt, mask)                            # runtime levels
+    rbits = R.random_bits(key, bkt.shape) if mode == "rr" else None
+    words = ops.encode_fused(bkt, levels, rbits, mask,
+                             bits=qz.wire_bits_per_element,
+                             clip_c=qz.clip_c, mode=mode,
+                             use_kernels=use_kernels)
+    return words, levels
+
+
+def encode_multipass(qz: Quantizer, bkt, mask, key, *,
+                     use_kernels: bool = True
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The PR-1..4 multi-pass encode (fit -> assign kernel -> masked
+    select -> pack kernel, each materializing (nb, d) intermediates).
+    Kept as the parity/regression baseline for the fused path."""
     levels = qz.fit(bkt, mask)                            # runtime levels
     idx = jnp.where(mask, assign(qz, bkt, levels, key, use_kernels,
                                  mask=mask), 0)
@@ -69,15 +128,47 @@ def encode(qz: Quantizer, bkt, mask, key, *,
     return words, levels
 
 
+def qdq(qz: Quantizer, bkt, mask, key, *,
+        use_kernels: bool = True) -> jnp.ndarray:
+    """Fused local quantize->dequantize on the wire layout: (nb, d_eff)
+    values -> (nb, d_eff) f32, bit-identical to what :func:`encode` would
+    put on the wire (same fit, same clip, same PRNG bits). The
+    error-feedback residual hot path — one ``pallas_call``, no idx or
+    pack/unpack round-trip (masked-out slots decode to level 0 exactly
+    like the multi-pass path)."""
+    from repro.core import rounding as R
+
+    levels = qz.fit(bkt, mask)
+    mode = _fused_mode(qz)
+    if not mode:
+        idx = jnp.where(mask, assign(qz, bkt, levels, key, use_kernels,
+                                     mask=mask), 0)
+        return Quantizer.decode(idx, levels)
+    rbits = R.random_bits(key, bkt.shape) if mode == "rr" else None
+    return ops.qdq_fused(bkt, levels, rbits, mask, clip_c=qz.clip_c,
+                         mode=mode, use_kernels=use_kernels)
+
+
+def decode(qz: Quantizer, words, levels, d_eff: int, *, average: bool = True,
+           use_kernels: bool = True) -> jnp.ndarray:
+    """Decode L stacked wire units in ONE ``pallas_call``: unpack +
+    dequantize [+ average]. ``average=True`` is the 'server' side of
+    phase 1 (-> (nb, d_eff) mean); ``average=False`` is phase 2's
+    deterministic broadcast decode (-> (L, nb, d_eff))."""
+    bits = qz.wire_bits_per_element
+    if average:
+        return ops.decode_fused_mean(words, levels, d_eff, bits=bits,
+                                     use_kernels=use_kernels)
+    return ops.decode_fused_each(words, levels, d_eff, bits=bits,
+                                 use_kernels=use_kernels)
+
+
 def decode_mean(qz: Quantizer, words, levels, d_eff: int, *,
                 use_kernels: bool = True) -> jnp.ndarray:
     """Decode L stacked wire units and average: (L, nb, nw) u32 + (L, nb, s)
     -> (nb, d_eff) mean values. This is the 'server' side of phase 1."""
-    bits = qz.wire_bits_per_element
-    idx_all = jax.vmap(
-        lambda w: ops.unpack(w, bits, d_eff, use_kernels=use_kernels)
-    )(words)                                              # (L, nb, d_eff)
-    return ops.dequant_avg(idx_all, levels, use_kernels=use_kernels)
+    return decode(qz, words, levels, d_eff, average=True,
+                  use_kernels=use_kernels)
 
 
 def decode_each(qz: Quantizer, words, levels, d_eff: int, *,
@@ -85,6 +176,24 @@ def decode_each(qz: Quantizer, words, levels, d_eff: int, *,
     """Decode L stacked wire units without averaging: -> (L, nb, d_eff).
     Phase 2's all-gather'ed broadcast is decoded this way (every worker
     reconstructs each server's re-quantized chunk deterministically)."""
+    return decode(qz, words, levels, d_eff, average=False,
+                  use_kernels=use_kernels)
+
+
+def decode_mean_multipass(qz: Quantizer, words, levels, d_eff: int, *,
+                          use_kernels: bool = True) -> jnp.ndarray:
+    """The PR-1..4 multi-pass mean decode (vmapped unpack kernel writing
+    the full (L, nb, d) idx tensor, then dequant_avg). Parity baseline."""
+    bits = qz.wire_bits_per_element
+    idx_all = jax.vmap(
+        lambda w: ops.unpack(w, bits, d_eff, use_kernels=use_kernels)
+    )(words)                                              # (L, nb, d_eff)
+    return ops.dequant_avg(idx_all, levels, use_kernels=use_kernels)
+
+
+def decode_each_multipass(qz: Quantizer, words, levels, d_eff: int, *,
+                          use_kernels: bool = True) -> jnp.ndarray:
+    """The PR-1..4 multi-pass per-worker decode. Parity baseline."""
     bits = qz.wire_bits_per_element
     idx_all = jax.vmap(
         lambda w: ops.unpack(w, bits, d_eff, use_kernels=use_kernels)

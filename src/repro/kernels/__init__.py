@@ -1,3 +1,14 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas kernel package for the wire-format hot path.
+#
+#   ops.py            env-flag resolution + jit'd public wrappers
+#   ref.py            pure-jnp oracles (bit-exact semantics for every kernel)
+#   fused_encode.py   ONE-pass clip->round->pack (encode_fused) and
+#                     clip->round->decode (qdq_fused, the EF residual path)
+#   fused_bingrad.py  fully-fused BinGrad-b (b0 search + levels + 1-bit pack)
+#   fused_decode.py   ONE-pass unpack->dequant->average / per-worker decode
+#   quant_rr.py, bitpack.py, dequant_avg.py, bingrad.py
+#                     the multi-pass kernels (PR 1-4 pipeline) — kept as the
+#                     parity baseline and for callers that need bare stages
+#
+# Perf is tracked by benchmarks/kernel_bench.py (BENCH_kernels.json); CI
+# gates regressions against benchmarks/BENCH_kernels_baseline.json.

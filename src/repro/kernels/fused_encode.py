@@ -1,0 +1,232 @@
+"""Pallas TPU kernel: fused one-pass gradient ENCODE (and local QDQ).
+
+The wire encode used to be 3-4 separate sweeps over the flat buffer —
+σ-clip, ``quant_rr`` (its own pallas_call), a masked select, and ``pack``
+(another pallas_call) — each materializing a full-size ``(nb, d)``
+intermediate in HBM between kernels. This module fuses the whole
+per-bucket pipeline into ONE VMEM-tiled sweep:
+
+    encode_fused   σ-estimate/clip -> interval search -> random rounding
+                   -> mask -> uint32 bit-pack, one ``pallas_call``; the
+                   only HBM write is the packed ``(nb, nw)`` wire words
+                   (a 32/bits shrink vs the old int32 idx intermediate).
+    qdq_fused      the error-feedback hot path: the same clip/round stage
+                   followed by an in-register level-table decode — the
+                   dequantized ``(nb, d)`` values come straight out, no
+                   idx tensor and no pack/unpack round-trip.
+
+Rounding modes (static):
+    "rr"    unbiased random rounding (Eq. 7) — orq / terngrad / qsgd /
+            linear / minmax2 / bingrad_pb; consumes precomputed threefry
+            uint32 bits so the output is bit-identical to the multi-pass
+            kernels and the jnp oracle (``ref.encode_fused_ref``).
+    "bin"   BinGrad-b threshold at the level midpoint (Eq. 17).
+    "sign"  scaled SignSGD threshold at 0 (Eq. 13).
+
+The level FIT for the rr schemes stays outside the kernel (ORQ's Alg. 1
+needs a per-bucket sort — cheap jnp, no pallas_call); the BinGrad-b fit
+is moments-only and fuses completely — see ``fused_bingrad.py``.
+
+Tiling matches the rest of the package: grid over ROW_BLOCK bucket rows,
+full bucket width per tile, level tables padded to a LEVEL_PAD lane tile
+(edge-replicated so the unrolled compares never read garbage). Columns
+are padded to a whole number of wire words; the padding is masked so it
+packs as index 0, exactly like the zero-pad in the multi-pass ``pack``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 8
+LEVEL_PAD = 32  # level-table tile width (s <= 17 always)
+_INV_U32 = float(1.0 / 4294967296.0)
+
+#: rounding modes the fused stage understands
+MODES = ("rr", "bin", "sign")
+
+
+def _sigma_clip_tile(v: jnp.ndarray, m: jnp.ndarray,
+                     clip_c: Optional[float]) -> jnp.ndarray:
+    """In-VMEM σ-clip on an (R, d) tile, mirroring ``clipping.sigma_clip``
+    term for term (masked moments around the masked mean, clip to ±c·σ).
+    The single definition shared by every fused kernel — the bit-identity
+    story depends on these ops matching the jnp oracle exactly."""
+    if clip_c is None:
+        return v
+    cnt = jnp.maximum(m.sum(axis=-1, keepdims=True), 1.0)
+    mean = (v * m).sum(axis=-1, keepdims=True) / cnt
+    var = (((v - mean) ** 2) * m).sum(axis=-1, keepdims=True) / cnt
+    lim = clip_c * jnp.sqrt(var)
+    return jnp.clip(v, -lim, lim)
+
+
+def _clip_round(s: int, clip_c: Optional[float], mode: str,
+                v: jnp.ndarray, lv: jnp.ndarray, m: jnp.ndarray,
+                u: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """The shared in-VMEM stage: σ-clip -> round -> mask. All operands are
+    (R, d) tiles (lv is (R, LEVEL_PAD)); returns masked int32 indices.
+
+    Numerics mirror ``clipping.sigma_clip`` + ``rounding.random_round`` /
+    ``rounding.threshold_round`` term for term so interpret mode is
+    bit-identical to the jnp oracle."""
+    v = _sigma_clip_tile(v, m, clip_c)
+    if mode == "rr":
+        # interval search: k = (#levels <= v) - 1, clipped to [0, s-2]
+        k = jnp.zeros(v.shape, dtype=jnp.int32)
+        for j in range(s):                       # static unroll, s <= 17
+            k = k + (v >= lv[:, j][:, None]).astype(jnp.int32)
+        k = jnp.clip(k - 1, 0, s - 2)
+        # lo = levels[k], hi = levels[k+1] via one-hot select (gather-free)
+        lo = jnp.zeros(v.shape, dtype=jnp.float32)
+        hi = jnp.zeros(v.shape, dtype=jnp.float32)
+        for j in range(s - 1):                   # static unroll
+            sel = (k == j).astype(jnp.float32)
+            lo = lo + sel * lv[:, j][:, None]
+            hi = hi + sel * lv[:, j + 1][:, None]
+        vc = jnp.clip(v, lo, hi)
+        width = hi - lo
+        p_up = jnp.where(width > 0,
+                         (vc - lo) / jnp.where(width > 0, width, 1.0), 0.0)
+        idx = k + (u < p_up).astype(jnp.int32)
+    elif mode == "bin":
+        thr = 0.5 * (lv[:, 0] + lv[:, 1])[:, None]
+        idx = (v >= thr).astype(jnp.int32)
+    elif mode == "sign":
+        idx = (v >= 0.0).astype(jnp.int32)
+    else:
+        raise ValueError(f"unknown rounding mode {mode!r}")
+    return jnp.where(m > 0, idx, 0)
+
+
+def _pack_words(idx: jnp.ndarray, bits: int, epw: int) -> jnp.ndarray:
+    """(R, d) int32 -> (R, ceil(d/epw)) uint32 shift-add pack (add == OR
+    on disjoint bit ranges; same lane order as the multi-pass pack
+    kernel). The ragged tail is zero-padded IN-REGISTER — padding the
+    kernel INPUTS instead would widen the row reductions (σ moments, the
+    BinGrad conditional means) and shift their rounding by an ulp vs the
+    jnp oracle."""
+    r, d = idx.shape
+    dp = -(-d // epw) * epw
+    if dp != d:
+        idx = jnp.concatenate(
+            [idx, jnp.zeros((r, dp - d), dtype=idx.dtype)], axis=-1)
+    lanes = idx.astype(jnp.uint32).reshape(r, dp // epw, epw)
+    acc = jnp.zeros((r, dp // epw), dtype=jnp.uint32)
+    for j in range(epw):                          # static unroll
+        acc = acc + (lanes[:, :, j] << jnp.uint32(bits * j))
+    return acc
+
+
+def _encode_kernel(s, bits, epw, clip_c, mode, *refs):
+    if mode == "rr":
+        v_ref, lv_ref, m_ref, u_ref, w_ref = refs
+        u = u_ref[...].astype(jnp.float32) * _INV_U32
+    else:
+        v_ref, lv_ref, m_ref, w_ref = refs
+        u = None
+    v = v_ref[...].astype(jnp.float32)
+    lv = lv_ref[...].astype(jnp.float32)
+    m = m_ref[...].astype(jnp.float32)
+    idx = _clip_round(s, clip_c, mode, v, lv, m, u)
+    w_ref[...] = _pack_words(idx, bits, epw)
+
+
+def _qdq_kernel(s, clip_c, mode, *refs):
+    if mode == "rr":
+        v_ref, lv_ref, m_ref, u_ref, o_ref = refs
+        u = u_ref[...].astype(jnp.float32) * _INV_U32
+    else:
+        v_ref, lv_ref, m_ref, o_ref = refs
+        u = None
+    v = v_ref[...].astype(jnp.float32)
+    lv = lv_ref[...].astype(jnp.float32)
+    m = m_ref[...].astype(jnp.float32)
+    idx = _clip_round(s, clip_c, mode, v, lv, m, u)
+    val = jnp.zeros(v.shape, dtype=jnp.float32)
+    for j in range(s):                  # static unroll, gather-free decode
+        val = val + (idx == j).astype(jnp.float32) * lv[:, j][:, None]
+    o_ref[...] = val
+
+
+def _padded(v, levels, bits_arr, mask, *, s: int, mode: str):
+    """Pad rows to ROW_BLOCK and the level table to LEVEL_PAD lanes.
+    Columns stay at the true bucket width ``d`` — row reductions inside
+    the kernel (σ moments) must run over exactly the elements the jnp
+    oracle sums. Returns (inputs, in_specs, rows)."""
+    nb, d = v.shape
+    rows = -(-nb // ROW_BLOCK) * ROW_BLOCK
+    pr = rows - nb
+    vp = jnp.pad(v.astype(jnp.float32), ((0, pr), (0, 0)))
+    mp = jnp.pad(mask.astype(jnp.float32), ((0, pr), (0, 0)))
+    lvp = jnp.pad(levels.astype(jnp.float32),
+                  ((0, pr), (0, LEVEL_PAD - s)), mode="edge")
+    inputs = [vp, lvp, mp]
+    in_specs = [
+        pl.BlockSpec((ROW_BLOCK, d), lambda i: (i, 0)),
+        pl.BlockSpec((ROW_BLOCK, LEVEL_PAD), lambda i: (i, 0)),
+        pl.BlockSpec((ROW_BLOCK, d), lambda i: (i, 0)),
+    ]
+    if mode == "rr":
+        inputs.append(jnp.pad(bits_arr, ((0, pr), (0, 0))))
+        in_specs.append(pl.BlockSpec((ROW_BLOCK, d), lambda i: (i, 0)))
+    return inputs, in_specs, rows
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "s", "clip_c", "mode",
+                                    "interpret"))
+def encode_fused(v: jnp.ndarray, levels: jnp.ndarray,
+                 rbits: Optional[jnp.ndarray], mask: jnp.ndarray, *,
+                 bits: int, s: int, clip_c: Optional[float] = None,
+                 mode: str = "rr", interpret: bool = True) -> jnp.ndarray:
+    """(nb, d) values + (nb, s) levels [+ (nb, d) uint32 bits] + (nb, d)
+    mask -> (nb, nw) packed uint32 wire words, nw = ceil(d / (32//bits)).
+
+    One ``pallas_call``: the clip, interval search, rounding, masking and
+    bit-pack all happen on the VMEM tile; nothing (nb, d)-sized is written
+    back to HBM."""
+    nb, d = v.shape
+    assert levels.shape == (nb, s), (levels.shape, (nb, s))
+    assert mode in MODES, mode
+    epw = 32 // bits
+    nw = -(-d // epw)
+    inputs, in_specs, rows = _padded(v, levels, rbits, mask, s=s, mode=mode)
+    out = pl.pallas_call(
+        functools.partial(_encode_kernel, s, bits, epw, clip_c, mode),
+        out_shape=jax.ShapeDtypeStruct((rows, nw), jnp.uint32),
+        grid=(rows // ROW_BLOCK,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((ROW_BLOCK, nw), lambda i: (i, 0)),
+        interpret=interpret,
+    )(*inputs)
+    return out[:nb]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("s", "clip_c", "mode", "interpret"))
+def qdq_fused(v: jnp.ndarray, levels: jnp.ndarray,
+              rbits: Optional[jnp.ndarray], mask: jnp.ndarray, *,
+              s: int, clip_c: Optional[float] = None, mode: str = "rr",
+              interpret: bool = True) -> jnp.ndarray:
+    """Fused local quantize->dequantize: same clip/round stage as
+    ``encode_fused`` but decoded in-register -> (nb, d) float32 values
+    (masked-out slots decode to level 0, like the multi-pass path). The
+    error-feedback residual hot loop — one pallas_call, no idx/pack."""
+    nb, d = v.shape
+    assert levels.shape == (nb, s), (levels.shape, (nb, s))
+    assert mode in MODES, mode
+    inputs, in_specs, rows = _padded(v, levels, rbits, mask, s=s, mode=mode)
+    out = pl.pallas_call(
+        functools.partial(_qdq_kernel, s, clip_c, mode),
+        out_shape=jax.ShapeDtypeStruct((rows, d), jnp.float32),
+        grid=(rows // ROW_BLOCK,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((ROW_BLOCK, d), lambda i: (i, 0)),
+        interpret=interpret,
+    )(*inputs)
+    return out[:nb]

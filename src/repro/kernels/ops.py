@@ -1,26 +1,44 @@
-"""jit'd public wrappers for the Pallas kernels.
+"""Public wrappers for the Pallas kernels — env-flag resolution + jit'd
+dispatch.
 
-``interpret`` defaults to True off-TPU (this container is CPU-only; interpret
-mode executes the kernel bodies in Python for correctness validation) and to
-False on a real TPU backend. The ``REPRO_PALLAS_INTERPRET`` environment
-variable overrides the backend autodetection in either direction
-(``1``/``true``/``yes``/``on`` forces interpret mode — e.g. to debug kernel
-numerics ON a TPU — and ``0``/``false``/``no``/``off`` forces compiled
-kernels); it is read at trace time, so set it before the first jit of a
-step function. The wrappers keep kernel use optional: the ``use_kernels``
-flag lets the comm layer fall back to the pure-jnp reference path (also the
-numerics oracle) — both are tested equal.
+Each wrapper is a thin Python dispatcher that resolves the environment
+overrides EAGERLY (i.e. at trace time of whatever jit is being built, or
+per call when used standalone) and then hands off to a jit'd
+implementation — the Pallas kernels are jit'd with static ``bits``/``s``/
+``d``/``interpret`` and the pure-jnp reference oracles are jit'd too, so
+standalone callers (benchmarks, notebooks) don't re-trace or run eagerly
+op-by-op on repeat calls with the same static shapes.
+
+Environment overrides (both read at trace time — set them before the
+first jit of a step function; ``tests/test_fused_kernels.py`` pins the
+trace-time read):
+
+``REPRO_PALLAS_INTERPRET``
+    Overrides the backend autodetection for Pallas interpret mode in
+    either direction (default: interpret everywhere except on a real TPU
+    backend). ``1``/``true``/``yes``/``on`` forces interpret mode — e.g.
+    to debug kernel numerics ON a TPU — and ``0``/``false``/``no``/``off``
+    forces compiled kernels.
+
+``REPRO_USE_KERNELS``
+    ``0`` forces the pure-jnp reference oracle (``ref.py``) for EVERY op
+    regardless of the caller's ``use_kernels`` flag — the CI matrix runs
+    the whole tier-1 suite this way to enforce kernel/ref parity.
+    ``1``/unset keeps the caller's flag (kernels by default).
 """
 from __future__ import annotations
 
 import os
+from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import bingrad as _bingrad
 from repro.kernels import bitpack as _bitpack
 from repro.kernels import dequant_avg as _dequant
+from repro.kernels import fused_bingrad as _fbin
+from repro.kernels import fused_decode as _fdec
+from repro.kernels import fused_encode as _fenc
 from repro.kernels import quant_rr as _quant
 from repro.kernels import ref as _ref
 
@@ -41,33 +59,139 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def kernels_enabled() -> bool:
+    """The ``REPRO_USE_KERNELS`` env override: ``0`` forces the pure-jnp
+    reference oracle everywhere (the CI parity matrix leg); ``1``/unset
+    keeps each caller's ``use_kernels`` flag."""
+    env = os.environ.get("REPRO_USE_KERNELS", "").strip().lower()
+    if env in _TRUE:
+        return True
+    if env in _FALSE:
+        return False
+    if env:
+        raise ValueError(
+            f"REPRO_USE_KERNELS={env!r}: expected one of "
+            f"{_TRUE + _FALSE} (or unset to keep the caller's flag)")
+    return True
+
+
+def _use(use_kernels: bool) -> bool:
+    return use_kernels and kernels_enabled()
+
+
+# jit'd reference oracles (static args mirror the kernel wrappers')
+_ref_quant_rr = jax.jit(_ref.quant_rr_ref)
+_ref_bingrad_pass = jax.jit(_ref.bingrad_pass_ref)
+_ref_dequant_avg = jax.jit(_ref.dequant_avg_ref)
+_ref_pack = jax.jit(_ref.pack_ref, static_argnums=(1,))
+_ref_unpack = jax.jit(_ref.unpack_ref, static_argnums=(1, 2))
+_ref_encode_fused = jax.jit(
+    _ref.encode_fused_ref, static_argnames=("bits", "clip_c", "mode"))
+_ref_qdq_fused = jax.jit(
+    _ref.qdq_fused_ref, static_argnames=("clip_c", "mode"))
+_ref_encode_bingrad = jax.jit(
+    _ref.encode_bingrad_fused_ref, static_argnames=("clip_c", "lloyd_iters"))
+_ref_decode_mean = jax.jit(
+    _ref.decode_fused_mean_ref, static_argnames=("d", "bits"))
+_ref_decode_each = jax.jit(
+    _ref.decode_fused_each_ref, static_argnames=("d", "bits"))
+
+
+# ---------------------------------------------------------------------------
+# multi-pass ops (the PR-1..4 pipeline; kept for parity tests + benchmarks)
+# ---------------------------------------------------------------------------
+
 def quant_rr(v, levels, bits, *, use_kernels: bool = True):
-    if not use_kernels:
-        return _ref.quant_rr_ref(v, levels, bits)
+    if not _use(use_kernels):
+        return _ref_quant_rr(v, levels, bits)
     return _quant.quant_rr(v, levels, bits, s=levels.shape[-1],
                            interpret=_interpret())
 
 
 def bingrad_pass(v, b0, mask, *, use_kernels: bool = True):
-    if not use_kernels:
-        return _ref.bingrad_pass_ref(v, b0, mask)
+    if not _use(use_kernels):
+        return _ref_bingrad_pass(v, b0, mask)
     return _bingrad.bingrad_pass(v, b0, mask, interpret=_interpret())
 
 
 def dequant_avg(idx, levels, *, use_kernels: bool = True):
-    if not use_kernels:
-        return _ref.dequant_avg_ref(idx, levels)
+    if not _use(use_kernels):
+        return _ref_dequant_avg(idx, levels)
     return _dequant.dequant_avg(idx, levels, s=levels.shape[-1],
                                 interpret=_interpret())
 
 
 def pack(idx, bits: int, *, use_kernels: bool = True):
-    if not use_kernels:
-        return _ref.pack_ref(idx, bits)
+    if not _use(use_kernels):
+        return _ref_pack(idx, bits)
     return _bitpack.pack(idx, bits=bits, interpret=_interpret())
 
 
 def unpack(words, bits: int, d: int, *, use_kernels: bool = True):
-    if not use_kernels:
-        return _ref.unpack_ref(words, bits, d)
+    if not _use(use_kernels):
+        return _ref_unpack(words, bits, d)
     return _bitpack.unpack(words, bits=bits, d=d, interpret=_interpret())
+
+
+# ---------------------------------------------------------------------------
+# fused one-pass ops (the PR-5 pipeline; wire.py's default path)
+# ---------------------------------------------------------------------------
+
+def encode_fused(v, levels, rbits, mask, *, bits: int,
+                 clip_c: Optional[float] = None, mode: str = "rr",
+                 use_kernels: bool = True):
+    """σ-clip + round + mask + bit-pack in ONE pallas_call: (nb, d) values
+    -> (nb, nw) uint32 wire words. ``rbits`` is the threefry uint32 stream
+    for mode='rr' (None for the deterministic modes)."""
+    if not _use(use_kernels):
+        return _ref_encode_fused(v, levels, rbits, mask, bits=bits,
+                                 clip_c=clip_c, mode=mode)
+    return _fenc.encode_fused(v, levels, rbits, mask, bits=bits,
+                              s=levels.shape[-1], clip_c=clip_c, mode=mode,
+                              interpret=_interpret())
+
+
+def qdq_fused(v, levels, rbits, mask, *, clip_c: Optional[float] = None,
+              mode: str = "rr", use_kernels: bool = True):
+    """σ-clip + round + mask + in-register decode in ONE pallas_call:
+    (nb, d) values -> (nb, d) dequantized f32 (the error-feedback path)."""
+    if not _use(use_kernels):
+        return _ref_qdq_fused(v, levels, rbits, mask, clip_c=clip_c,
+                              mode=mode)
+    return _fenc.qdq_fused(v, levels, rbits, mask, s=levels.shape[-1],
+                           clip_c=clip_c, mode=mode, interpret=_interpret())
+
+
+def encode_bingrad(v, mask, *, clip_c: Optional[float] = None,
+                   lloyd_iters: int = 0, use_kernels: bool = True):
+    """Fully-fused BinGrad-b: b₀ search + conditional-mean levels +
+    threshold + 1-bit pack in ONE pallas_call -> ((nb, nw) words,
+    (nb, 2) levels)."""
+    if not _use(use_kernels):
+        return _ref_encode_bingrad(v, mask, clip_c=clip_c,
+                                   lloyd_iters=lloyd_iters)
+    return _fbin.encode_bingrad_fused(v, mask, clip_c=clip_c,
+                                      lloyd_iters=lloyd_iters,
+                                      interpret=_interpret())
+
+
+def decode_fused_mean(words, levels, d: int, *, bits: int,
+                      use_kernels: bool = True):
+    """Unpack + dequantize + average L workers' payloads in ONE
+    pallas_call: (L, nb, nw) + (L, nb, s) -> (nb, d) f32 mean."""
+    if not _use(use_kernels):
+        return _ref_decode_mean(words, levels, d=d, bits=bits)
+    return _fdec.decode_fused_mean(words, levels, d=d, bits=bits,
+                                   s=levels.shape[-1],
+                                   interpret=_interpret())
+
+
+def decode_fused_each(words, levels, d: int, *, bits: int,
+                      use_kernels: bool = True):
+    """Unpack + dequantize (no averaging) in ONE pallas_call:
+    (L, nb, nw) + (L, nb, s) -> (L, nb, d) f32 values."""
+    if not _use(use_kernels):
+        return _ref_decode_each(words, levels, d=d, bits=bits)
+    return _fdec.decode_fused_each(words, levels, d=d, bits=bits,
+                                   s=levels.shape[-1],
+                                   interpret=_interpret())

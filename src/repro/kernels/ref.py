@@ -1,6 +1,16 @@
-"""Pure-jnp oracles for every Pallas kernel (bit-exact semantics)."""
+"""Pure-jnp oracles for every Pallas kernel (bit-exact semantics).
+
+The fused-kernel oracles (``encode_fused_ref`` & co.) are the LEGACY
+multi-pass compositions — σ-clip, round, mask, pack as separate jnp
+sweeps — kept as the single source of truth the one-pass kernels are
+tested bit-identical against (``use_kernels=False`` / ``REPRO_USE_KERNELS=0``
+select them at runtime).
+"""
 from __future__ import annotations
 
+from typing import Optional
+
+import jax
 import jax.numpy as jnp
 
 _INV_U32 = jnp.float32(1.0 / 4294967296.0)
@@ -56,3 +66,75 @@ def unpack_ref(words: jnp.ndarray, bits: int, d: int) -> jnp.ndarray:
     from repro.core import encode
 
     return encode.unpack(words, bits, d)
+
+
+# ---------------------------------------------------------------------------
+# fused-pipeline oracles (the legacy multi-pass compositions)
+# ---------------------------------------------------------------------------
+
+def _round_ref(v: jnp.ndarray, levels: jnp.ndarray,
+               rbits: Optional[jnp.ndarray], mask: jnp.ndarray,
+               clip_c: Optional[float], mode: str) -> jnp.ndarray:
+    """Shared clip+round stage: masked int32 level indices (the exact
+    legacy ``wire.assign`` + masked-select composition)."""
+    from repro.core import clipping
+
+    v = v.astype(jnp.float32)
+    if clip_c is not None:
+        v = clipping.sigma_clip(v, mask, clip_c)
+    if mode == "rr":
+        idx = quant_rr_ref(v, levels, rbits)
+    elif mode == "bin":
+        b0 = 0.5 * (levels[:, :1] + levels[:, 1:2])   # Eq. (17): midpoint
+        idx = (v >= b0).astype(jnp.int32)
+    elif mode == "sign":
+        idx = (v >= jnp.zeros((v.shape[0], 1))).astype(jnp.int32)
+    else:
+        raise ValueError(f"unknown rounding mode {mode!r}")
+    return jnp.where(mask, idx, 0)
+
+
+def encode_fused_ref(v: jnp.ndarray, levels: jnp.ndarray,
+                     rbits: Optional[jnp.ndarray], mask: jnp.ndarray, *,
+                     bits: int, clip_c: Optional[float] = None,
+                     mode: str = "rr") -> jnp.ndarray:
+    """Oracle for kernels.fused_encode.encode_fused."""
+    return pack_ref(_round_ref(v, levels, rbits, mask, clip_c, mode), bits)
+
+
+def qdq_fused_ref(v: jnp.ndarray, levels: jnp.ndarray,
+                  rbits: Optional[jnp.ndarray], mask: jnp.ndarray, *,
+                  clip_c: Optional[float] = None,
+                  mode: str = "rr") -> jnp.ndarray:
+    """Oracle for kernels.fused_encode.qdq_fused."""
+    idx = _round_ref(v, levels, rbits, mask, clip_c, mode)
+    return jnp.take_along_axis(levels.astype(jnp.float32), idx, axis=-1)
+
+
+def encode_bingrad_fused_ref(v: jnp.ndarray, mask: jnp.ndarray, *,
+                             clip_c: Optional[float] = None,
+                             lloyd_iters: int = 0):
+    """Oracle for kernels.fused_bingrad.encode_bingrad_fused."""
+    from repro.core import clipping
+    from repro.core import levels as L
+
+    v = v.astype(jnp.float32)
+    if clip_c is not None:
+        v = clipping.sigma_clip(v, mask, clip_c)
+    lv = L.bingrad_b_levels(v, mask, lloyd_iters=lloyd_iters)
+    idx = _round_ref(v, lv, None, mask, None, "bin")
+    return pack_ref(idx, 1), lv
+
+
+def decode_fused_mean_ref(words: jnp.ndarray, levels: jnp.ndarray, *,
+                          d: int, bits: int) -> jnp.ndarray:
+    """Oracle for kernels.fused_decode.decode_fused_mean."""
+    idx = jax.vmap(lambda w: unpack_ref(w, bits, d))(words)
+    return dequant_avg_ref(idx, levels)
+
+
+def decode_fused_each_ref(words: jnp.ndarray, levels: jnp.ndarray, *,
+                          d: int, bits: int) -> jnp.ndarray:
+    """Oracle for kernels.fused_decode.decode_fused_each."""
+    idx = jax.vmap(lambda w: unpack_ref(w, bits, d))(words)
+    return jnp.take_along_axis(levels, idx.astype(jnp.int32), axis=-1)

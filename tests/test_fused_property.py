@@ -1,0 +1,121 @@
+"""Property-based round-trip suite for the fused one-pass kernels.
+
+For every wire bit-width (1-5), arbitrary bucket shapes, ragged-tail
+masks, and PRNG keys: the fused ``encode``/``decode``/``qdq`` must be
+bit-identical to the PR-1..4 multi-pass pipeline AND to the pure-jnp
+reference oracle — including the per-bucket level tables that ride the
+wire. (Decode-mean kernel-vs-ref is the one comparison that is only
+allclose: the kernel accumulates ``val/L`` per worker while the oracle
+sums then scales; fused-vs-multipass stays exact on both settings.)
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.comm import wire  # noqa: E402
+from repro.core.quantizers import Quantizer  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")
+
+# one scheme per wire bit-width 1..5 (+ clip/lloyd variants mixed in)
+WIDTH_SCHEMES = [
+    dict(method="bingrad_b"),                               # 1 bit
+    dict(method="bingrad_b", clip_c=2.5, lloyd_iters=1),    # 1 bit
+    dict(method="signsgd"),                                 # 1 bit
+    dict(method="minmax2"),                                 # 1 bit
+    dict(method="terngrad"),                                # 2 bits
+    dict(method="terngrad", clip_c=2.5),                    # 2 bits
+    dict(method="orq", num_levels=5),                       # 3 bits
+    dict(method="linear", num_levels=5),                    # 3 bits
+    dict(method="orq", num_levels=9),                       # 4 bits
+    dict(method="qsgd", num_levels=9),                      # 4 bits
+    dict(method="orq", num_levels=17),                      # 5 bits
+    dict(method="orq", num_levels=17, clip_c=1.7),          # 5 bits
+]
+
+
+def _case(seed, scheme_i, nb, d, frac):
+    qz = Quantizer(bucket_size=d, **WIDTH_SCHEMES[scheme_i])
+    bkt = jax.random.laplace(jax.random.key(seed), (nb, d)) * 0.1
+    valid = max(1, int(nb * d * frac))          # ragged tail, >= 1 element
+    mask = jnp.arange(nb * d).reshape(nb, d) < valid
+    return qz, bkt, mask, jax.random.key(seed + 1)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 10 ** 6),
+    scheme_i=st.integers(0, len(WIDTH_SCHEMES) - 1),
+    nb=st.integers(1, 11),
+    d=st.sampled_from([17, 64, 96, 128, 257]),
+    frac=st.floats(0.05, 1.0),
+)
+def test_encode_roundtrip_bit_identical(seed, scheme_i, nb, d, frac):
+    """fused == multi-pass == reference oracle, words AND level tables."""
+    qz, bkt, mask, key = _case(seed, scheme_i, nb, d, frac)
+    w_f, lv_f = wire.encode(qz, bkt, mask, key, use_kernels=True)
+    w_m, lv_m = wire.encode_multipass(qz, bkt, mask, key, use_kernels=True)
+    w_r, lv_r = wire.encode(qz, bkt, mask, key, use_kernels=False)
+    assert (np.asarray(w_f) == np.asarray(w_m)).all()
+    assert (np.asarray(w_f) == np.asarray(w_r)).all()
+    assert (np.asarray(lv_f) == np.asarray(lv_m)).all()
+    assert (np.asarray(lv_f) == np.asarray(lv_r)).all()
+
+    # decode round-trip: words survive unpack exactly on both paths
+    ws, lvs = w_f[None], lv_f[None]
+    e_f = wire.decode_each(qz, ws, lvs, d, use_kernels=True)
+    e_m = wire.decode_each_multipass(qz, ws, lvs, d, use_kernels=True)
+    e_r = wire.decode_each(qz, ws, lvs, d, use_kernels=False)
+    assert (np.asarray(e_f) == np.asarray(e_m)).all()
+    assert (np.asarray(e_f) == np.asarray(e_r)).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 10 ** 6),
+    scheme_i=st.integers(0, len(WIDTH_SCHEMES) - 1),
+    nb=st.integers(1, 9),
+    d=st.sampled_from([33, 64, 128]),
+    L=st.integers(1, 5),
+    frac=st.floats(0.05, 1.0),
+)
+def test_decode_mean_bit_identical_to_multipass(seed, scheme_i, nb, d, L,
+                                                frac):
+    """Per-worker wire units with DIFFERENT keys/levels; the fused mean
+    decode must equal the multi-pass kernels exactly and the oracle to
+    float tolerance."""
+    qz, bkt, mask, _ = _case(seed, scheme_i, nb, d, frac)
+    units = [wire.encode(qz, bkt, mask, jax.random.key(seed + i))
+             for i in range(L)]
+    ws = jnp.stack([u[0] for u in units])
+    lvs = jnp.stack([u[1] for u in units])
+    m_f = wire.decode_mean(qz, ws, lvs, d, use_kernels=True)
+    m_m = wire.decode_mean_multipass(qz, ws, lvs, d, use_kernels=True)
+    assert (np.asarray(m_f) == np.asarray(m_m)).all()
+    m_r = wire.decode_mean(qz, ws, lvs, d, use_kernels=False)
+    np.testing.assert_allclose(np.asarray(m_f), np.asarray(m_r),
+                               rtol=1e-6, atol=1e-7)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 10 ** 6),
+    scheme_i=st.integers(0, len(WIDTH_SCHEMES) - 1),
+    nb=st.integers(1, 9),
+    d=st.sampled_from([33, 64, 128]),
+    frac=st.floats(0.05, 1.0),
+)
+def test_qdq_bit_identical(seed, scheme_i, nb, d, frac):
+    """The fused error-feedback qdq == legacy fit/assign/decode == oracle."""
+    qz, bkt, mask, key = _case(seed, scheme_i, nb, d, frac)
+    got = wire.qdq(qz, bkt, mask, key, use_kernels=True)
+    lv = qz.fit(bkt, mask)
+    idx = jnp.where(mask, wire.assign(qz, bkt, lv, key, True, mask=mask), 0)
+    want = Quantizer.decode(idx, lv)
+    assert (np.asarray(got) == np.asarray(want)).all()
+    ref = wire.qdq(qz, bkt, mask, key, use_kernels=False)
+    assert (np.asarray(got) == np.asarray(ref)).all()
