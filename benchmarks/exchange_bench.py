@@ -1,0 +1,225 @@
+"""Exchange benchmark: single-shot vs PIPELINED quantized all-reduce.
+
+Times ``GradientExchange.exchange_flat`` (the full two-phase Algorithm 2
+exchange) on an 8-fake-device host mesh across ``pipeline_chunks`` values
+and emits ``BENCH_exchange.json`` in a stable schema CI can diff:
+
+    {"schema": 1, "jax": ..., "n_devices": 8, "quick": ...,
+     "summary": {"<scheme>": {"best_k": ..., "best_speedup": ...,
+                              "wins": <#chunk counts at least as fast
+                                       as single-shot>}},
+     "entries": [{"key": "exchange/terngrad/n392708/k4",
+                  "scheme": "terngrad", "n": ..., "pipeline_chunks": 4,
+                  "step_us": ..., "speedup_vs_single_shot": ...}, ...]}
+
+The pipelined schedule splits the flat buffer's bucket rows into K
+chunks, each with its own encode -> all_to_all -> decode (and re-quantize
+-> all_gather in phase 2), bit-identical to K=1 — so the gate here is
+purely about STEP TIME. Like ``kernel_bench``, timings are min-of-iters
+and the gated quantity is a ratio measured in the same process
+(``speedup_vs_single_shot``), so runner speed cancels. The container is
+CPU-only: there is no real compute/transfer overlap, but the chunked
+schedule still pays its real dispatch/layout costs while working on
+cache-sized pieces — the gate protects "pipelining does not cost step
+time", the TPU overlap win comes on top.
+
+Gate (``--check``): schema intact, no errors, every scheme must show
+``wins >= 2`` (pipelined step-time <= single-shot, within a small noise
+allowance, at two or more chunk counts), and the per-scheme best speedup
+must not regress more than ``--tolerance`` vs the committed baseline.
+
+Usage:
+    PYTHONPATH=src:. python benchmarks/exchange_bench.py [--quick]
+    PYTHONPATH=src:. python benchmarks/exchange_bench.py --check NEW.json \
+        --baseline benchmarks/BENCH_exchange.json [--tolerance .25]
+    PYTHONPATH=src:. python benchmarks/exchange_bench.py --quick \
+        --update-baseline        # refresh the committed baseline
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+SCHEMA = 1
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_BASELINE = os.path.join(ROOT, "benchmarks", "BENCH_exchange.json")
+
+#: noise allowance on "pipelined <= single-shot": a chunk count counts as
+#: a win when step_us <= single_shot_us * (1 + WIN_SLACK)
+WIN_SLACK = 0.05
+
+QUICK = dict(schemes=("bingrad-b", "terngrad"), n=512 * 96 * 8 - 100,
+             ks=(1, 2, 4, 8), iters=5, warmup=2)
+FULL = dict(schemes=("bingrad-b", "terngrad", "orq-9"), n=512 * 96 * 8 - 100,
+            ks=(1, 2, 4, 8), iters=8, warmup=3)
+
+# the timing loop runs in a subprocess: the fake 8-device view must not
+# leak into the caller (same rule as tests/ and benchmarks/distributed.py)
+PROG = """
+import json, time
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.core import comm
+from repro.core.api import QuantConfig
+from repro.utils.compat import shard_map
+
+cfg = json.loads({cfg_json!r})
+mesh = jax.make_mesh((8,), ("dp",))
+key = jax.random.key(7)
+x = jax.random.normal(jax.random.key(1), (8, cfg["n"]), jnp.float32)
+
+def time_min(fn):
+    for _ in range(cfg["warmup"]):
+        jax.block_until_ready(fn(x))
+    best = float("inf")
+    for _ in range(cfg["iters"]):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(x))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+entries = []
+for scheme in cfg["schemes"]:
+    qz = QuantConfig(name=scheme, bucket_size=512).to_quantizer()
+    for k in cfg["ks"]:
+        eng = comm.GradientExchange(qz, ("dp",), pipeline_chunks=k)
+        fn = jax.jit(shard_map(lambda v: eng.exchange_flat(v[0], key),
+                               mesh=mesh, in_specs=P("dp"), out_specs=P(),
+                               check_vma=False))
+        entries.append({{"scheme": scheme, "n": cfg["n"],
+                         "pipeline_chunks": k,
+                         "step_us": round(time_min(fn), 1)}})
+print("RESULT " + json.dumps(entries))
+"""
+
+
+def bench(quick: bool = True) -> dict:
+    import jax
+
+    cfg = QUICK if quick else FULL
+    prog = PROG.format(cfg_json=json.dumps(cfg))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(prog)],
+                         env=env, capture_output=True, text=True,
+                         timeout=3600)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"exchange bench subprocess failed:\n{out.stdout}\n{out.stderr}")
+    line = [ln for ln in out.stdout.splitlines()
+            if ln.startswith("RESULT ")][-1]
+    raw = json.loads(line[len("RESULT "):])
+
+    base = {e["scheme"]: e["step_us"] for e in raw
+            if e["pipeline_chunks"] == 1}
+    entries, summary = [], {}
+    for e in raw:
+        ss = base[e["scheme"]]
+        sp = round(ss / e["step_us"], 4) if e["step_us"] else 0.0
+        entries.append({
+            "key": (f"exchange/{e['scheme']}/n{e['n']}"
+                    f"/k{e['pipeline_chunks']}"),
+            "scheme": e["scheme"], "n": e["n"],
+            "pipeline_chunks": e["pipeline_chunks"],
+            "step_us": e["step_us"], "speedup_vs_single_shot": sp,
+        })
+    for scheme in {e["scheme"] for e in entries}:
+        es = [e for e in entries if e["scheme"] == scheme
+              and e["pipeline_chunks"] > 1]
+        best = max(es, key=lambda e: e["speedup_vs_single_shot"])
+        wins = sum(e["step_us"] <= base[scheme] * (1.0 + WIN_SLACK)
+                   for e in es)
+        summary[scheme] = {"best_k": best["pipeline_chunks"],
+                           "best_speedup": best["speedup_vs_single_shot"],
+                           "wins": wins}
+    return {"schema": SCHEMA, "jax": jax.__version__, "n_devices": 8,
+            "quick": quick, "win_slack": WIN_SLACK,
+            "summary": summary, "entries": entries}
+
+
+def check(new: dict, baseline: dict, tolerance: float) -> list:
+    """Regression gate. Returns failure strings (empty = pass).
+
+    Hard checks: schema version; every scheme shows ``wins >= 2`` —
+    pipelined step-time at-most single-shot (within WIN_SLACK) at two or
+    more chunk counts. Timing check: per-scheme best pipelined speedup
+    must stay within ``tolerance`` of the baseline's."""
+    fails = []
+    if new.get("schema") != SCHEMA:
+        fails.append(f"schema mismatch: {new.get('schema')} != {SCHEMA}")
+        return fails
+    if not new.get("entries"):
+        return ["no entries in run"]
+    for scheme, s in new.get("summary", {}).items():
+        if s["wins"] < 2:
+            fails.append(
+                f"{scheme}: pipelined step-time beat single-shot at only "
+                f"{s['wins']} chunk count(s) (need >= 2)")
+        b = baseline.get("summary", {}).get(scheme)
+        if b and s["best_speedup"] < b["best_speedup"] * (1.0 - tolerance):
+            fails.append(
+                f"{scheme}: best pipelined speedup regressed "
+                f"{b['best_speedup']:.3f} -> {s['best_speedup']:.3f} "
+                f"(> {tolerance:.0%} drop)")
+    return fails
+
+
+def run(emit) -> None:
+    """benchmarks.run hook: quick pass, CSV rows + JSON artifact."""
+    from benchmarks.common import csv_row
+
+    res = bench(quick=True)
+    with open("BENCH_exchange.json", "w") as fh:
+        json.dump(res, fh, indent=1, sort_keys=True)
+    for e in res["entries"]:
+        emit(csv_row(e["key"], e["step_us"],
+                     f"x{e['speedup_vs_single_shot']:.2f}_vs_single_shot"))
+    emit(csv_row("exchange/json", 0.0, "wrote BENCH_exchange.json"))
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="BENCH_exchange.json")
+    ap.add_argument("--check", metavar="RUN_JSON", default=None)
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--tolerance", type=float, default=0.25)
+    ap.add_argument("--update-baseline", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.check:
+        with open(args.check) as fh:
+            new = json.load(fh)
+        with open(args.baseline) as fh:
+            base = json.load(fh)
+        fails = check(new, base, args.tolerance)
+        for f in fails:
+            print(f"FAIL {f}")
+        if fails:
+            sys.exit(1)
+        print(f"OK {len(new['entries'])} entries; pipelined wins >= 2 "
+              f"chunk counts per scheme "
+              f"({os.path.basename(args.baseline)})")
+        return
+
+    res = bench(quick=args.quick)
+    out = args.baseline if args.update_baseline else args.out
+    with open(out, "w") as fh:
+        json.dump(res, fh, indent=1, sort_keys=True)
+    print(f"wrote {out} ({len(res['entries'])} entries)")
+    for e in res["entries"]:
+        print(f"  {e['key']}: {e['step_us'] / 1e3:.1f}ms "
+              f"x{e['speedup_vs_single_shot']:.2f}")
+    for scheme, s in res["summary"].items():
+        print(f"  {scheme}: best k={s['best_k']} "
+              f"x{s['best_speedup']:.2f}, wins={s['wins']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -27,7 +27,11 @@ runners without going blind:
   encode entries and all decode entries (one gate per op) — averaging
   ~5 schemes beats per-entry scheduler noise down far below the
   tolerance while still catching a fused pipeline that got slower
-  relative to the work it replaces.
+  relative to the work it replaces;
+* ENCODE additionally carries a hard absolute floor (PR 6): its
+  speedup_vs_multipass geomean must exceed 1.0 — the fused encode has to
+  BEAT the multipass path, not just hold its baseline ratio. Decode
+  stays regression-gated only.
 
 It also fails hard if any entry lost bit-identity, errored, or the
 schema changed. Per-entry raw microseconds are recorded for humans (and
@@ -230,14 +234,18 @@ def bench(quick: bool = True, backend: str = "interpret") -> dict:
 
 
 def check(new: dict, baseline: dict, tolerance: float,
-          raw: bool = False) -> list:
+          raw: bool = False, encode_floor: float = 1.0) -> list:
     """Regression gate. Returns a list of failure strings (empty = pass).
 
     Hard (deterministic) checks: schema version, no errored entries,
-    every entry bit-identical. Timing check: the encode/decode GEOMEAN
-    of ``speedup_vs_multipass`` must stay within ``tolerance`` of the
-    baseline geomean — computed over the overlapping keys only, so a
-    changed scheme matrix can't silently skew the comparison."""
+    every entry bit-identical, and — since the PR 6 tiling fix — the
+    encode ``speedup_vs_multipass`` geomean of the NEW run must clear
+    ``encode_floor`` (> 1.0: the fused encode must actually beat the
+    multipass path it replaced, not merely not regress). Timing check:
+    the encode/decode GEOMEAN of ``speedup_vs_multipass`` must stay
+    within ``tolerance`` of the baseline geomean — computed over the
+    overlapping keys only, so a changed scheme matrix can't silently
+    skew the comparison (decode stays regression-gated only)."""
     fails = []
     if new.get("schema") != SCHEMA:
         fails.append(f"schema mismatch: {new.get('schema')} != {SCHEMA}")
@@ -264,6 +272,16 @@ def check(new: dict, baseline: dict, tolerance: float,
     if not any(news for news, _ in overlap.values()):
         fails.append("no overlapping keys between run and baseline "
                      "(wrong baseline file or schema drift?)")
+    enc = [e["speedup_vs_multipass"] for e in new.get("entries", [])
+           if "error" not in e and e["op"] == "encode"]
+    if enc and encode_floor is not None:
+        g_enc = _geomean(enc)
+        if g_enc <= encode_floor:
+            fails.append(
+                f"encode: speedup_vs_multipass geomean {g_enc:.3f} does "
+                f"not clear the hard floor {encode_floor:.2f} over "
+                f"{len(enc)} entries — the fused encode must beat the "
+                f"multipass path")
     for op, (news, olds) in overlap.items():
         if not news:
             continue
@@ -306,6 +324,10 @@ def main(argv=None) -> None:
                          "benchmarking")
     ap.add_argument("--baseline", default=DEFAULT_BASELINE)
     ap.add_argument("--tolerance", type=float, default=0.25)
+    ap.add_argument("--encode-floor", type=float, default=1.0,
+                    help="hard floor for the NEW run's encode "
+                         "speedup_vs_multipass geomean (fused must beat "
+                         "multipass); pass a negative value to disable")
     ap.add_argument("--check-raw", action="store_true",
                     help="also gate raw fused_us (homogeneous runners only)")
     ap.add_argument("--update-baseline", action="store_true",
@@ -317,7 +339,9 @@ def main(argv=None) -> None:
             new = json.load(fh)
         with open(args.baseline) as fh:
             base = json.load(fh)
-        fails = check(new, base, args.tolerance, raw=args.check_raw)
+        floor = None if args.encode_floor < 0 else args.encode_floor
+        fails = check(new, base, args.tolerance, raw=args.check_raw,
+                      encode_floor=floor)
         for f in fails:
             print(f"FAIL {f}")
         if fails:

@@ -1,6 +1,15 @@
 """§Roofline: read the dry-run artifacts and print the per-(arch x shape)
 roofline table (compute/memory/collective terms, bottleneck, useful-flops
-ratio). The dry-runs themselves are produced by launch/dryrun.py."""
+ratio). The dry-runs themselves are produced by launch/dryrun.py.
+
+Also emits per-pallas_call rows for the fused one-pass quantization
+kernels (``roofline/pallas/...``): VMEM footprint per grid step,
+arithmetic intensity, and whether the block sizing honours the kernels'
+VMEM_TILE_BYTES budget. These come from the jaxpr (launch.hlo_cost.
+pallas_call_stats) — the HLO text parser cannot see interpret-mode
+pallas_calls — so the PR 5/6 tiling fix is checkable in-repo without a
+TPU.
+"""
 from __future__ import annotations
 
 import glob
@@ -12,8 +21,61 @@ from benchmarks.common import csv_row
 DRYRUN_DIR = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "experiments", "dryrun")
 
+#: (tag, scheme kwargs) — one fused kernel family per wire format:
+#: round-to-nearest-or-random (orq), sigma-clipped (terngrad), bingrad
+_PALLAS_SCHEMES = [
+    ("orq-9", dict(method="orq", num_levels=9)),
+    ("terngrad", dict(method="terngrad", clip_c=2.5)),
+    ("bingrad-b", dict(method="bingrad_b")),
+]
+
+#: (nb, d) shapes: small fits one grid step; large forces row_block to
+#: split the grid so the VMEM cap is visibly load-bearing
+_PALLAS_SHAPES = [(64, 512), (4096, 512)]
+
+
+def _pallas_rows(emit):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.comm import wire
+    from repro.core.quantizers import Quantizer
+    from repro.kernels.fused_encode import VMEM_TILE_BYTES
+    from repro.launch.hlo_cost import pallas_call_stats
+
+    for label, kw in _PALLAS_SCHEMES:
+        for nb, d in _PALLAS_SHAPES:
+            qz = Quantizer(bucket_size=d, **kw)
+            bkt = jnp.ones((nb, d), jnp.float32)
+            mask = jnp.ones((nb, d), jnp.float32)
+            key = jax.random.key(0)
+
+            enc = jax.make_jaxpr(
+                lambda b, m, k: wire.encode(qz, b, m, k, use_kernels=True)
+            )(bkt, mask, key)
+            words, levels = wire.encode(qz, bkt, mask, key, use_kernels=True)
+            ws = jnp.stack([words] * 4)
+            lvs = jnp.stack([levels] * 4)
+            dec = jax.make_jaxpr(
+                lambda w, l: wire.decode_mean(qz, w, l, d, use_kernels=True)
+            )(ws, lvs)
+
+            for op, closed in (("encode", enc), ("decode", dec)):
+                for st in pallas_call_stats(closed):
+                    fits = st["vmem_bytes"] <= VMEM_TILE_BYTES
+                    emit(csv_row(
+                        f"roofline/pallas/{op}/{label}/nb{nb}xd{d}"
+                        f"/{st['kernel']}",
+                        0.0,
+                        f"grid={'x'.join(map(str, st['grid'])) or '1'};"
+                        f"vmem_KiB={st['vmem_bytes'] / 1024:.0f};"
+                        f"hbm_KiB={st['hbm_bytes'] / 1024:.0f};"
+                        f"ai={st['arithmetic_intensity']:.2f}flop_per_B;"
+                        f"fits_vmem_tile={'yes' if fits else 'NO'}"))
+
 
 def run(emit):
+    _pallas_rows(emit)
     files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
     if not files:
         emit(csv_row("roofline/none", 0.0,

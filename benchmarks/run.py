@@ -19,6 +19,7 @@ MODULES = [
     ("table5_distributed", "benchmarks.distributed"),
     ("roofline", "benchmarks.roofline"),
     ("kernels", "benchmarks.kernel_bench"),
+    ("exchange", "benchmarks.exchange_bench"),
 ]
 
 

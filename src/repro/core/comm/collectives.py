@@ -69,13 +69,40 @@ def axis_size(axis_names) -> int:
 # phase 1 core: quantized reduce-scatter over explicit (L, chunk) parts
 # ---------------------------------------------------------------------------
 
-def _rs_mean_parts(parts, valid, qz: Quantizer, key, names, use_kernels):
+def _chunk_spans(n_rows: int, k) -> list:
+    """Split ``n_rows`` bucket rows into ``k`` contiguous [a, b) spans
+    (clamped to [1, n_rows]; the first ``n_rows % k`` spans get the extra
+    row). The pipeline schedule is STATIC — span boundaries are Python
+    ints, so each chunk lowers to its own encode + collective ops and XLA's
+    latency-hiding scheduler can overlap chunk k's transfer with chunk
+    k+1's encode."""
+    k = max(1, min(int(k), n_rows))
+    base, rem = divmod(n_rows, k)
+    spans, a = [], 0
+    for i in range(k):
+        b = a + base + (1 if i < rem else 0)
+        spans.append((a, b))
+        a = b
+    return spans
+
+
+def _rs_mean_parts(parts, valid, qz: Quantizer, key, names, use_kernels,
+                   pipeline_chunks: int = 1):
     """parts (L, chunk) local contributions, one row per destination worker;
     valid (L, chunk) bool. Returns this worker's (chunk,) mean slice.
 
     ``key`` must already be folded per-worker (callers fold in the dp axis
     index OUTSIDE any nested manual region — axis_index of an outer-manual
-    axis cannot lower inside a nested shard_map)."""
+    axis cannot lower inside a nested shard_map).
+
+    ``pipeline_chunks > 1`` splits the nbc bucket rows into that many
+    contiguous spans and runs fit→encode→all_to_all→decode once per span,
+    double-buffered: span k's payload is in flight while span k+1 encodes.
+    Bit-identical to the single-shot path — every encode/decode stage is
+    independent per bucket row, and the random-rounding stream is drawn
+    ONCE at the full (L·nbc, d_eff) layout and sliced per span (threefry
+    bits are counter-based over the flattened shape, so drawing them at
+    the span's own shape would change them)."""
     L, chunk = parts.shape
     d_eff = _bucket_len(chunk, qz.bucket_size)
     pad = -(-chunk // d_eff) * d_eff - chunk
@@ -85,14 +112,40 @@ def _rs_mean_parts(parts, valid, qz: Quantizer, key, names, use_kernels):
 
     bkt = parts.reshape(L * nbc, d_eff)
     mask = valid.reshape(L * nbc, d_eff)
-    words, levels = wire.encode(qz, bkt, mask, key, use_kernels=use_kernels)
-    words = words.reshape(L, nbc, -1)
-    levels = levels.reshape(L, nbc, -1)
-    # the wire: uint32 payload + f32 level tables
-    words = lax.all_to_all(words, names, split_axis=0, concat_axis=0)
-    levels = lax.all_to_all(levels, names, split_axis=0, concat_axis=0)
-    mean_bkt = wire.decode_mean(qz, words, levels, d_eff,
-                                use_kernels=use_kernels)
+    spans = _chunk_spans(nbc, pipeline_chunks)
+    if len(spans) == 1:
+        words, levels = wire.encode(qz, bkt, mask, key,
+                                    use_kernels=use_kernels)
+        words = words.reshape(L, nbc, -1)
+        levels = levels.reshape(L, nbc, -1)
+        # the wire: uint32 payload + f32 level tables
+        words = lax.all_to_all(words, names, split_axis=0, concat_axis=0)
+        levels = lax.all_to_all(levels, names, split_axis=0, concat_axis=0)
+        mean_bkt = wire.decode_mean(qz, words, levels, d_eff,
+                                    use_kernels=use_kernels)
+        return mean_bkt.reshape(-1)[:chunk]
+
+    # pipelined: K per-span wire units, each its own pair of all_to_alls.
+    rbits = wire.encode_rbits(qz, key, (L * nbc, d_eff))
+    bkt = bkt.reshape(L, nbc, d_eff)
+    mask = mask.reshape(L, nbc, d_eff)
+    rbits = None if rbits is None else rbits.reshape(L, nbc, d_eff)
+    means = []
+    for a, b in spans:
+        sz = b - a
+        sw, sl = wire.encode(
+            qz, bkt[:, a:b].reshape(L * sz, d_eff),
+            mask[:, a:b].reshape(L * sz, d_eff), key,
+            use_kernels=use_kernels,
+            rbits=None if rbits is None
+            else rbits[:, a:b].reshape(L * sz, d_eff))
+        sw = sw.reshape(L, sz, -1)
+        sl = sl.reshape(L, sz, -1)
+        sw = lax.all_to_all(sw, names, split_axis=0, concat_axis=0)
+        sl = lax.all_to_all(sl, names, split_axis=0, concat_axis=0)
+        means.append(wire.decode_mean(qz, sw, sl, d_eff,
+                                      use_kernels=use_kernels))
+    mean_bkt = jnp.concatenate(means, axis=0)             # (nbc, d_eff)
     return mean_bkt.reshape(-1)[:chunk]
 
 
@@ -115,6 +168,7 @@ def quantized_reduce_scatter_mean(
     worker_id=None,
     use_kernels: bool = True,
     valid=None,
+    pipeline_chunks: int = 1,
 ) -> jnp.ndarray:
     """Each worker holds a full local gradient ``flat`` (n,). Returns this
     worker's (chunk,) slice of the across-worker *mean*, chunk = ceil(n/L).
@@ -123,7 +177,10 @@ def quantized_reduce_scatter_mean(
     ``worker_id`` defaults to ``axis_index`` of the dp axes; custom-VJP
     backward callers must pass it explicitly (axis_index cannot lower from
     transposed/hoisted contexts). ``valid`` optionally marks which of the
-    n positions are real data (default: all of them)."""
+    n positions are real data (default: all of them). ``pipeline_chunks``
+    splits the exchange into that many bucket-row spans whose encodes
+    overlap the previous span's transfer — bit-identical to the
+    single-shot schedule (see ``_rs_mean_parts``)."""
     n = flat.shape[0]
     names = _names(axis_names)
     L = axis_size(names)
@@ -138,7 +195,7 @@ def quantized_reduce_scatter_mean(
         worker_id = lax.axis_index(names)
     key = jax.random.fold_in(key, worker_id)
     return _rs_mean_parts(padded.reshape(L, chunk), valid, qz, key, names,
-                          use_kernels)
+                          use_kernels, pipeline_chunks=pipeline_chunks)
 
 
 # ---------------------------------------------------------------------------
@@ -188,11 +245,14 @@ def quantized_all_reduce_mean(
     server_requant: bool = True,
     use_kernels: bool = True,
     valid=None,
+    pipeline_chunks: int = 1,
 ) -> jnp.ndarray:
     """Full Algorithm 2 exchange. Returns the (n,) mean gradient, identical
     on every worker (the phase-2 decode is deterministic). ``valid``
     optionally marks the real positions of ``flat`` (both phases fit their
-    levels on valid data only)."""
+    levels on valid data only). ``pipeline_chunks`` chunks BOTH phases —
+    phase 2's re-quantize + all_gather pipelines over the same bucket-row
+    spans as phase 1 — and stays bit-identical to the single-shot path."""
     n = flat.shape[0]
     names = _names(axis_names)
     L = axis_size(names)
@@ -202,7 +262,7 @@ def quantized_all_reduce_mean(
     chunk = -(-n // L)
     mean_chunk = quantized_reduce_scatter_mean(
         flat, qz, key, names, worker_id=worker_id, use_kernels=use_kernels,
-        valid=valid)
+        valid=valid, pipeline_chunks=pipeline_chunks)
 
     if not server_requant:
         full = lax.all_gather(mean_chunk, names, axis=0, tiled=False)
@@ -222,11 +282,27 @@ def quantized_all_reduce_mean(
         mask = jnp.pad(vchunk, (0, pad))
     mask = mask.reshape(-1, d_eff)
     key2 = jax.random.fold_in(jax.random.fold_in(key, 0x5EC0), me)
-    words, levels = wire.encode(qz, bkt, mask, key2, use_kernels=use_kernels)
-    words = lax.all_gather(words, names, axis=0, tiled=False)
-    levels_all = lax.all_gather(levels, names, axis=0, tiled=False)
-    vals = wire.decode_each(qz, words, levels_all, d_eff,
-                            use_kernels=use_kernels)      # (L, nbc, d_eff)
+    spans = _chunk_spans(bkt.shape[0], pipeline_chunks)
+    if len(spans) == 1:
+        words, levels = wire.encode(qz, bkt, mask, key2,
+                                    use_kernels=use_kernels)
+        words = lax.all_gather(words, names, axis=0, tiled=False)
+        levels_all = lax.all_gather(levels, names, axis=0, tiled=False)
+        vals = wire.decode_each(qz, words, levels_all, d_eff,
+                                use_kernels=use_kernels)  # (L, nbc, d_eff)
+    else:
+        # pipelined downlink: span k's gather flies while k+1 re-quantizes.
+        rbits = wire.encode_rbits(qz, key2, bkt.shape)
+        parts = []
+        for a, b in spans:
+            sw, sl = wire.encode(qz, bkt[a:b], mask[a:b], key2,
+                                 use_kernels=use_kernels,
+                                 rbits=None if rbits is None else rbits[a:b])
+            sw = lax.all_gather(sw, names, axis=0, tiled=False)
+            sl = lax.all_gather(sl, names, axis=0, tiled=False)
+            parts.append(wire.decode_each(qz, sw, sl, d_eff,
+                                          use_kernels=use_kernels))
+        vals = jnp.concatenate(parts, axis=1)             # (L, nbc, d_eff)
     vals = vals.reshape(L, -1)[:, :chunk]
     return vals.reshape(-1)[:n].astype(flat.dtype)
 

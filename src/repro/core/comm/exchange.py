@@ -152,6 +152,15 @@ class GradientExchange:
     independent of leaf count. ``local_qdq_flat``/``local_qdq_shard``
     apply the identical span/key schedule, so error-feedback residuals
     remain bit-consistent with what was sent.
+
+    ``pipeline_chunks`` is the PIPELINED schedule (a latency knob, not a
+    memory knob): each span's quantized all-reduce is split into that many
+    bucket-row chunks whose encodes overlap the previous chunk's
+    collective. Unlike ``max_chunk_elems`` spans (which fold a per-span
+    key), the pipelined schedule is bit-identical to ``pipeline_chunks=1``
+    — same levels, same rounding stream, same wire payload, just issued
+    as K collectives instead of one — so error-feedback residuals need no
+    schedule awareness at all.
     """
 
     qz: Quantizer
@@ -160,12 +169,16 @@ class GradientExchange:
     use_kernels: bool = True
     max_chunk_elems: Optional[int] = None
     intra_axes: Tuple[str, ...] = ()
+    pipeline_chunks: int = 1
 
     def __post_init__(self):
         if self.max_chunk_elems is not None and self.max_chunk_elems <= 0:
             raise ValueError(
                 f"max_chunk_elems must be positive, got "
                 f"{self.max_chunk_elems}")
+        if self.pipeline_chunks < 1:
+            raise ValueError(
+                f"pipeline_chunks must be >= 1, got {self.pipeline_chunks}")
         if self.intra_axes:
             overlap = set(_names(self.intra_axes)) & set(
                 _names(self.axis_names))
@@ -223,7 +236,8 @@ class GradientExchange:
                 shard[a:b], self.qz, self._span_key(key, i), self.axis_names,
                 worker_id=worker_id, server_requant=self.server_requant,
                 use_kernels=self.use_kernels,
-                valid=None if valid is None else valid[a:b])
+                valid=None if valid is None else valid[a:b],
+                pipeline_chunks=self.pipeline_chunks)
             for i, (a, b) in enumerate(self.spans(shard.shape[0]))
         ]
         return outs[0] if len(outs) == 1 else jnp.concatenate(outs)
@@ -295,28 +309,51 @@ class GradientExchange:
         return outs[0] if len(outs) == 1 else jnp.concatenate(outs)
 
     # -- static cost accounting (benchmarks / tests) -----------------------
-    def collective_launches(self, n: int) -> int:
-        """Collective launches for one fused exchange of n elements:
-        phase 1 = 2 all_to_all (payload + level tables); phase 2 =
-        2 all_gather when re-quantizing, 1 f32 all_gather otherwise;
-        fp = 1 psum."""
-        per_span = 1 if self.qz.is_identity else (
-            4 if self.server_requant else 3)
-        return per_span * len(self.spans(n))
+    def _pipeline_k(self, m: int, n_workers: Optional[int]) -> int:
+        """Effective pipeline chunk count for an m-element span: the
+        schedule clamps K to the span's bucket-row count (needs the worker
+        count to know the chunk layout; unknown mesh -> assume un-clamped)."""
+        if self.pipeline_chunks <= 1:
+            return 1
+        if n_workers is None:
+            return self.pipeline_chunks
+        chunk = -(-m // max(n_workers, 1))
+        d_eff = wire.bucket_len(chunk, self.qz.bucket_size)
+        nbc = -(-chunk // d_eff)
+        return max(1, min(self.pipeline_chunks, nbc))
+
+    def collective_launches(self, n: int,
+                            n_workers: Optional[int] = None) -> int:
+        """Collective launches for one fused exchange of n elements, PER
+        pipeline chunk: phase 1 = 2 all_to_all (payload + level tables) per
+        chunk; phase 2 = 2 all_gather per chunk when re-quantizing, 1 f32
+        all_gather (un-chunked) otherwise; fp = 1 psum. Pass ``n_workers``
+        for the exact per-span chunk clamp."""
+        if self.qz.is_identity:
+            return len(self.spans(n))
+        total = 0
+        for a, b in self.spans(n):
+            k = self._pipeline_k(b - a, n_workers)
+            total += 4 * k if self.server_requant else 2 * k + 1
+        return total
 
     # -- reduce-scatter accounting (the fsdp phase-1-only exchange) --------
     @staticmethod
-    def rs_stats(qz: Quantizer, n: int, n_workers: int) -> Tuple[int, float]:
+    def rs_stats(qz: Quantizer, n: int, n_workers: int,
+                 pipeline_chunks: int = 1) -> Tuple[int, float]:
         """(launches, wire bytes per worker) for ONE fused quantized
         reduce-scatter of ``n`` elements — phase-1 uplink only, no
         server->worker broadcast. The single source of the RS formula for
-        ``policy_stats(sharded_paths=...)`` and ``FsdpExchange``."""
+        ``policy_stats(sharded_paths=...)`` and ``FsdpExchange``.
+        ``pipeline_chunks`` multiplies the launch count (2 all_to_all per
+        chunk); bytes are schedule-invariant."""
         if qz.is_identity:
             return 1, 4.0 * n                    # one psum_scatter
         chunk = -(-n // max(n_workers, 1))
         d_eff = wire.bucket_len(chunk, qz.bucket_size)
         nbc = -(-chunk // d_eff)
-        return 2, float(wire.wire_unit_bytes(qz, nbc * n_workers, d_eff))
+        k = max(1, min(int(pipeline_chunks), nbc))
+        return 2 * k, float(wire.wire_unit_bytes(qz, nbc * n_workers, d_eff))
 
     def wire_bytes_per_worker(self, n: int, n_workers: int) -> float:
         """Bytes one worker transmits per exchange (uplink phase 1 +
@@ -462,17 +499,20 @@ class PartitionedExchange:
     def build(cls, policy: QuantPolicy, tree, axis_names, *, paths=None,
               use_kernels: bool = True,
               max_chunk_elems: Optional[int] = None,
-              intra_axes: Tuple[str, ...] = ()) -> "PartitionedExchange":
+              intra_axes: Tuple[str, ...] = (),
+              pipeline_chunks: int = 1) -> "PartitionedExchange":
         """``axis_names`` is the QUANTIZED (inter) axis tuple; a non-empty
         ``intra_axes`` turns every group engine hierarchical (two-level
-        ICI/DCN mode — see ``GradientExchange``)."""
+        ICI/DCN mode — see ``GradientExchange``); ``pipeline_chunks``
+        pipelines every group's exchange (bit-identical schedule knob)."""
         layout = PolicyLayout.from_tree(tree, policy, paths=paths)
         engines = tuple(
             GradientExchange(
                 g.cfg.to_quantizer(), axis_names,
                 server_requant=g.cfg.server_requant,
                 use_kernels=use_kernels, max_chunk_elems=max_chunk_elems,
-                intra_axes=tuple(intra_axes))
+                intra_axes=tuple(intra_axes),
+                pipeline_chunks=pipeline_chunks)
             for g in layout.groups)
         return cls(layout=layout, engines=engines)
 
@@ -624,7 +664,8 @@ def policy_stats(policy: QuantPolicy, path_sizes, n_workers: int, *,
 def link_stats(qz: Quantizer, n: int, *, n_intra: int, n_inter: int,
                two_level: bool, server_requant: bool = True,
                sharded: bool = False,
-               max_chunk_elems: Optional[int] = None) -> Dict[str, float]:
+               max_chunk_elems: Optional[int] = None,
+               pipeline_chunks: int = 1) -> Dict[str, float]:
     """Per-LINK wire bytes one worker transmits for ONE exchange of ``n``
     elements on an (n_inter pods) x (n_intra chips/pod) dp mesh:
 
@@ -639,17 +680,22 @@ def link_stats(qz: Quantizer, n: int, *, n_intra: int, n_inter: int,
     (L-1)/L * payload per worker. ``sharded=True`` accounts the fsdp
     phase-1-only reduce-scatter (no downlink; the parameter all-gather
     belongs to the forward). Convert to seconds with the ``launch/mesh.py``
-    bandwidth constants (ICI_BW / DCN_BW)."""
+    bandwidth constants (ICI_BW / DCN_BW). ``pipeline_chunks`` leaves every
+    byte count unchanged (the pipelined schedule moves the same payload)
+    but multiplies the quantized launch counts — per-chunk wire units each
+    pay their own collective launch."""
     L = n_intra * n_inter
     dcn_frac = (n_inter - 1) / n_inter if n_inter > 1 else 0.0
     if not two_level:
         if sharded:
-            launches, total = GradientExchange.rs_stats(qz, n, L)
+            launches, total = GradientExchange.rs_stats(
+                qz, n, L, pipeline_chunks=pipeline_chunks)
         else:
             eng = GradientExchange(qz, ("dp",),
                                    server_requant=server_requant,
-                                   max_chunk_elems=max_chunk_elems)
-            launches = eng.collective_launches(n)
+                                   max_chunk_elems=max_chunk_elems,
+                                   pipeline_chunks=pipeline_chunks)
+            launches = eng.collective_launches(n, L)
             total = eng.wire_bytes_per_worker(n, L)
         dcn = total * dcn_frac
         return {"ici_bytes": total - dcn, "dcn_bytes": dcn,
@@ -660,11 +706,13 @@ def link_stats(qz: Quantizer, n: int, *, n_intra: int, n_inter: int,
     ici = 4.0 * n * (n_intra - 1) / n_intra        # intra reduce-scatter
     launches = 1
     if sharded:
-        l_i, inter_total = GradientExchange.rs_stats(qz, shard, n_inter)
+        l_i, inter_total = GradientExchange.rs_stats(
+            qz, shard, n_inter, pipeline_chunks=pipeline_chunks)
     else:
         eng = GradientExchange(qz, ("pod",), server_requant=server_requant,
-                               max_chunk_elems=max_chunk_elems)
-        l_i = eng.collective_launches(shard)
+                               max_chunk_elems=max_chunk_elems,
+                               pipeline_chunks=pipeline_chunks)
+        l_i = eng.collective_launches(shard, n_inter)
         inter_total = eng.wire_bytes_per_worker(shard, n_inter)
         ici += 4.0 * n * (n_intra - 1) / n_intra   # final intra all-gather
         launches += 1
@@ -677,7 +725,8 @@ def link_stats(qz: Quantizer, n: int, *, n_intra: int, n_inter: int,
 
 def policy_link_stats(policy: QuantPolicy, path_sizes, *, n_intra: int,
                       n_inter: int, two_level: bool, sharded_paths=None,
-                      max_chunk_elems: Optional[int] = None
+                      max_chunk_elems: Optional[int] = None,
+                      pipeline_chunks: int = 1
                       ) -> Tuple[Dict[str, float], Tuple[str, ...]]:
     """Aggregate :func:`link_stats` over a policy's groups (the per-link
     sibling of :func:`policy_stats`): returns the summed per-link dict and
@@ -698,7 +747,8 @@ def policy_link_stats(policy: QuantPolicy, path_sizes, *, n_intra: int,
         st = link_stats(cfg.to_quantizer(), n, n_intra=n_intra,
                         n_inter=n_inter, two_level=two_level,
                         server_requant=cfg.server_requant, sharded=sharded,
-                        max_chunk_elems=max_chunk_elems)
+                        max_chunk_elems=max_chunk_elems,
+                        pipeline_chunks=pipeline_chunks)
         for k in total:
             total[k] += st[k]
         labels.append(f"{cfg.name}/rs" if sharded else cfg.name)

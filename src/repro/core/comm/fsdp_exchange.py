@@ -69,7 +69,8 @@ from repro.utils.pytree import tree_flatten_with_path_strs
 
 def reduce_scatter_mean_block(g, qz: Quantizer, key, axis_names, *, dim: int,
                               use_kernels: bool = True,
-                              param_dtype=jnp.float32):
+                              param_dtype=jnp.float32,
+                              pipeline_chunks: int = 1):
     """Quantized reduce-scatter of ONE full-size cotangent block along
     ``dim``: returns this worker's shard of the across-worker mean, in the
     stored-shard shape. The single-leaf primitive shared by the per-leaf
@@ -89,7 +90,8 @@ def reduce_scatter_mean_block(g, qz: Quantizer, key, axis_names, *, dim: int,
     else:
         valid = jnp.ones((L, chunk), dtype=bool)
         mean_chunk = _rs_mean_parts(parts, valid, qz, key, names,
-                                    use_kernels)
+                                    use_kernels,
+                                    pipeline_chunks=pipeline_chunks)
     out = mean_chunk.reshape((lead // L,) + rest)
     return jnp.moveaxis(out, 0, dim).astype(param_dtype)
 
@@ -306,12 +308,14 @@ class FsdpExchange:
     intra_axes: Tuple[str, ...] = ()         # fast fp axes; () = flat
     n_intra: int = 1                         # static size of intra_axes
     use_kernels: bool = True
+    pipeline_chunks: int = 1                 # bit-identical chunked schedule
 
     @classmethod
     def build(cls, policy: QuantPolicy, tree, axis_names, *, paths,
               shard_dims, n_shards: int, use_kernels: bool = True,
               max_chunk_elems: Optional[int] = None,
-              intra_axes=(), n_intra: int = 1) -> "FsdpExchange":
+              intra_axes=(), n_intra: int = 1,
+              pipeline_chunks: int = 1) -> "FsdpExchange":
         """``axis_names`` is the FULL ordered dp tuple; a non-empty
         ``intra_axes`` (with its static size ``n_intra``) switches on the
         two-level mode — the quantized collectives then run over the
@@ -319,7 +323,9 @@ class FsdpExchange:
         ``axis_names`` (the worker-major rows are inter-major).
         ``max_chunk_elems`` caps replicated-group collectives only: a
         sharded group's buffer must reduce-scatter in one piece (its rows
-        are the worker chunks)."""
+        are the worker chunks). ``pipeline_chunks`` pipelines every
+        group's quantized collective (bit-identical schedule knob, see
+        ``GradientExchange``)."""
         dp = _names(axis_names)
         intra = tuple(intra_axes)
         inter = tuple(a for a in dp if a not in intra)
@@ -344,11 +350,11 @@ class FsdpExchange:
                 server_requant=g.cfg.server_requant,
                 use_kernels=use_kernels,
                 max_chunk_elems=None if g.sharded else max_chunk_elems,
-                intra_axes=intra)
+                intra_axes=intra, pipeline_chunks=pipeline_chunks)
             for g in layout.groups)
         return cls(layout=layout, engines=engines, dp_axes=dp,
                    intra_axes=intra, n_intra=n_intra,
-                   use_kernels=use_kernels)
+                   use_kernels=use_kernels, pipeline_chunks=pipeline_chunks)
 
     @property
     def axis_names(self):
@@ -422,7 +428,8 @@ class FsdpExchange:
                 if g.sharded:
                     outs.append(quantized_reduce_scatter_mean(
                         b, eng.qz, gk, self.dp_axes,
-                        worker_id=worker_id, use_kernels=self.use_kernels))
+                        worker_id=worker_id, use_kernels=self.use_kernels,
+                        pipeline_chunks=self.pipeline_chunks))
                     if want_ef and not eng.qz.is_identity:
                         res.append(b - local_qdq_comm_layout(
                             b, eng.qz, gk, self.dp_axes,
@@ -446,7 +453,8 @@ class FsdpExchange:
                 kk = eng._intra_fold(gk, wid_intra)
                 outs.append(quantized_reduce_scatter_mean(
                     b, eng.qz, kk, eng.axis_names, worker_id=wid_inter,
-                    use_kernels=self.use_kernels))
+                    use_kernels=self.use_kernels,
+                    pipeline_chunks=self.pipeline_chunks))
                 if want_ef and not eng.qz.is_identity:
                     res.append(b - local_qdq_comm_layout(
                         b, eng.qz, kk, eng.axis_names, worker_id=wid_inter,
@@ -542,21 +550,25 @@ class FsdpExchange:
             eng.qz, g.size, n_intra=self.n_intra, n_inter=self.n_inter,
             two_level=bool(self.intra_axes),
             server_requant=eng.server_requant, sharded=g.sharded,
-            max_chunk_elems=eng.max_chunk_elems)
+            max_chunk_elems=eng.max_chunk_elems,
+            pipeline_chunks=eng.pipeline_chunks)
 
     def collective_launches(self) -> int:
         """Backward launches for one step: sharded groups pay phase 1 only
-        (``GradientExchange.rs_stats``: 2 all_to_all; fp = 1 psum_scatter),
-        replicated groups the full Algorithm 2 count; two-level adds the
-        fp intra scatter (and, for replicated groups, gather)."""
+        (``GradientExchange.rs_stats``: 2 all_to_all per pipeline chunk;
+        fp = 1 psum_scatter), replicated groups the full Algorithm 2
+        count; two-level adds the fp intra scatter (and, for replicated
+        groups, gather)."""
         if self.intra_axes:
             return int(sum(self._group_link_stats(eng, g)["launches"]
                            for eng, g in zip(self.engines,
                                              self.layout.groups)))
         L = self.layout.n_shards
         return sum(
-            GradientExchange.rs_stats(eng.qz, g.size, L)[0] if g.sharded
-            else eng.collective_launches(g.size)
+            GradientExchange.rs_stats(
+                eng.qz, g.size, L,
+                pipeline_chunks=eng.pipeline_chunks)[0] if g.sharded
+            else eng.collective_launches(g.size, L)
             for eng, g in zip(self.engines, self.layout.groups))
 
     def wire_bytes_per_worker(self) -> float:

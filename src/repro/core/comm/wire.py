@@ -87,17 +87,36 @@ def _fused_mode(qz: Quantizer) -> str:
     return ""
 
 
-def encode(qz: Quantizer, bkt, mask, key, *,
-           use_kernels: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def encode_rbits(qz: Quantizer, key, shape):
+    """The threefry uint32 stream :func:`encode` would draw for a ``shape``
+    bucket layout (None for the deterministic schemes). The pipelined
+    exchange generates the bits ONCE for the full canonical (nb, d_eff)
+    layout and slices the bucket rows per chunk — ``jax.random.bits`` is
+    counter-based over the row-major flattened shape, so bits drawn
+    per-chunk-shape would differ and break bit-identity with the
+    single-shot path."""
+    from repro.core import rounding as R
+
+    if _fused_mode(qz) != "rr":
+        return None
+    return R.random_bits(key, shape)
+
+
+def encode(qz: Quantizer, bkt, mask, key, *, use_kernels: bool = True,
+           rbits=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Fit levels on masked buckets, round, and bit-pack — the fused path.
 
     bkt/mask are (nb, d_eff); returns ``(words, levels)`` wire units with
     masked-out slots forced to index 0 (they never reach the decoder's
     averaged output — callers slice them away). Everything after the
     level fit is ONE ``pallas_call`` (for BinGrad-b the fit fuses too);
-    bit-identical to :func:`encode_multipass` given the same key."""
-    from repro.core import rounding as R
+    bit-identical to :func:`encode_multipass` given the same key.
 
+    ``rbits`` optionally supplies the precomputed rounding stream (see
+    :func:`encode_rbits`); the default draws it from ``key`` here. Every
+    stage — fit, clip, round, pack — is independent per bucket row, so
+    encoding a row-slice with the matching ``rbits`` slice reproduces the
+    full encode's rows exactly (what the pipelined exchange relies on)."""
     mode = _fused_mode(qz)
     if mode == "bin":
         # b₀ search + conditional-mean levels + threshold + pack, one sweep
@@ -107,9 +126,10 @@ def encode(qz: Quantizer, bkt, mask, key, *,
     if not mode:
         return encode_multipass(qz, bkt, mask, key, use_kernels=use_kernels)
     levels = qz.fit(bkt, mask)                            # runtime levels
-    rbits = R.random_bits(key, bkt.shape) if mode == "rr" else None
-    words = ops.encode_fused(bkt, levels, rbits, mask,
-                             bits=qz.wire_bits_per_element,
+    if mode == "rr" and rbits is None:
+        rbits = encode_rbits(qz, key, bkt.shape)
+    words = ops.encode_fused(bkt, levels, rbits if mode == "rr" else None,
+                             mask, bits=qz.wire_bits_per_element,
                              clip_c=qz.clip_c, mode=mode,
                              use_kernels=use_kernels)
     return words, levels

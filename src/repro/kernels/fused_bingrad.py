@@ -3,17 +3,22 @@
 BinGrad-b's level fit is moments-only — b₀ = mean(G), then the
 conditional means below/above b₀ (Eq. 17), optionally iterated to the
 2-means fixed point — so unlike ORQ (which needs a per-bucket sort) the
-WHOLE scheme fuses: one VMEM-tiled sweep computes the σ-clip, the b₀
-search, the (b₋₁, b₁) level table, the threshold assignment at the level
-midpoint, and the 1-bit pack. The gradient tile is read from HBM once;
-the only writes are the packed (nb, nw) uint32 words and the tiny
-(nb, 2) level table that rides the wire next to them.
+WHOLE scheme fuses: one VMEM-tiled sweep computes the b₀ search, the
+(b₋₁, b₁) level table, the threshold assignment at the level midpoint,
+and the 1-bit pack. The gradient tile is read from HBM once; the only
+writes are the packed (nb, nw) uint32 words and the tiny (nb, 2) level
+table that rides the wire next to them.
 
 This replaces what used to be ≥4 sweeps (masked moments, two conditional
 reductions, threshold compare, pack) each materializing (nb, d)
 intermediates. Numerics mirror ``levels.bingrad_b_levels`` +
 ``rounding.threshold_round`` term for term (interpret mode is
 bit-identical to the jnp oracle ``ref.encode_bingrad_fused_ref``).
+
+Scheduling follows ``fused_encode``: the optional σ-clip REDUCTION runs
+once outside the kernel (the (nb, 1) c·σ limit rides in as a side
+input), and the row block adapts so small sweeps run as one grid step
+within the VMEM tile budget.
 """
 from __future__ import annotations
 
@@ -24,16 +29,22 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.fused_encode import _pack_words, _sigma_clip_tile
+from repro.kernels.fused_encode import _pack_words, clip_limit, row_block
 
-ROW_BLOCK = 8
-_EPW = 32  # 1 bit per element -> 32 elements per uint32 word
+ROW_BLOCK = 8  # row-block quantum (see fused_encode.row_block)
+_EPW = 32      # 1 bit per element -> 32 elements per uint32 word
 
 
-def _bingrad_encode_kernel(lloyd_iters, clip_c, v_ref, m_ref, w_ref, lv_ref):
+def _bingrad_encode_kernel(lloyd_iters, has_lim, *refs):
+    if has_lim:
+        v_ref, m_ref, lim_ref, w_ref, lv_ref = refs
+    else:
+        v_ref, m_ref, w_ref, lv_ref = refs
     v = v_ref[...].astype(jnp.float32)        # (R, d)
     m = m_ref[...].astype(jnp.float32)        # (R, d) validity
-    v = _sigma_clip_tile(v, m, clip_c)
+    if has_lim:
+        lim = lim_ref[...]
+        v = jnp.clip(v, -lim, lim)
 
     cnt = jnp.maximum(m.sum(axis=-1, keepdims=True), 1.0)
     b0 = (v * m).sum(axis=-1, keepdims=True) / cnt      # paper: b₀ = mean(G)
@@ -73,25 +84,34 @@ def encode_bingrad_fused(v: jnp.ndarray, mask: jnp.ndarray, *,
     the ragged tail in-register)."""
     nb, d = v.shape
     nw = -(-d // _EPW)
-    rows = -(-nb // ROW_BLOCK) * ROW_BLOCK
+    lim = clip_limit(v, mask, clip_c)
+    row_bytes = 4 * (3 * d + nw + 2 + (1 if lim is not None else 0))
+    rb = row_block(nb, row_bytes)
+    rows = -(-nb // rb) * rb
     pr = rows - nb
     vp = jnp.pad(v.astype(jnp.float32), ((0, pr), (0, 0)))
     mp = jnp.pad(mask.astype(jnp.float32), ((0, pr), (0, 0)))
+    inputs = [vp, mp]
+    in_specs = [
+        pl.BlockSpec((rb, d), lambda i: (i, 0)),
+        pl.BlockSpec((rb, d), lambda i: (i, 0)),
+    ]
+    if lim is not None:
+        inputs.append(jnp.pad(lim.astype(jnp.float32), ((0, pr), (0, 0))))
+        in_specs.append(pl.BlockSpec((rb, 1), lambda i: (i, 0)))
     words, lv = pl.pallas_call(
-        functools.partial(_bingrad_encode_kernel, lloyd_iters, clip_c),
+        functools.partial(_bingrad_encode_kernel, lloyd_iters,
+                          lim is not None),
         out_shape=(
             jax.ShapeDtypeStruct((rows, nw), jnp.uint32),
             jax.ShapeDtypeStruct((rows, 2), jnp.float32),
         ),
-        grid=(rows // ROW_BLOCK,),
-        in_specs=[
-            pl.BlockSpec((ROW_BLOCK, d), lambda i: (i, 0)),
-            pl.BlockSpec((ROW_BLOCK, d), lambda i: (i, 0)),
-        ],
+        grid=(rows // rb,),
+        in_specs=in_specs,
         out_specs=(
-            pl.BlockSpec((ROW_BLOCK, nw), lambda i: (i, 0)),
-            pl.BlockSpec((ROW_BLOCK, 2), lambda i: (i, 0)),
+            pl.BlockSpec((rb, nw), lambda i: (i, 0)),
+            pl.BlockSpec((rb, 2), lambda i: (i, 0)),
         ),
         interpret=interpret,
-    )(vp, mp)
+    )(*inputs)
     return words[:nb], lv[:nb]

@@ -6,7 +6,7 @@ The wire encode used to be 3-4 separate sweeps over the flat buffer —
 intermediate in HBM between kernels. This module fuses the whole
 per-bucket pipeline into ONE VMEM-tiled sweep:
 
-    encode_fused   σ-estimate/clip -> interval search -> random rounding
+    encode_fused   σ-clip -> interval search -> random rounding
                    -> mask -> uint32 bit-pack, one ``pallas_call``; the
                    only HBM write is the packed ``(nb, nw)`` wire words
                    (a 32/bits shrink vs the old int32 idx intermediate).
@@ -27,11 +27,27 @@ The level FIT for the rr schemes stays outside the kernel (ORQ's Alg. 1
 needs a per-bucket sort — cheap jnp, no pallas_call); the BinGrad-b fit
 is moments-only and fuses completely — see ``fused_bingrad.py``.
 
-Tiling matches the rest of the package: grid over ROW_BLOCK bucket rows,
-full bucket width per tile, level tables padded to a LEVEL_PAD lane tile
-(edge-replicated so the unrolled compares never read garbage). Columns
-are padded to a whole number of wire words; the padding is masked so it
-packs as index 0, exactly like the zero-pad in the multi-pass ``pack``.
+Scheduling (the PR-6 tiling fix):
+
+* The σ-clip REDUCTION runs once, outside the kernel: the per-bucket
+  clip limit c·σ is a tiny ``(nb, 1)`` side input computed with the same
+  jnp reduction the level fit already performs (XLA CSEs the two), so
+  the kernel applies a single ``clip`` instead of re-reducing masked
+  moments on every tile. Reduce once, then quantize — not
+  reduce-per-block.
+* The interval search and the lo/hi neighbour-level selection share one
+  unrolled sweep over the (ascending) level table via running selects —
+  no second one-hot pass over ``s`` levels.
+* The row block adapts to the problem: as many ROW_BLOCK-multiples of
+  bucket rows per grid step as fit a VMEM tile budget, so small sweeps
+  run as a single grid step instead of paying per-step scheduling
+  overhead, while big sweeps still tile within VMEM.
+
+Level tables are padded to a LEVEL_PAD lane tile (edge-replicated so the
+unrolled compares never read garbage). Columns stay at the true bucket
+width ``d`` and are zero-padded in-register to a whole number of wire
+words; the padding is masked so it packs as index 0, exactly like the
+zero-pad in the multi-pass ``pack``.
 """
 from __future__ import annotations
 
@@ -42,52 +58,77 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-ROW_BLOCK = 8
+ROW_BLOCK = 8   # row-block quantum (f32 sublane tile)
 LEVEL_PAD = 32  # level-table tile width (s <= 17 always)
+#: VMEM budget per grid-step tile (all operands + outputs). Kept well
+#: under the ~16 MB/core VMEM so double-buffered in/out windows fit.
+VMEM_TILE_BYTES = 2 * 1024 * 1024
 _INV_U32 = float(1.0 / 4294967296.0)
 
 #: rounding modes the fused stage understands
 MODES = ("rr", "bin", "sign")
 
 
-def _sigma_clip_tile(v: jnp.ndarray, m: jnp.ndarray,
-                     clip_c: Optional[float]) -> jnp.ndarray:
-    """In-VMEM σ-clip on an (R, d) tile, mirroring ``clipping.sigma_clip``
-    term for term (masked moments around the masked mean, clip to ±c·σ).
-    The single definition shared by every fused kernel — the bit-identity
-    story depends on these ops matching the jnp oracle exactly."""
+def row_block(nb: int, row_bytes: int) -> int:
+    """Rows per grid step: the largest ROW_BLOCK multiple whose tile
+    (``row_bytes`` per bucket row across every operand) fits the VMEM
+    budget, capped at the padded row count. One grid step whenever the
+    whole sweep fits."""
+    cap = max(VMEM_TILE_BYTES // max(row_bytes, 1), ROW_BLOCK)
+    cap = (cap // ROW_BLOCK) * ROW_BLOCK
+    need = -(-nb // ROW_BLOCK) * ROW_BLOCK
+    return min(cap, need)
+
+
+def clip_limit(v: jnp.ndarray, mask: jnp.ndarray,
+               clip_c: Optional[float]) -> Optional[jnp.ndarray]:
+    """Per-bucket TernGrad clip limit c·σ as an (nb, 1) f32 array (None
+    when clipping is off). Mirrors ``clipping.sigma_clip`` term for term
+    — the SAME jnp reduction the level fit runs, so inside one jit XLA
+    computes it once; the kernels then clip against the precomputed
+    limit instead of re-reducing σ per tile."""
     if clip_c is None:
-        return v
+        return None
+    m = mask.astype(jnp.float32)
+    v = v.astype(jnp.float32)
     cnt = jnp.maximum(m.sum(axis=-1, keepdims=True), 1.0)
     mean = (v * m).sum(axis=-1, keepdims=True) / cnt
     var = (((v - mean) ** 2) * m).sum(axis=-1, keepdims=True) / cnt
-    lim = clip_c * jnp.sqrt(var)
-    return jnp.clip(v, -lim, lim)
+    return clip_c * jnp.sqrt(var)
 
 
-def _clip_round(s: int, clip_c: Optional[float], mode: str,
-                v: jnp.ndarray, lv: jnp.ndarray, m: jnp.ndarray,
-                u: Optional[jnp.ndarray]) -> jnp.ndarray:
-    """The shared in-VMEM stage: σ-clip -> round -> mask. All operands are
-    (R, d) tiles (lv is (R, LEVEL_PAD)); returns masked int32 indices.
+def _clip_round(s: int, mode: str, v: jnp.ndarray, lv: jnp.ndarray,
+                m: jnp.ndarray, u: Optional[jnp.ndarray],
+                lim: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """The shared in-VMEM stage: clip -> round -> mask. All operands are
+    (R, d) tiles (lv is (R, LEVEL_PAD), lim is (R, 1) or None); returns
+    masked int32 indices.
 
     Numerics mirror ``clipping.sigma_clip`` + ``rounding.random_round`` /
     ``rounding.threshold_round`` term for term so interpret mode is
     bit-identical to the jnp oracle."""
-    v = _sigma_clip_tile(v, m, clip_c)
+    if lim is not None:
+        v = jnp.clip(v, -lim, lim)
     if mode == "rr":
-        # interval search: k = (#levels <= v) - 1, clipped to [0, s-2]
+        # Interval search fused with neighbour-level selection. Level
+        # tables are ascending, so (v >= lv_j) is a prefix predicate and
+        # the running selects land on exactly levels[k] / levels[k+1]
+        # for k = clip(#(levels <= v) - 1, 0, s-2) — the same
+        # count-and-gather as ``rounding.find_interval`` +
+        # ``select_levels``, in one sweep with no one-hot second pass.
         k = jnp.zeros(v.shape, dtype=jnp.int32)
+        lo = jnp.broadcast_to(lv[:, 0][:, None], v.shape)
+        hi = jnp.broadcast_to(lv[:, 1][:, None], v.shape)
+        ge_prev = None
         for j in range(s):                       # static unroll, s <= 17
-            k = k + (v >= lv[:, j][:, None]).astype(jnp.int32)
+            ge = v >= lv[:, j][:, None]
+            k = k + ge.astype(jnp.int32)
+            if 1 <= j <= s - 2:
+                lo = jnp.where(ge, lv[:, j][:, None], lo)
+            if j >= 2:
+                hi = jnp.where(ge_prev, lv[:, j][:, None], hi)
+            ge_prev = ge
         k = jnp.clip(k - 1, 0, s - 2)
-        # lo = levels[k], hi = levels[k+1] via one-hot select (gather-free)
-        lo = jnp.zeros(v.shape, dtype=jnp.float32)
-        hi = jnp.zeros(v.shape, dtype=jnp.float32)
-        for j in range(s - 1):                   # static unroll
-            sel = (k == j).astype(jnp.float32)
-            lo = lo + sel * lv[:, j][:, None]
-            hi = hi + sel * lv[:, j + 1][:, None]
         vc = jnp.clip(v, lo, hi)
         width = hi - lo
         p_up = jnp.where(width > 0,
@@ -107,9 +148,9 @@ def _pack_words(idx: jnp.ndarray, bits: int, epw: int) -> jnp.ndarray:
     """(R, d) int32 -> (R, ceil(d/epw)) uint32 shift-add pack (add == OR
     on disjoint bit ranges; same lane order as the multi-pass pack
     kernel). The ragged tail is zero-padded IN-REGISTER — padding the
-    kernel INPUTS instead would widen the row reductions (σ moments, the
-    BinGrad conditional means) and shift their rounding by an ulp vs the
-    jnp oracle."""
+    kernel INPUTS instead would widen the row reductions (the BinGrad
+    conditional means) and shift their rounding by an ulp vs the jnp
+    oracle."""
     r, d = idx.shape
     dp = -(-d // epw) * epw
     if dp != d:
@@ -122,44 +163,54 @@ def _pack_words(idx: jnp.ndarray, bits: int, epw: int) -> jnp.ndarray:
     return acc
 
 
-def _encode_kernel(s, bits, epw, clip_c, mode, *refs):
+def _encode_kernel(s, bits, epw, has_lim, mode, *refs):
+    refs = list(refs)
+    v_ref, lv_ref, m_ref = refs[:3]
+    rest = refs[3:]
+    lim = rest.pop(0)[...] if has_lim else None
     if mode == "rr":
-        v_ref, lv_ref, m_ref, u_ref, w_ref = refs
-        u = u_ref[...].astype(jnp.float32) * _INV_U32
+        u = rest.pop(0)[...].astype(jnp.float32) * _INV_U32
     else:
-        v_ref, lv_ref, m_ref, w_ref = refs
         u = None
+    (w_ref,) = rest
     v = v_ref[...].astype(jnp.float32)
     lv = lv_ref[...].astype(jnp.float32)
     m = m_ref[...].astype(jnp.float32)
-    idx = _clip_round(s, clip_c, mode, v, lv, m, u)
+    idx = _clip_round(s, mode, v, lv, m, u, lim)
     w_ref[...] = _pack_words(idx, bits, epw)
 
 
-def _qdq_kernel(s, clip_c, mode, *refs):
+def _qdq_kernel(s, has_lim, mode, *refs):
+    refs = list(refs)
+    v_ref, lv_ref, m_ref = refs[:3]
+    rest = refs[3:]
+    lim = rest.pop(0)[...] if has_lim else None
     if mode == "rr":
-        v_ref, lv_ref, m_ref, u_ref, o_ref = refs
-        u = u_ref[...].astype(jnp.float32) * _INV_U32
+        u = rest.pop(0)[...].astype(jnp.float32) * _INV_U32
     else:
-        v_ref, lv_ref, m_ref, o_ref = refs
         u = None
+    (o_ref,) = rest
     v = v_ref[...].astype(jnp.float32)
     lv = lv_ref[...].astype(jnp.float32)
     m = m_ref[...].astype(jnp.float32)
-    idx = _clip_round(s, clip_c, mode, v, lv, m, u)
+    idx = _clip_round(s, mode, v, lv, m, u, lim)
     val = jnp.zeros(v.shape, dtype=jnp.float32)
     for j in range(s):                  # static unroll, gather-free decode
         val = val + (idx == j).astype(jnp.float32) * lv[:, j][:, None]
     o_ref[...] = val
 
 
-def _padded(v, levels, bits_arr, mask, *, s: int, mode: str):
-    """Pad rows to ROW_BLOCK and the level table to LEVEL_PAD lanes.
-    Columns stay at the true bucket width ``d`` — row reductions inside
-    the kernel (σ moments) must run over exactly the elements the jnp
-    oracle sums. Returns (inputs, in_specs, rows)."""
+def _padded(v, levels, bits_arr, mask, lim, *, s: int, mode: str,
+            out_cols: int):
+    """Pad rows to an adaptive VMEM-budgeted row block and the level
+    table to LEVEL_PAD lanes. Columns stay at the true bucket width
+    ``d``. Returns (inputs, in_specs, rows, rb)."""
     nb, d = v.shape
-    rows = -(-nb // ROW_BLOCK) * ROW_BLOCK
+    n_wide = 3 if mode == "rr" else 2            # (nb, d)-wide operands + v
+    row_bytes = 4 * ((n_wide + 1) * d + LEVEL_PAD + out_cols
+                     + (1 if lim is not None else 0))
+    rb = row_block(nb, row_bytes)
+    rows = -(-nb // rb) * rb
     pr = rows - nb
     vp = jnp.pad(v.astype(jnp.float32), ((0, pr), (0, 0)))
     mp = jnp.pad(mask.astype(jnp.float32), ((0, pr), (0, 0)))
@@ -167,14 +218,17 @@ def _padded(v, levels, bits_arr, mask, *, s: int, mode: str):
                   ((0, pr), (0, LEVEL_PAD - s)), mode="edge")
     inputs = [vp, lvp, mp]
     in_specs = [
-        pl.BlockSpec((ROW_BLOCK, d), lambda i: (i, 0)),
-        pl.BlockSpec((ROW_BLOCK, LEVEL_PAD), lambda i: (i, 0)),
-        pl.BlockSpec((ROW_BLOCK, d), lambda i: (i, 0)),
+        pl.BlockSpec((rb, d), lambda i: (i, 0)),
+        pl.BlockSpec((rb, LEVEL_PAD), lambda i: (i, 0)),
+        pl.BlockSpec((rb, d), lambda i: (i, 0)),
     ]
+    if lim is not None:
+        inputs.append(jnp.pad(lim.astype(jnp.float32), ((0, pr), (0, 0))))
+        in_specs.append(pl.BlockSpec((rb, 1), lambda i: (i, 0)))
     if mode == "rr":
         inputs.append(jnp.pad(bits_arr, ((0, pr), (0, 0))))
-        in_specs.append(pl.BlockSpec((ROW_BLOCK, d), lambda i: (i, 0)))
-    return inputs, in_specs, rows
+        in_specs.append(pl.BlockSpec((rb, d), lambda i: (i, 0)))
+    return inputs, in_specs, rows, rb
 
 
 @functools.partial(jax.jit,
@@ -195,13 +249,16 @@ def encode_fused(v: jnp.ndarray, levels: jnp.ndarray,
     assert mode in MODES, mode
     epw = 32 // bits
     nw = -(-d // epw)
-    inputs, in_specs, rows = _padded(v, levels, rbits, mask, s=s, mode=mode)
+    lim = clip_limit(v, mask, clip_c)
+    inputs, in_specs, rows, rb = _padded(v, levels, rbits, mask, lim,
+                                         s=s, mode=mode, out_cols=nw)
     out = pl.pallas_call(
-        functools.partial(_encode_kernel, s, bits, epw, clip_c, mode),
+        functools.partial(_encode_kernel, s, bits, epw, lim is not None,
+                          mode),
         out_shape=jax.ShapeDtypeStruct((rows, nw), jnp.uint32),
-        grid=(rows // ROW_BLOCK,),
+        grid=(rows // rb,),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((ROW_BLOCK, nw), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((rb, nw), lambda i: (i, 0)),
         interpret=interpret,
     )(*inputs)
     return out[:nb]
@@ -220,13 +277,15 @@ def qdq_fused(v: jnp.ndarray, levels: jnp.ndarray,
     nb, d = v.shape
     assert levels.shape == (nb, s), (levels.shape, (nb, s))
     assert mode in MODES, mode
-    inputs, in_specs, rows = _padded(v, levels, rbits, mask, s=s, mode=mode)
+    lim = clip_limit(v, mask, clip_c)
+    inputs, in_specs, rows, rb = _padded(v, levels, rbits, mask, lim,
+                                         s=s, mode=mode, out_cols=d)
     out = pl.pallas_call(
-        functools.partial(_qdq_kernel, s, clip_c, mode),
+        functools.partial(_qdq_kernel, s, lim is not None, mode),
         out_shape=jax.ShapeDtypeStruct((rows, d), jnp.float32),
-        grid=(rows // ROW_BLOCK,),
+        grid=(rows // rb,),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((ROW_BLOCK, d), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((rb, d), lambda i: (i, 0)),
         interpret=interpret,
     )(*inputs)
     return out[:nb]

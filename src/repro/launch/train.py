@@ -13,10 +13,12 @@ mesh is exercised via launch/dryrun.py. Examples:
 from __future__ import annotations
 
 import argparse
+import hashlib
 import json
 import time
 
 import jax
+import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.configs.base import get_config, get_smoke_config, list_archs
@@ -27,6 +29,15 @@ from repro.models import LM
 from repro.optim.schedule import step_decay
 from repro.train import TrainConfig, make_train_step
 from repro.train.step import init_state
+
+
+def _params_digest(params) -> str:
+    """sha256 over the raw bytes of every parameter leaf (canonical tree
+    order) — a bit-level run fingerprint."""
+    h = hashlib.sha256()
+    for leaf in jax.tree_util.tree_leaves(params):
+        h.update(np.asarray(jax.device_get(leaf)).tobytes())
+    return h.hexdigest()
 
 
 def main(argv=None):
@@ -69,6 +80,10 @@ def main(argv=None):
                          "fused fsdp; persisted in TrainState.ef)")
     ap.add_argument("--exchange-chunk", type=int, default=None,
                     help="cap fused-collective size (elements) for memory")
+    ap.add_argument("--pipeline-chunks", type=int, default=1,
+                    help="split each fused exchange into K bucket-row "
+                         "chunks so chunk k's collective overlaps chunk "
+                         "k+1's encode (bit-identical to K=1)")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
@@ -94,7 +109,8 @@ def main(argv=None):
         hierarchy=args.hierarchy,
         fused_exchange=not args.per_leaf_exchange,
         error_feedback=args.error_feedback,
-        exchange_chunk_elems=args.exchange_chunk)
+        exchange_chunk_elems=args.exchange_chunk,
+        pipeline_chunks=args.pipeline_chunks)
     lr_fn = step_decay(args.lr, [args.steps // 2, 3 * args.steps // 4])
     state = init_state(model, mesh, tcfg, jax.random.key(args.seed))
     step_fn, _ = make_train_step(model, mesh, tcfg, lr_fn)
@@ -113,13 +129,19 @@ def main(argv=None):
                             "lr": float(metrics["lr"])})
             print(f"step {i:5d} loss {loss:.4f} "
                   f"({(time.time()-t0)/(i+1):.2f}s/step)")
+    # bit-level fingerprint of the final parameters: two runs of an
+    # exchange schedule that is supposed to be bit-identical (e.g.
+    # --pipeline-chunks K vs 1) must print the same digest
+    digest = _params_digest(state.params)
+    print("params sha256", digest)
     if args.checkpoint:
         save_checkpoint(args.checkpoint, state.params,
                         step=int(state.step))
         print("checkpoint ->", args.checkpoint)
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:
-            json.dump(history, f, indent=1)
+            json.dump({"history": history, "params_sha256": digest}, f,
+                      indent=1)
     return 0
 
 

@@ -97,6 +97,12 @@ class TrainConfig:
                                     # back per-leaf when n_model > 1)
     exchange_chunk_elems: Optional[int] = None  # size cap per fused
                                                 # collective (memory knob)
+    pipeline_chunks: int = 1        # split each fused exchange into K
+                                    # bucket-row chunks so chunk k's
+                                    # collective overlaps chunk k+1's
+                                    # encode — bit-identical to K=1
+                                    # (latency knob; see
+                                    # core/comm/collectives.py)
     compute_dtype: Any = jnp.bfloat16
 
     def resolved_policy(self) -> QuantPolicy:
@@ -370,7 +376,8 @@ def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
         policy, aparams, inter_axes, paths=plan.paths,
         use_kernels=tcfg.use_kernels,
         max_chunk_elems=tcfg.exchange_chunk_elems,
-        intra_axes=intra_axes)
+        intra_axes=intra_axes,
+        pipeline_chunks=tcfg.pipeline_chunks)
     # fused fsdp engine: ONE custom-VJP over the whole sharded tree whose
     # forward is a fused per-group parameter all-gather and whose backward
     # is one fused quantized reduce-scatter per sharded policy group (+
@@ -385,7 +392,8 @@ def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
             shard_dims=plan.full_shard_dims(), n_shards=plan.n_dp,
             use_kernels=tcfg.use_kernels,
             max_chunk_elems=tcfg.exchange_chunk_elems,
-            intra_axes=intra_axes, n_intra=n_intra)
+            intra_axes=intra_axes, n_intra=n_intra,
+            pipeline_chunks=tcfg.pipeline_chunks)
         if fex.layout.size > 1_000_000_000:
             # the fused path holds the whole gathered bf16 tree + full
             # f32 cotangent buffers per device during the step, vs the

@@ -59,3 +59,35 @@ def axis_collectives(counts: Counter, prim: str,
     """Total count of ``prim`` eqns whose axis tuple is exactly ``axes``."""
     return sum(n for (p, ax), n in counts.items()
                if p == prim and ax == tuple(axes))
+
+
+def sized_outvar_count(closed, min_elems: int, dtype=None) -> int:
+    """Count eqn OUTPUT variables (including nested sub-jaxprs) holding at
+    least ``min_elems`` elements, optionally restricted to ``dtype``.
+
+    The pipelined-exchange tests pin "no extra full-buffer
+    materialization" with this: splitting the exchange into K chunks must
+    not introduce additional full-buffer-sized f32 intermediates beyond
+    what the single-shot schedule already writes."""
+    count = 0
+
+    def walk(jaxpr):
+        nonlocal count
+        for eqn in jaxpr.eqns:
+            for v in eqn.outvars:
+                aval = getattr(v, "aval", None)
+                if aval is None or not getattr(aval, "shape", None):
+                    continue
+                if dtype is not None and aval.dtype != dtype:
+                    continue
+                size = 1
+                for d in aval.shape:
+                    size *= int(d)
+                if size >= min_elems:
+                    count += 1
+            for p in eqn.params.values():
+                for sub in _sub_jaxprs(p):
+                    walk(sub)
+
+    walk(closed.jaxpr)
+    return count

@@ -1,0 +1,378 @@
+"""Pipelined quantized exchange (``pipeline_chunks``): bit-identity with
+the single-shot schedule for every scheme variant on ragged buffers —
+gradients AND error-feedback residuals — across the replicated, FSDP, and
+two-level hierarchical paths; jaxpr pinning of the K-chunk collective
+schedule (2K all_to_all + 2K all_gather per quantized exchange, no extra
+full-buffer materialization); and the static launch/byte accounting.
+
+Multi-device cases run in subprocesses with XLA_FLAGS forcing 8 host
+devices (same harness as test_fused_exchange.py); the accounting tests
+run in-process.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import pytest
+
+from repro.core import comm
+from repro.core.api import QuantConfig
+from repro.core.comm.collectives import _chunk_spans
+
+jax.config.update("jax_platform_name", "cpu")
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_devices(body: str, n_devices: int = 8) -> str:
+    prog = textwrap.dedent(body)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", prog], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+# ---------------------------------------------------------------------------
+# the static chunk schedule
+# ---------------------------------------------------------------------------
+
+class TestChunkSpans:
+    @pytest.mark.parametrize("nbc,k", [(1, 1), (1, 8), (5, 2), (6, 3),
+                                       (7, 3), (24, 8), (24, 5), (3, 100)])
+    def test_partition_properties(self, nbc, k):
+        spans = _chunk_spans(nbc, k)
+        assert len(spans) == min(max(k, 1), nbc)
+        assert spans[0][0] == 0 and spans[-1][1] == nbc
+        for (a, b), (c, _) in zip(spans, spans[1:]):
+            assert b == c and b > a
+        sizes = [b - a for a, b in spans]
+        assert max(sizes) - min(sizes) <= 1       # balanced
+
+    def test_k_one_is_single_span(self):
+        assert _chunk_spans(17, 1) == [(0, 17)]
+
+    def test_engine_rejects_bad_k(self):
+        with pytest.raises(ValueError, match="pipeline_chunks"):
+            comm.GradientExchange(
+                QuantConfig(name="orq-9").to_quantizer(), ("dp",),
+                pipeline_chunks=0)
+
+
+# ---------------------------------------------------------------------------
+# static accounting: launches scale with K, bytes don't
+# ---------------------------------------------------------------------------
+
+class TestPipelineAccounting:
+    def test_launches_per_chunk_and_bytes_invariant(self):
+        qz = QuantConfig(name="orq-9", bucket_size=512).to_quantizer()
+        n, L = 512 * 24, 8
+        base = comm.GradientExchange(qz, ("dp",))
+        piped = comm.GradientExchange(qz, ("dp",), pipeline_chunks=3)
+        assert base.collective_launches(n, L) == 4
+        assert piped.collective_launches(n, L) == 12    # 2K a2a + 2K ag
+        assert (piped.wire_bytes_per_worker(n, L)
+                == base.wire_bytes_per_worker(n, L))
+
+    def test_launches_clamped_to_bucket_rows(self):
+        qz = QuantConfig(name="orq-9", bucket_size=512).to_quantizer()
+        n, L = 512 * 8, 8          # one bucket row per worker chunk
+        eng = comm.GradientExchange(qz, ("dp",), pipeline_chunks=16)
+        assert eng.collective_launches(n, L) == 4       # K clamps to 1
+
+    def test_no_requant_keeps_single_fp_gather(self):
+        qz = QuantConfig(name="orq-9", bucket_size=512).to_quantizer()
+        n, L = 512 * 24, 8
+        eng = comm.GradientExchange(qz, ("dp",), server_requant=False,
+                                    pipeline_chunks=3)
+        assert eng.collective_launches(n, L) == 2 * 3 + 1
+
+    def test_rs_stats_pipeline(self):
+        qz = QuantConfig(name="orq-9", bucket_size=512).to_quantizer()
+        n, L = 512 * 24, 8
+        l1, b1 = comm.GradientExchange.rs_stats(qz, n, L)
+        lk, bk = comm.GradientExchange.rs_stats(qz, n, L, pipeline_chunks=3)
+        assert (l1, lk) == (2, 6) and b1 == bk
+
+    def test_link_stats_pipeline_chunks(self):
+        qz = QuantConfig(name="orq-9", bucket_size=512).to_quantizer()
+        n = 512 * 64
+        for two_level in (False, True):
+            st1 = comm.link_stats(qz, n, n_intra=4, n_inter=2,
+                                  two_level=two_level)
+            stk = comm.link_stats(qz, n, n_intra=4, n_inter=2,
+                                  two_level=two_level, pipeline_chunks=4)
+            for k in ("ici_bytes", "dcn_bytes", "dcn_q_bytes"):
+                assert st1[k] == stk[k], (two_level, k)
+            assert stk["launches"] == st1["launches"] + 3 * 4, two_level
+
+    def test_policy_link_stats_pipeline_chunks(self):
+        from repro.core import QuantPolicy
+        policy = QuantPolicy.parse("bias=fp,default=orq-9", bucket_size=512)
+        sizes = [("w", 512 * 64), ("bias", 4096)]
+        st1, _ = comm.policy_link_stats(policy, sizes, n_intra=4, n_inter=2,
+                                        two_level=False)
+        stk, _ = comm.policy_link_stats(policy, sizes, n_intra=4, n_inter=2,
+                                        two_level=False, pipeline_chunks=4)
+        assert stk["dcn_bytes"] == st1["dcn_bytes"]
+        assert stk["launches"] > st1["launches"]
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: pipelined == single-shot, grads AND EF residuals
+# ---------------------------------------------------------------------------
+
+def test_pipelined_bit_identity_replicated_all_schemes():
+    """Replicated flat exchange on a ragged buffer: every registered scheme
+    variant produces a bit-identical mean gradient and EF residual under
+    pipeline_chunks in {2, 3, 8} vs the single-shot schedule."""
+    run_devices("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.core import all_methods, comm
+from repro.core.api import QuantConfig
+from repro.utils.compat import shard_map
+
+mesh = jax.make_mesh((8,), ("dp",))
+n = 512 * 11 + 333                             # ragged: partial tail bucket
+key = jax.random.key(7)
+flats = jax.random.normal(jax.random.key(1), (8, n), jnp.float32)
+
+for name in all_methods():
+    cfg = QuantConfig(name=name, bucket_size=512)
+    outs = {}
+    for k in (1, 2, 3, 8):
+        eng = comm.GradientExchange(cfg.to_quantizer(), ("dp",),
+                                    pipeline_chunks=k)
+        fn = jax.jit(shard_map(lambda x: eng.exchange_flat(x[0], key),
+                               mesh=mesh, in_specs=P("dp"), out_specs=P(),
+                               check_vma=False))
+        g = np.asarray(fn(flats))
+        if eng.qz.is_identity:
+            r = None
+        else:
+            qfn = jax.jit(shard_map(
+                lambda x: (x[0] - eng.local_qdq_flat(x[0], key))[None],
+                mesh=mesh, in_specs=P("dp"), out_specs=P("dp"),
+                check_vma=False))
+            r = np.asarray(qfn(flats))
+        outs[k] = (g, r)
+    for k in (2, 3, 8):
+        assert np.array_equal(outs[1][0], outs[k][0]), (name, k, "grads")
+        if outs[1][1] is not None:
+            assert np.array_equal(outs[1][1], outs[k][1]), (name, k, "ef")
+    print(name, "OK")
+print("PIPELINED-REPLICATED OK")
+""")
+
+
+def test_pipelined_bit_identity_two_level_all_schemes():
+    """Two-level (ICI/DCN) path on a 2x4 ('pod','data') mesh: pipelined
+    inter-pod exchange and the shard-level EF residual stay bit-identical
+    to single-shot for every scheme."""
+    run_devices("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core import all_methods, comm
+from repro.core.api import QuantConfig
+from repro.utils.compat import shard_map
+
+mesh = jax.make_mesh((2, 4), ("pod", "data"))
+n = 512 * 7 + 123
+key = jax.random.key(7)
+flats = jax.random.normal(jax.random.key(1), (2, 4, n), jnp.float32)
+
+for name in all_methods():
+    cfg = QuantConfig(name=name, bucket_size=512)
+    outs = {}
+    for k in (1, 3):
+        eng = comm.GradientExchange(cfg.to_quantizer(), ("pod",),
+                                    intra_axes=("data",),
+                                    pipeline_chunks=k)
+        def f(x):
+            flat = x[0, 0]
+            mean = eng.exchange_flat(flat, key)
+            if eng.qz.is_identity:
+                return mean, jnp.zeros((1, 1))
+            shard, valid = eng.intra_scatter(flat)
+            res = shard - eng.local_qdq_shard(shard, key, valid=valid)
+            return mean, res[None]
+        fn = jax.jit(shard_map(
+            f, mesh=mesh, in_specs=P("pod", "data"),
+            out_specs=(P(), P(("pod", "data"))), check_vma=False))
+        g, r = fn(flats)
+        outs[k] = (np.asarray(g), np.asarray(r))
+    assert np.array_equal(outs[1][0], outs[3][0]), (name, "grads")
+    assert np.array_equal(outs[1][1], outs[3][1]), (name, "ef")
+    print(name, "OK")
+print("PIPELINED-TWO-LEVEL OK")
+""")
+
+
+def test_pipelined_bit_identity_fsdp_all_schemes():
+    """Fused FSDP exchange (sharded reduce-scatter group + replicated
+    group per scheme): pipelined outputs and residual_bufs bit-identical
+    to single-shot for every scheme."""
+    run_devices("""
+import jax, jax.numpy as jnp, numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+from repro.core import QuantPolicy, all_methods, comm
+from repro.utils.compat import shard_map
+
+mesh = jax.make_mesh((8,), ("data",))
+L = 8
+gw = jax.random.laplace(jax.random.key(0), (L, 16, 72)) * 0.1
+gb = jax.random.laplace(jax.random.key(1), (L, 40)) * 0.1
+tree = {"b": jnp.zeros((40,)), "w": jnp.zeros((16, 72))}
+
+for name in all_methods():
+    policy = QuantPolicy.parse(f"default={name}", bucket_size=64)
+    outs = {}
+    for k in (1, 4):
+        ex = comm.FsdpExchange.build(policy, tree, ("data",),
+                                     paths={"b": "b", "w": "w"},
+                                     shard_dims={"b": None, "w": 0},
+                                     n_shards=L, pipeline_chunks=k)
+        def f(gw_all, gb_all):
+            g = {"b": gb_all[0], "w": gw_all[0]}
+            wid = lax.axis_index(("data",))
+            bufs = ex.layout.flatten_groups(g)
+            o, res = ex.exchange_with_residuals(bufs, jax.random.key(7),
+                                                wid, ef_bufs=(None,) *
+                                                len(ex.engines))
+            res = [jnp.zeros((1,)) if r is None else r for r in res]
+            return ([lax.all_gather(x, "data")[None] for x in o],
+                    [lax.all_gather(r, "data")[None] for r in res])
+        ng = len(ex.layout.groups)
+        fn = jax.jit(shard_map(
+            f, mesh=mesh, in_specs=(P("data", None, None), P("data", None)),
+            out_specs=([P("data", None)] * ng, [P("data", None)] * ng),
+            check_vma=False))
+        o, res = fn(gw, gb)
+        outs[k] = ([np.asarray(x) for x in o], [np.asarray(r) for r in res])
+    for a, b in zip(outs[1][0], outs[4][0]):
+        assert np.array_equal(a, b), (name, "grads")
+    for a, b in zip(outs[1][1], outs[4][1]):
+        assert np.array_equal(a, b), (name, "ef")
+    print(name, "OK")
+print("PIPELINED-FSDP OK")
+""")
+
+
+# ---------------------------------------------------------------------------
+# jaxpr pinning: K collectives per phase, no extra full-buffer arrays
+# ---------------------------------------------------------------------------
+
+def test_jaxpr_pins_chunked_collectives_and_no_materialization():
+    run_devices("""
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.core import comm
+from repro.core.api import QuantConfig
+from repro.utils.compat import shard_map
+from repro.utils.jaxpr import (axis_collectives, collective_axis_counts,
+                               sized_outvar_count)
+
+mesh = jax.make_mesh((8,), ("dp",))
+n = 512 * 96 - 100      # 12 bucket rows per worker chunk (ragged tail)
+key = jax.random.key(7)
+x = jnp.zeros((8, n), jnp.float32)
+
+def make(k):
+    eng = comm.GradientExchange(
+        QuantConfig(name="orq-9", bucket_size=512).to_quantizer(), ("dp",),
+        pipeline_chunks=k)
+    return jax.make_jaxpr(shard_map(
+        lambda v: eng.exchange_flat(v[0], key), mesh=mesh,
+        in_specs=P("dp"), out_specs=P(), check_vma=False))(x)
+
+for k in (1, 3):
+    counts = collective_axis_counts(make(k))
+    # phase 1: 2 all_to_all per chunk; phase 2: 2 all_gather per chunk
+    assert axis_collectives(counts, "all_to_all", ("dp",)) == 2 * k, (k,
+                                                                     counts)
+    assert axis_collectives(counts, "all_gather", ("dp",)) == 2 * k, (k,
+                                                                     counts)
+
+# chunking must not add full-buffer-sized f32 intermediates: the K-chunk
+# jaxpr holds no more >= n-element f32 arrays than the single-shot one
+m1 = sized_outvar_count(make(1), n, dtype=jnp.float32)
+m3 = sized_outvar_count(make(3), n, dtype=jnp.float32)
+assert m3 <= m1, (m3, m1)
+print("JAXPR-PIN OK", m1, m3)
+""")
+
+
+class TestExchangeBenchGate:
+    """The exchange_bench --check gate: schema, pipelined-wins floor,
+    best-speedup regression (pure logic — no timing)."""
+
+    def _mk(self, speedups, base_us=1000.0):
+        import benchmarks.exchange_bench as xb
+
+        entries = [{"key": "exchange/s/n100/k1", "scheme": "s", "n": 100,
+                    "pipeline_chunks": 1, "step_us": base_us,
+                    "speedup_vs_single_shot": 1.0}]
+        wins = 0
+        for i, sp in enumerate(speedups):
+            us = base_us / sp
+            wins += us <= base_us * (1.0 + xb.WIN_SLACK)
+            entries.append({
+                "key": f"exchange/s/n100/k{2 ** (i + 1)}", "scheme": "s",
+                "n": 100, "pipeline_chunks": 2 ** (i + 1), "step_us": us,
+                "speedup_vs_single_shot": sp})
+        return {"schema": xb.SCHEMA, "jax": "x", "n_devices": 8,
+                "quick": True, "win_slack": xb.WIN_SLACK,
+                "summary": {"s": {"best_k": 2, "best_speedup": max(speedups),
+                                  "wins": wins}},
+                "entries": entries}
+
+    def test_pass_when_pipelined_wins(self):
+        import benchmarks.exchange_bench as xb
+
+        run = self._mk([1.3, 1.6, 1.2])
+        assert xb.check(run, run, 0.25) == []
+
+    def test_fails_when_pipelining_costs_step_time(self):
+        import benchmarks.exchange_bench as xb
+
+        run = self._mk([0.7, 0.8, 1.4])       # only one chunk count wins
+        fails = xb.check(run, self._mk([1.3, 1.6, 1.2]), 0.25)
+        assert any("only 1 chunk count" in f for f in fails), fails
+
+    def test_fails_on_best_speedup_regression(self):
+        import benchmarks.exchange_bench as xb
+
+        base = self._mk([1.5, 2.0, 1.5])
+        new = self._mk([1.1, 1.2, 1.1])       # 2.0 -> 1.2 is a 40% drop
+        fails = xb.check(new, base, 0.25)
+        assert any("regressed" in f for f in fails), fails
+
+    def test_fails_on_schema_change(self):
+        import benchmarks.exchange_bench as xb
+
+        run = self._mk([1.3, 1.6, 1.2])
+        bad = dict(run, schema=999)
+        assert any("schema" in f for f in xb.check(bad, run, 0.25))
+
+    def test_committed_baseline_parses_and_gates_itself(self):
+        import json
+
+        import benchmarks.exchange_bench as xb
+
+        assert os.path.exists(xb.DEFAULT_BASELINE), (
+            "committed exchange baseline missing")
+        with open(xb.DEFAULT_BASELINE) as fh:
+            base = json.load(fh)
+        assert base["schema"] == xb.SCHEMA
+        assert base["entries"]
+        # the acceptance criterion: pipelined at-least-matches single-shot
+        # at >= 2 chunk counts per scheme, in the committed baseline
+        assert all(s["wins"] >= 2 for s in base["summary"].values())
+        assert xb.check(base, base, 0.25) == []
