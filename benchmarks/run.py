@@ -20,6 +20,7 @@ MODULES = [
     ("roofline", "benchmarks.roofline"),
     ("kernels", "benchmarks.kernel_bench"),
     ("exchange", "benchmarks.exchange_bench"),
+    ("serve", "benchmarks.serve_bench"),
 ]
 
 

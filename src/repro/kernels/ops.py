@@ -39,6 +39,7 @@ from repro.kernels import dequant_avg as _dequant
 from repro.kernels import fused_bingrad as _fbin
 from repro.kernels import fused_decode as _fdec
 from repro.kernels import fused_encode as _fenc
+from repro.kernels import fused_kv as _fkv
 from repro.kernels import quant_rr as _quant
 from repro.kernels import ref as _ref
 
@@ -95,6 +96,9 @@ _ref_decode_mean = jax.jit(
     _ref.decode_fused_mean_ref, static_argnames=("d", "bits"))
 _ref_decode_each = jax.jit(
     _ref.decode_fused_each_ref, static_argnames=("d", "bits"))
+_ref_kv_attend = jax.jit(
+    _ref.kv_attend_ref,
+    static_argnames=("bits", "kv_heads", "scale", "softcap"))
 
 
 # ---------------------------------------------------------------------------
@@ -173,6 +177,22 @@ def encode_bingrad(v, mask, *, clip_c: Optional[float] = None,
     return _fbin.encode_bingrad_fused(v, mask, clip_c=clip_c,
                                       lloyd_iters=lloyd_iters,
                                       interpret=_interpret())
+
+
+def decode_attend(q, kw, klv, vw, vlv, mask, *, bits: int, kv_heads: int,
+                  scale: float, softcap: float = 0.0,
+                  use_kernels: bool = True):
+    """Fused dequant-attention over a quantized KV context in ONE
+    pallas_call: q (B, T, H, hd) + packed kw/vw (B, C, nw) + klv/vlv
+    (B, C, s) + mask (B, T, C) -> (B, T, H, hd) f32 (the serving engine's
+    decode hot path — the dequantized K/V never round-trip HBM)."""
+    if not _use(use_kernels):
+        return _ref_kv_attend(q, kw, klv, vw, vlv, mask, bits=bits,
+                              kv_heads=kv_heads, scale=scale,
+                              softcap=softcap)
+    return _fkv.decode_attend(q, kw, klv, vw, vlv, mask, bits=bits,
+                              kv_heads=kv_heads, scale=scale,
+                              softcap=softcap, interpret=_interpret())
 
 
 def decode_fused_mean(words, levels, d: int, *, bits: int,

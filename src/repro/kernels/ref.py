@@ -126,6 +126,77 @@ def encode_bingrad_fused_ref(v: jnp.ndarray, mask: jnp.ndarray, *,
     return pack_ref(idx, 1), lv
 
 
+# ---------------------------------------------------------------------------
+# quantized-KV serving oracles (kernels/fused_kv.py)
+# ---------------------------------------------------------------------------
+
+_NEG_INF = -2.0e38
+
+
+def _kv_decode(w: jnp.ndarray, lv: jnp.ndarray, bits: int, s: int,
+               d: int) -> jnp.ndarray:
+    """(C, nw) uint32 packed words + (C, s) levels -> (C, d) f32 values:
+    shift-mask unpack + gather-free one-hot level decode (the exact
+    composition of ``fused_decode._unpack_decode``, 2-D)."""
+    epw = 32 // bits
+    m = jnp.uint32(2 ** bits - 1)
+    parts = []
+    for j in range(epw):                          # static unroll
+        parts.append(((w >> jnp.uint32(bits * j)) & m).astype(jnp.int32))
+    idx = jnp.stack(parts, axis=-1).reshape(w.shape[0], -1)[:, :d]
+    val = jnp.zeros(idx.shape, dtype=jnp.float32)
+    for j in range(s):                  # static unroll, gather-free decode
+        val = val + ((idx == j).astype(jnp.float32)
+                     * lv[:, j].astype(jnp.float32)[:, None])
+    return val
+
+
+def kv_attend_block(q: jnp.ndarray, kw: jnp.ndarray, klv: jnp.ndarray,
+                    vw: jnp.ndarray, vlv: jnp.ndarray, mask: jnp.ndarray, *,
+                    bits: int, kv_heads: int, scale: float,
+                    softcap: float = 0.0) -> jnp.ndarray:
+    """One sequence of fused dequant-attention: q (T, H, hd) against a
+    quantized KV context kw/vw (C, nw) uint32 + klv/vlv (C, s) levels with
+    mask (T, C) in {0, 1} -> (T, H, hd) f32.
+
+    This is THE definition of the math: the Pallas kernel body in
+    ``fused_kv.py`` calls this very function on its VMEM tile, and the
+    oracle ``kv_attend_ref`` vmaps it over the batch — bit-identity between
+    kernel and oracle is by construction, not by mirroring."""
+    T, H, hd = q.shape
+    d = kv_heads * hd
+    s = klv.shape[-1]
+    k = _kv_decode(kw, klv, bits, s, d).reshape(-1, kv_heads, hd)
+    v = _kv_decode(vw, vlv, bits, s, d).reshape(-1, kv_heads, hd)
+    g = H // kv_heads
+    qg = q.astype(jnp.float32).reshape(T, kv_heads, g, hd)
+    sc = jnp.einsum("tkgh,ckh->kgtc", qg, k,
+                    preferred_element_type=jnp.float32) * scale
+    sc = sc.reshape(H, T, -1)
+    if softcap:
+        sc = jnp.tanh(sc / softcap) * softcap
+    sc = jnp.where(mask[None, :, :] > 0, sc, _NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)                       # (H, T, C)
+    o = jnp.einsum("kgtc,ckh->tkgh", p.reshape(kv_heads, g, T, -1), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(T, H, hd)
+
+
+def kv_attend_ref(q: jnp.ndarray, kw: jnp.ndarray, klv: jnp.ndarray,
+                  vw: jnp.ndarray, vlv: jnp.ndarray, mask: jnp.ndarray, *,
+                  bits: int, kv_heads: int, scale: float,
+                  softcap: float = 0.0) -> jnp.ndarray:
+    """Oracle for kernels.fused_kv.decode_attend: vmap of
+    :func:`kv_attend_block` over the batch dim. q (B, T, H, hd), kw/vw
+    (B, C, nw), klv/vlv (B, C, s), mask (B, T, C) -> (B, T, H, hd) f32."""
+    import functools
+
+    fn = functools.partial(kv_attend_block, bits=bits, kv_heads=kv_heads,
+                           scale=scale, softcap=softcap)
+    return jax.vmap(fn)(q.astype(jnp.float32), kw, klv, vw, vlv,
+                        mask.astype(jnp.float32))
+
+
 def decode_fused_mean_ref(words: jnp.ndarray, levels: jnp.ndarray, *,
                           d: int, bits: int) -> jnp.ndarray:
     """Oracle for kernels.fused_decode.decode_fused_mean."""

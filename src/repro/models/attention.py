@@ -182,13 +182,29 @@ def chunked_attention(q, k, v, spec: AttnSpec,
     return shard(out, None, None, "model", None)
 
 
+def masked_decode_attention(q, k_cache, v_cache, mask, spec: AttnSpec):
+    """Cache attention with a full per-query mask: q (B,T,H,hd) (rope
+    already applied); k_cache/v_cache (B,C,KV,hd) (rope applied at
+    insert); mask (B,T,C) bool (causal ∧ valid ∧ window, caller-built).
+    -> (B,T,H,hd).
+
+    The exact score→mask→softmax→PV composition of
+    :func:`decode_attention` generalized to T query tokens — at T == 1
+    with ``mask = valid[:, None, :]`` it is the same computation, which is
+    what keeps the serving engine's chunked prefill and batched decode
+    paths bit-identical to the dense one-token decode loop.
+    """
+    B, T, H, hd = q.shape
+    s = _chunk_scores(q, k_cache, spec)                 # (B,H,T,C)
+    s = jnp.where(mask[:, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = _chunk_out(p, v_cache, B, H, T)                 # (B,T,H,hd)
+    return o.astype(q.dtype)
+
+
 def decode_attention(q, k_cache, v_cache, valid_mask, spec: AttnSpec):
     """One-token attention. q (B,1,H,hd) (rope already applied);
     k_cache/v_cache (B,C,KV,hd) (rope applied at insert);
     valid_mask (B,C) bool. -> (B,1,H,hd)."""
-    B, _, H, hd = q.shape
-    s = _chunk_scores(q, k_cache, spec)                 # (B,H,1,C)
-    s = jnp.where(valid_mask[:, None, None, :], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    o = _chunk_out(p, v_cache, B, H, 1)                 # (B,1,H,hd)
-    return o.astype(q.dtype)
+    return masked_decode_attention(q, k_cache, v_cache,
+                                   valid_mask[:, None, :], spec)

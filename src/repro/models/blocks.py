@@ -17,7 +17,8 @@ from repro.configs.base import ModelConfig
 from repro.models import rwkv as rwkv_mod
 from repro.models import ssm as ssm_mod
 from repro.models.attention import (AttnSpec, chunked_attention,
-                                    decode_attention)
+                                    decode_attention,
+                                    masked_decode_attention)
 from repro.models.layers import (apply_rope, dense_init, gated_mlp,
                                  layer_norm, rms_norm, shard)
 from repro.models.moe import MoESpec, moe_ffn
@@ -402,6 +403,59 @@ def init_layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
         cache["xk"] = jnp.zeros((batch, enc_frames, KV, hd), dtype)
         cache["xv"] = jnp.zeros((batch, enc_frames, KV, hd), dtype)
     return cache
+
+
+def apply_layer_prefill_chunk(cfg: ModelConfig, spec: LayerSpec, p, x,
+                              cache, start):
+    """Chunked-prefill twin of :func:`apply_layer_decode` for the GQA
+    attention kinds: x (B,T,D), start scalar int32 (absolute position of
+    x[:, 0]) -> (x', new_cache). Appends the whole chunk's K/V at cache
+    slots start..start+T-1 (the caller guarantees start+T <= C — no ring
+    wrap) and attends with an explicit causal ∧ valid ∧ window mask
+    through the same score→softmax→PV composition as decode. At T == 1 it
+    computes exactly the decode step.
+
+    mamba/rwkv (stateful recurrences) and MLA (absorbed-form cache) have
+    no chunked path — callers fall back to the token-by-token loop.
+    """
+    if spec.kind in ("mamba", "rwkv") or cfg.mla:
+        raise NotImplementedError(
+            f"chunked prefill supports GQA attention layers only "
+            f"(kind={spec.kind!r}, mla={cfg.mla is not None})")
+    B, T = x.shape[:2]
+    asp = attn_spec(cfg, spec)
+    xn = _apply_norm(cfg, p["norm1"], x)
+    q, k, v = _gqa_project(cfg, p["attn"], xn)
+    qpos = start + jnp.arange(T, dtype=jnp.int32)          # (T,)
+    posv = jnp.broadcast_to(qpos[None], (B, T))
+    q = apply_rope(q, posv, asp.rope_theta)
+    k = apply_rope(k, posv, asp.rope_theta)
+    kc = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), start, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), start, axis=1)
+    posa = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], qpos, start, axis=0)
+    mask = ((posa >= 0)[None, None, :]
+            & (posa[None, None, :] <= posv[:, :, None]))   # (B,T,C)
+    if spec.kind == "attn_local" and cfg.window:
+        mask &= (posv[:, :, None] - posa[None, None, :]) < cfg.window
+    o = masked_decode_attention(q, kc, vc, mask, asp)
+    h = x + o.reshape(B, T, -1) @ p["attn"]["wo"]
+    new_cache = {"k": kc, "v": vc, "pos": posa}
+
+    if spec.cross_attn:
+        hx = _apply_norm(cfg, p["norm_x"], h)
+        qx, _, _ = _gqa_project(cfg, p["xattn"], hx)
+        Tx = cache["xk"].shape[1]
+        ox = masked_decode_attention(
+            qx, cache["xk"], cache["xv"], jnp.ones((B, T, Tx), bool),
+            asp._replace(causal=False, window=None))
+        h = h + ox.reshape(B, T, -1) @ p["xattn"]["wo"]
+        new_cache["xk"], new_cache["xv"] = cache["xk"], cache["xv"]
+
+    y, _ = _ffn_train(cfg, spec, p["ffn"], _apply_norm(cfg, p["norm2"], h))
+    return h + y, new_cache
 
 
 def apply_layer_decode(cfg: ModelConfig, spec: LayerSpec, p, x, cache, pos):

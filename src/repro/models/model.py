@@ -25,6 +25,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.blocks import (LayerSpec, apply_layer_decode,
+                                 apply_layer_prefill_chunk,
                                  apply_layer_train, attn_spec,
                                  init_layer, init_layer_cache)
 from repro.models.layers import (dense_init, embed_init, layer_norm,
@@ -381,6 +382,50 @@ class LM:
                                            gname + f"pos{j}", idx)
                     x, nc = apply_layer_decode(cfg, spec, pj, x,
                                                unit_c[f"pos{j}"], pos)
+                    ncs[f"pos{j}"] = nc
+                return x, ncs
+
+            x, nc = jax.lax.scan(body, x, (gp, gc, jnp.arange(g.repeats)))
+            new_caches.append(nc)
+        fp = self._gather_tree(params["final_norm"], gather, "final_norm", 0)
+        x = self._final_norm(fp, x)
+        head = self._head(params, gather)
+        lg = (x @ head.astype(x.dtype)).astype(jnp.float32)
+        return softcap(lg, cfg.final_softcap), tuple(new_caches)
+
+    def supports_chunked_prefill(self) -> bool:
+        """True when every layer has the chunked-prefill path (GQA
+        attention kinds only — mamba/rwkv/MLA fall back to the
+        token-by-token ``prefill`` loop)."""
+        cfg = self.cfg
+        return (cfg.mla is None
+                and all(s.kind in ("attn", "attn_local") for s in self.specs))
+
+    def prefill_chunk(self, params, cache, tokens, start,
+                      gather: GatherFn = _identity_gather):
+        """Chunked prefill: tokens (B, T) at absolute positions
+        start..start+T-1 -> (logits (B, T, V), cache). One forward over
+        the chunk instead of T decode steps; the caller guarantees
+        start+T fits every layer's cache (no ring wrap — for attn_local
+        layers the cache must cover the full sequence)."""
+        cfg = self.cfg
+        embed = self._gather_leaf("embed", params["embed"], 0, gather)
+        x = jnp.take(embed, tokens, axis=0).astype(jnp.bfloat16)
+        if cfg.embed_scale:
+            x = x * jnp.bfloat16(math.sqrt(cfg.d_model))
+        new_caches = []
+        for gi, (g, gp, gc) in enumerate(
+                zip(self.groups, params["groups"], cache)):
+            gname = f"g{gi}/"
+
+            def body(x, xs):
+                unit_p, unit_c, idx = xs
+                ncs = {}
+                for j, spec in enumerate(g.unit):
+                    pj = self._gather_tree(unit_p[f"pos{j}"], gather,
+                                           gname + f"pos{j}", idx)
+                    x, nc = apply_layer_prefill_chunk(
+                        cfg, spec, pj, x, unit_c[f"pos{j}"], start)
                     ncs[f"pos{j}"] = nc
                 return x, ncs
 

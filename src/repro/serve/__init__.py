@@ -1,4 +1,11 @@
-from repro.serve.step import ServePlan, make_prefill_step, make_serve_step, plan_serve_sharding
+from repro.serve.engine import Engine
+from repro.serve.kv_cache import KVQuantSpec, PageAllocator, init_kv_pools
+from repro.serve.scheduler import Request, Scheduler, ServeConfig
+from repro.serve.step import (ServePlan, make_chunked_prefill_step,
+                              make_prefill_step, make_serve_step,
+                              plan_serve_sharding)
 
-__all__ = ["make_serve_step", "make_prefill_step", "plan_serve_sharding",
-           "ServePlan"]
+__all__ = ["make_serve_step", "make_prefill_step",
+           "make_chunked_prefill_step", "plan_serve_sharding", "ServePlan",
+           "Engine", "ServeConfig", "Scheduler", "Request", "KVQuantSpec",
+           "PageAllocator", "init_kv_pools"]

@@ -1,0 +1,314 @@
+"""Quantized-KV continuous-batching serving engine.
+
+One jitted forward serves both phases over the paged pools
+(`serve/kv_cache.py`): batched decode traces at (max_batch, 1), chunked
+prefill at (1, chunk). Each attention layer
+
+    projects q/k/v for the incoming tokens, applies rope at their
+    absolute positions, quantizes the new K/V rows into their pages in
+    ONE ``pallas_call`` (``kernels.fused_kv.append_kv``), gathers the
+    sequence's pages into a contiguous context view, and attends through
+    the fused dequant-attention kernel (``ops.decode_attend``) — or, for
+    the bf16 escape hatch, stores raw rows and runs the dense
+    ``masked_decode_attention`` (bit-identical to the ring-buffer decode
+    path at equal context).
+
+Determinism: random-round schemes key their threefry stream on
+(request seed, absolute position, layer, K/V) — never on batch shape or
+slot index — so a sequence's greedy tokens are identical whether it runs
+alone or mixed into a busy batch (pinned by tests/test_serve_engine.py).
+
+Inactive decode slots point at the reserved trash page (their page-table
+rows are swapped to TRASH_PAGE for the step) and their outputs are
+discarded, so the decode step keeps a fixed shape with no host-side
+re-batching. Pools are donated through the jit, so append updates are
+in-place buffer reuse.
+"""
+from __future__ import annotations
+
+import math
+import time
+import zlib
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.kernels.fused_kv import append_kv
+from repro.models.attention import _scale, masked_decode_attention
+from repro.models.blocks import (_apply_norm, _ffn_train, _gqa_project,
+                                 attn_spec)
+from repro.models.layers import apply_rope, softcap
+from repro.models.model import LM
+from repro.serve.kv_cache import (KVQuantSpec, append_rows, gather_context,
+                                  init_kv_pools, pool_bytes, token_rbits,
+                                  TRASH_PAGE)
+from repro.serve.scheduler import Request, Scheduler, SeqState, ServeConfig
+
+
+def _layer_salt(gi: int, j: int, flavor: str) -> int:
+    return zlib.crc32(f"kv/g{gi}/pos{j}/{flavor}".encode()) & 0x7FFFFFFF
+
+
+class Engine:
+    """Continuous-batching engine over a paged (quantized) KV cache."""
+
+    def __init__(self, model: LM, params, cfg: ServeConfig):
+        self._validate(model)
+        self.model = model
+        self.cfg = cfg
+        mc = model.cfg
+        self.kvq = KVQuantSpec(cfg.kv_quant, mc.num_kv_heads,
+                               mc.resolved_head_dim, clip_c=cfg.clip_c)
+        if not self.kvq.is_bf16:
+            from repro.core.comm import wire
+            self.qz = self.kvq.quantizer()
+            self._rr = wire._fused_mode(self.qz) == "rr"
+        else:
+            self.qz, self._rr = None, False
+        self.C_max = cfg.max_context
+        if any(s.kind == "attn_local" for s in model.specs):
+            if mc.window and self.C_max > mc.window and not self.kvq.is_bf16:
+                # windowed layers still gather the full C_max context; the
+                # mask trims it, so this is correctness-safe — just noting
+                # the paged pools don't yet exploit window-bounded frees
+                pass
+        self.params = params
+        self.pools = init_kv_pools(model, self.kvq, cfg.resolved_num_pages,
+                                   cfg.page_size)
+        self.sched = Scheduler(cfg)
+        self.page_table = np.zeros((cfg.max_batch, cfg.max_pages_per_seq),
+                                   np.int32)
+        self.seeds = np.zeros((cfg.max_batch,), np.int32)
+        self._fwd = jax.jit(self._forward, donate_argnums=(1,))
+        self._next_rid = 0
+        # aggregate metrics
+        self.prefill_time = 0.0
+        self.prefill_tokens = 0
+        self.decode_times: List[float] = []
+        self.decode_tokens = 0
+
+    @staticmethod
+    def _validate(model: LM) -> None:
+        mc = model.cfg
+        bad = [s.kind for s in model.specs
+               if s.kind not in ("attn", "attn_local")]
+        if bad or mc.mla is not None or mc.encoder is not None:
+            raise ValueError(
+                f"paged KV serving supports GQA attention stacks only "
+                f"(kinds={sorted(set(bad))!r}, mla={mc.mla is not None}, "
+                f"encoder={mc.encoder is not None})")
+        if any(s.moe for s in model.specs):
+            # MoE capacity dispatch couples tokens across the batch, which
+            # would break mixed-vs-alone determinism
+            raise ValueError("paged KV serving does not support MoE layers")
+
+    def cache_bytes(self) -> int:
+        return pool_bytes(self.pools)
+
+    # ------------------------------------------------------------------
+    # jitted forward (traced at (max_batch, 1) decode / (1, chunk) prefill)
+    # ------------------------------------------------------------------
+
+    def _attn_layer(self, gi, j, spec, p, x, pool, table, qpos, mask,
+                    seeds, rep):
+        mc = self.model.cfg
+        asp = attn_spec(mc, spec)
+        B, T = x.shape[:2]
+        KV, hd = mc.num_kv_heads, mc.resolved_head_dim
+        xn = _apply_norm(mc, p["norm1"], x)
+        q, k, v = _gqa_project(mc, p["attn"], xn)
+        q = apply_rope(q, qpos, asp.rope_theta)
+        k = apply_rope(k, qpos, asp.rope_theta)
+        flat_pos = qpos.reshape(-1)
+        pages = jnp.take_along_axis(
+            table, qpos // self.cfg.page_size, axis=1).reshape(-1)
+        slots = flat_pos % self.cfg.page_size
+        if spec.kind == "attn_local" and mc.window:
+            carr = jnp.arange(self.C_max, dtype=jnp.int32)
+            mask = mask & ((qpos[:, :, None] - carr[None, None, :])
+                           < mc.window)
+        if self.kvq.is_bf16:
+            npool = append_rows(pool, pages, slots,
+                                {"k": k.reshape(B * T, KV, hd),
+                                 "v": v.reshape(B * T, KV, hd)})
+            ctx = gather_context(npool, table)
+            o = masked_decode_attention(q, ctx["k"], ctx["v"], mask, asp)
+        else:
+            d = KV * hd
+            k_rows = k.astype(jnp.float32).reshape(B * T, d)
+            v_rows = v.astype(jnp.float32).reshape(B * T, d)
+            rbits = None
+            if self._rr:
+                seeds_rows = jnp.repeat(seeds, T)
+                rk = token_rbits(seeds_rows, flat_pos,
+                                 _layer_salt(gi, j, "k"), rep, d)
+                rv = token_rbits(seeds_rows, flat_pos,
+                                 _layer_salt(gi, j, "v"), rep, d)
+                rbits = jnp.concatenate([rk, rv], axis=0)
+            kw, klv, vw, vlv = append_kv(self.qz, k_rows, v_rows, rbits)
+            npool = append_rows(pool, pages, slots,
+                                {"kw": kw, "klv": klv, "vw": vw,
+                                 "vlv": vlv})
+            ctx = gather_context(npool, table)
+            o = ops.decode_attend(
+                q, ctx["kw"], ctx["klv"], ctx["vw"], ctx["vlv"], mask,
+                bits=self.qz.wire_bits_per_element, kv_heads=KV,
+                scale=_scale(asp), softcap=asp.attn_softcap)
+            o = o.astype(x.dtype)
+        h = x + o.reshape(B, T, -1) @ p["attn"]["wo"]
+        y, _ = _ffn_train(mc, spec, p["ffn"],
+                          _apply_norm(mc, p["norm2"], h))
+        return h + y, npool
+
+    def _forward(self, params, pools, table, pos, seeds, tokens):
+        """tokens (B, T) at absolute positions pos[b]..pos[b]+T-1 ->
+        (last-position logits (B, V) f32, greedy next token (B,) int32,
+        new pools). Decode runs at T == 1 over max_batch slots; prefill
+        at B == 1 over a chunk."""
+        model, mc = self.model, self.model.cfg
+        B, T = tokens.shape
+        x = jnp.take(model._cast(params["embed"]), tokens, axis=0)
+        if mc.embed_scale:
+            x = x * jnp.bfloat16(math.sqrt(mc.d_model))
+        qpos = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None]
+        carr = jnp.arange(self.C_max, dtype=jnp.int32)
+        mask = carr[None, None, :] <= qpos[:, :, None]     # (B, T, C_max)
+        new_pools = []
+        for gi, (g, gp, gpool) in enumerate(
+                zip(model.groups, params["groups"], pools)):
+            gname = f"g{gi}/"
+
+            def body(x, xs):
+                unit_p, unit_pool, rep = xs
+                npool = {}
+                for j, spec in enumerate(g.unit):
+                    pj = model._gather_tree(
+                        unit_p[f"pos{j}"], lambda p, l, s: l,
+                        gname + f"pos{j}", rep)
+                    x, nc = self._attn_layer(gi, j, spec, pj, x,
+                                             unit_pool[f"pos{j}"], table,
+                                             qpos, mask, seeds, rep)
+                    npool[f"pos{j}"] = nc
+                return x, npool
+
+            x, npool = jax.lax.scan(body, x,
+                                    (gp, gpool, jnp.arange(g.repeats)))
+            new_pools.append(npool)
+        x = x[:, -1:]
+        fp = model._gather_tree(params["final_norm"],
+                                lambda p, l, s: l, "final_norm", 0)
+        x = model._final_norm(fp, x)
+        head = model._head(params, lambda p, l, s: l)
+        lg = (x @ head.astype(x.dtype)).astype(jnp.float32)
+        lg = softcap(lg, mc.final_softcap)[:, 0]           # (B, V)
+        return lg, jnp.argmax(lg, axis=-1).astype(jnp.int32), new_pools
+
+    # ------------------------------------------------------------------
+    # host loop
+    # ------------------------------------------------------------------
+
+    def submit(self, prompt, max_new: int, seed: Optional[int] = None,
+               arrival: int = 0) -> int:
+        """Queue a request; returns its rid. ``seed`` defaults to a hash
+        of the prompt CONTENT (not the rid), so the same prompt draws the
+        same quantization noise in any run composition."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if seed is None:
+            seed = zlib.crc32(prompt.tobytes()) & 0x7FFFFFFF
+        rid = self._next_rid
+        self._next_rid += 1
+        self.sched.submit(Request(rid=rid, prompt=prompt, max_new=max_new,
+                                  seed=int(seed), arrival=arrival))
+        return rid
+
+    def _write_slot(self, st: SeqState) -> None:
+        row = np.full((self.cfg.max_pages_per_seq,), TRASH_PAGE, np.int32)
+        row[:len(st.pages)] = st.pages
+        self.page_table[st.slot] = row
+        self.seeds[st.slot] = st.req.seed
+
+    def _clear_slot(self, st: SeqState) -> None:
+        self.page_table[st.slot] = TRASH_PAGE
+        self.seeds[st.slot] = 0
+
+    def _emit(self, st: SeqState, tok: int, lg, now: float) -> None:
+        st.generated.append(int(tok))
+        st.token_times.append(now)
+        if st.first_token_time < 0:
+            st.first_token_time = now
+        if self.cfg.record_logits:
+            st.logits.append(np.asarray(lg))
+        if st.done:
+            self._clear_slot(st)
+            self.sched.finish(st, now)
+
+    def step(self) -> str:
+        """Run one tick: admission, then one prefill chunk OR one batched
+        decode step. Returns 'prefill' | 'decode' | 'idle'."""
+        now = time.perf_counter()
+        for st in self.sched.admit(now):
+            self._write_slot(st)
+        self.sched.tick += 1
+        st = self.sched.next_prefill()
+        if st is not None:
+            T = min(self.cfg.prefill_chunk,
+                    st.prompt_len - st.n_prefilled)
+            toks = st.req.prompt[st.n_prefilled:st.n_prefilled + T]
+            t0 = time.perf_counter()
+            lg, ntok, self.pools = self._fwd(
+                self.params, self.pools,
+                jnp.asarray(self.page_table[st.slot:st.slot + 1]),
+                jnp.asarray([st.n_prefilled], np.int32),
+                jnp.asarray(self.seeds[st.slot:st.slot + 1]),
+                jnp.asarray(toks[None]))
+            ntok = np.asarray(ntok)
+            dt = time.perf_counter() - t0
+            self.prefill_time += dt
+            self.prefill_tokens += T
+            st.n_prefilled += T
+            if not st.in_prefill:
+                self._emit(st, int(ntok[0]), np.asarray(lg[0]),
+                           time.perf_counter())
+            return "prefill"
+        ready = self.sched.decode_ready()
+        if not ready:
+            return "idle"
+        tokens = np.zeros((self.cfg.max_batch, 1), np.int32)
+        pos = np.zeros((self.cfg.max_batch,), np.int32)
+        table = np.full_like(self.page_table, TRASH_PAGE)
+        for st in ready:
+            tokens[st.slot, 0] = st.generated[-1]
+            pos[st.slot] = st.next_pos
+            table[st.slot] = self.page_table[st.slot]
+        t0 = time.perf_counter()
+        lg, ntok, self.pools = self._fwd(
+            self.params, self.pools, jnp.asarray(table),
+            jnp.asarray(pos), jnp.asarray(self.seeds),
+            jnp.asarray(tokens))
+        ntok, lg = np.asarray(ntok), np.asarray(lg)
+        dt = time.perf_counter() - t0
+        self.decode_times.append(dt)
+        self.decode_tokens += len(ready)
+        now = time.perf_counter()
+        for st in ready:
+            self._emit(st, int(ntok[st.slot]), lg[st.slot], now)
+        return "decode"
+
+    def run(self, max_ticks: int = 100_000) -> Dict[int, SeqState]:
+        """Drive ticks until every submitted request finishes."""
+        for _ in range(max_ticks):
+            if not self.sched.has_work:
+                break
+            kind = self.step()
+            if kind == "idle" and not self.sched.waiting:
+                break
+        else:
+            raise RuntimeError(f"engine did not drain in {max_ticks} ticks")
+        if self.sched.has_work:
+            raise RuntimeError(
+                "engine idle with work left (arrivals in the future? "
+                "call step() manually for open-loop workloads)")
+        return dict(self.sched.finished)

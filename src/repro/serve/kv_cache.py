@@ -1,0 +1,219 @@
+"""Paged quantized KV cache for the serving engine.
+
+Layout. The cache is a pool of ``num_pages`` fixed-size page slots per
+attention layer; a page holds ``page_size`` consecutive tokens of ONE
+sequence. Each sequence owns an ordered page table (row of page ids), so
+token at absolute position ``p`` lives in page ``table[p // page_size]``
+at slot ``p % page_size`` — gathering a sequence's pages in table order
+yields its context contiguously. Pages are allocated up front when a
+request is admitted and freed when it finishes (host-side free list).
+
+Wire format. One bucket row per token spanning all KV heads
+(d = num_kv_heads * head_dim), exactly the training exchange's
+``(words, levels)`` unit:
+
+    kw, vw    (pages, page_size, nw) uint32 — bit-packed level indices
+    klv, vlv  (pages, page_size, s)  f32    — per-token runtime levels
+
+quantized through ``kernels.fused_kv.append_kv`` (one ``pallas_call``,
+the σ-fit → level-search → round → pack sweep of ``fused_encode``). The
+``bf16`` scheme is the escape hatch: raw (pages, page_size, KV, hd)
+bf16 pools, bit-identical to the dense ring-buffer decode path.
+
+Page 0 is the reserved TRASH page: inactive decode-batch slots append
+into it and no sequence's page table ever contains it, so a fixed-shape
+batched decode step needs no scatter masking.
+
+Per-layer pools carry the model's stacked-repeats leading axis, mirroring
+``LM.init_cache``, so the engine scans them with the same
+``lax.scan``-over-repeats structure as the dense decode step.
+
+Randomness. The random-round schemes draw their threefry stream per
+(request seed, absolute position, layer salt) via :func:`token_rbits` —
+NOT per batch shape — so a token's quantized bits are independent of
+which decode slot the sequence occupies and of what else shares the
+batch (the mixed-vs-alone determinism the engine tests pin).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encode as E
+from repro.core import rounding as R
+
+TRASH_PAGE = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class KVQuantSpec:
+    """Static description of the KV cache quantization scheme."""
+
+    scheme: str                  # "bf16" or a fused-encode quantizer name
+    num_kv_heads: int
+    head_dim: int
+    clip_c: Optional[float] = None
+
+    @property
+    def d(self) -> int:
+        """Bucket width: one bucket per token spans all KV heads."""
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def is_bf16(self) -> bool:
+        return self.scheme == "bf16"
+
+    def quantizer(self):
+        from repro.core.api import make_quantizer
+        from repro.core.comm import wire
+
+        qz = make_quantizer(self.scheme, bucket_size=self.d,
+                            clip_c=self.clip_c)
+        if qz.is_identity or not wire._fused_mode(qz):
+            raise ValueError(
+                f"--kv-quant {self.scheme!r}: KV pages need a fused "
+                f"one-pass encode (random-round schemes, bingrad-b, "
+                f"signsgd) or the 'bf16' escape hatch")
+        return qz
+
+    @property
+    def bits(self) -> int:
+        return self.quantizer().wire_bits_per_element
+
+    @property
+    def s(self) -> int:
+        return self.quantizer().s
+
+    @property
+    def nw(self) -> int:
+        return E.packed_words(self.d, self.bits)
+
+    def token_bytes(self) -> int:
+        """Cache bytes for one token (K + V) in one attention layer."""
+        if self.is_bf16:
+            return 2 * self.d * 2
+        return 2 * (4 * self.nw + 4 * self.s)
+
+
+def token_bytes_ratio(spec: KVQuantSpec) -> float:
+    """Quantized-vs-bf16 cache bytes at equal batch × context."""
+    bf16 = KVQuantSpec("bf16", spec.num_kv_heads, spec.head_dim)
+    return spec.token_bytes() / bf16.token_bytes()
+
+
+# ---------------------------------------------------------------------------
+# pools
+# ---------------------------------------------------------------------------
+
+def _init_layer_pool(kvq: KVQuantSpec, reps: int, num_pages: int,
+                     page_size: int) -> Dict[str, jnp.ndarray]:
+    P, S = num_pages, page_size
+    if kvq.is_bf16:
+        KV, hd = kvq.num_kv_heads, kvq.head_dim
+        return {"k": jnp.zeros((reps, P, S, KV, hd), jnp.bfloat16),
+                "v": jnp.zeros((reps, P, S, KV, hd), jnp.bfloat16)}
+    return {"kw": jnp.zeros((reps, P, S, kvq.nw), jnp.uint32),
+            "klv": jnp.zeros((reps, P, S, kvq.s), jnp.float32),
+            "vw": jnp.zeros((reps, P, S, kvq.nw), jnp.uint32),
+            "vlv": jnp.zeros((reps, P, S, kvq.s), jnp.float32)}
+
+
+def init_kv_pools(model, kvq: KVQuantSpec, num_pages: int, page_size: int):
+    """Paged pools mirroring the model's scan-group cache structure:
+    tuple-of-groups of {pos_j: pool leaves with leading (repeats,) axis}.
+    Only GQA attention layers are supported (the engine validates)."""
+    pools = []
+    for g in model.groups:
+        gp = {}
+        for j, spec in enumerate(g.unit):
+            if spec.kind not in ("attn", "attn_local") or spec.cross_attn:
+                raise ValueError(
+                    f"paged KV serving supports plain GQA attention "
+                    f"layers only (got kind={spec.kind!r}, "
+                    f"cross_attn={spec.cross_attn})")
+            gp[f"pos{j}"] = _init_layer_pool(kvq, g.repeats, num_pages,
+                                             page_size)
+        pools.append(gp)
+    return tuple(pools)
+
+
+def pool_bytes(pools) -> int:
+    """Total device bytes held by the paged pools."""
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(pools))
+
+
+def append_rows(pool: Dict[str, jnp.ndarray], pages: jnp.ndarray,
+                slots: jnp.ndarray, parts: Dict[str, jnp.ndarray]):
+    """Scatter R new tokens' rows into one layer's pool (leading reps axis
+    already consumed by the caller's scan): pool leaf (P, S, ...),
+    pages/slots (R,) int32, parts name -> (R, ...) new rows."""
+    return {k: pool[k].at[pages, slots].set(v.astype(pool[k].dtype))
+            for k, v in parts.items()}
+
+
+def gather_context(pool: Dict[str, jnp.ndarray], page_table: jnp.ndarray):
+    """Gather per-sequence contiguous context views from one layer's pool:
+    page_table (B, max_pages) int32 -> leaf (B, max_pages*page_size, ...).
+    Context index c IS absolute position c (pages are sequence-ordered)."""
+    out = {}
+    for k, leaf in pool.items():
+        g = leaf[page_table]                  # (B, maxp, S, ...)
+        out[k] = g.reshape(g.shape[0], g.shape[1] * g.shape[2],
+                           *g.shape[3:])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# deterministic per-token rounding stream
+# ---------------------------------------------------------------------------
+
+def token_rbits(seeds: jnp.ndarray, positions: jnp.ndarray, salt: int,
+                rep: jnp.ndarray, d: int) -> jnp.ndarray:
+    """(R,) request seeds + (R,) absolute token positions -> (R, d) uint32
+    threefry stream for the random-round schemes, keyed on
+    (seed, position, static layer salt, scan repeat index). Slot- and
+    batch-composition-independent by construction."""
+    def row(seed, pos):
+        k = jax.random.PRNGKey(seed)
+        k = jax.random.fold_in(k, pos)
+        k = jax.random.fold_in(k, salt)
+        k = jax.random.fold_in(k, rep)
+        return R.random_bits(k, (d,))
+
+    return jax.vmap(row)(seeds, positions)
+
+
+# ---------------------------------------------------------------------------
+# host-side page allocator
+# ---------------------------------------------------------------------------
+
+class PageAllocator:
+    """Free-list allocator over the page pool. Page 0 (TRASH_PAGE) is
+    reserved — inactive decode slots write into it, sequences never do."""
+
+    def __init__(self, num_pages: int):
+        if num_pages < 2:
+            raise ValueError(f"need >= 2 pages (1 is the trash page), "
+                             f"got {num_pages}")
+        self.num_pages = num_pages
+        self._free: List[int] = list(range(num_pages - 1, TRASH_PAGE, -1))
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop n pages, or None (allocation is all-or-nothing)."""
+        if n > len(self._free):
+            return None
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            if p == TRASH_PAGE:
+                raise ValueError("freeing the trash page")
+            self._free.append(p)

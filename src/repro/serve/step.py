@@ -119,6 +119,33 @@ def make_serve_step(model: LM, mesh, plan: ServePlan, *,
     )
 
 
+def make_chunked_prefill_step(model: LM, mesh, plan: ServePlan):
+    """Cache-filling chunked prefill: (params, cache, tokens (B,T),
+    start) -> (logits (B,T,V), cache). Writes the chunk's K/V into the
+    decode cache at absolute positions start..start+T-1 (the launcher
+    guarantees the chunk fits every layer's cache — no ring wrap), so a
+    prompt prefills in ceil(S/T) forwards instead of S decode steps.
+    Retraces per distinct chunk length; the cache is donated like the
+    decode step's."""
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_ent = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes
+                                               else None)
+
+    def step(params, cache, tokens, start):
+        return model.prefill_chunk(params, cache, tokens, start)
+
+    return jax.jit(
+        step,
+        in_shardings=(plan.param_shardings(mesh),
+                      plan.cache_shardings(mesh),
+                      NamedSharding(mesh, P(dp_ent)),
+                      NamedSharding(mesh, P())),
+        out_shardings=(NamedSharding(mesh, P(dp_ent)),
+                       plan.cache_shardings(mesh)),
+        donate_argnums=(1,),
+    )
+
+
 def make_prefill_step(model: LM, mesh, plan: ServePlan):
     """Chunked-forward prefill producing all-position logits (the
     inference-prefill shape): (params, tokens (B,S) [, enc_embeds]) ->

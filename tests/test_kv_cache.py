@@ -1,0 +1,149 @@
+"""Paged KV cache: byte math, allocator, append/gather, rbits stream.
+
+The compression acceptance criterion lives here: at the real archs'
+KV dims, orq-5 and bingrad-b pages cost <= 1/4 of bf16 at equal
+batch x context (including the per-token level-table overhead).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve.kv_cache import (KVQuantSpec, PageAllocator, TRASH_PAGE,
+                                  append_rows, gather_context,
+                                  init_kv_pools, pool_bytes,
+                                  token_bytes_ratio, token_rbits)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestKVQuantSpec:
+    def test_bf16_token_bytes(self):
+        # K + V, d = KV*hd elements each, 2 bytes per element
+        assert KVQuantSpec("bf16", 4, 32).token_bytes() == 2 * 128 * 2
+
+    def test_quantized_token_bytes(self):
+        spec = KVQuantSpec("orq-9", 4, 32)     # d=128, 4 bits -> nw=16
+        assert spec.bits == 4 and spec.nw == 16 and spec.s == 9
+        assert spec.token_bytes() == 2 * (4 * 16 + 4 * 9)
+
+    @pytest.mark.parametrize("kv,hd", [
+        (12, 64),    # lm-100m
+        (8, 256),    # gemma2-9b
+    ])
+    def test_compression_ratio_quarter_at_real_dims(self, kv, hd):
+        """PR-7 acceptance: quantized cache bytes <= 1/4 of bf16 at equal
+        batch x context for the gated schemes."""
+        for scheme in ("orq-5", "bingrad-b"):
+            r = token_bytes_ratio(KVQuantSpec(scheme, kv, hd))
+            assert r <= 0.25, (scheme, kv, hd, r)
+        # 1-bit pages are ~14x smaller even with the level tables
+        assert token_bytes_ratio(KVQuantSpec("bingrad-b", kv, hd)) < 0.10
+
+    def test_rejects_identity_scheme(self):
+        with pytest.raises(ValueError, match="fused one-pass encode"):
+            KVQuantSpec("fp", 4, 32).quantizer()
+
+
+class TestPageAllocator:
+    def test_trash_page_reserved(self):
+        a = PageAllocator(5)
+        got = a.alloc(4)
+        assert got is not None and TRASH_PAGE not in got
+        assert sorted(got) == [1, 2, 3, 4]
+
+    def test_alloc_all_or_nothing(self):
+        a = PageAllocator(4)
+        assert a.alloc(4) is None          # only 3 allocatable
+        assert a.num_free == 3
+        got = a.alloc(2)
+        assert a.num_free == 1
+        a.free(got)
+        assert a.num_free == 3
+
+    def test_free_trash_page_raises(self):
+        with pytest.raises(ValueError, match="trash page"):
+            PageAllocator(4).free([TRASH_PAGE])
+
+    def test_too_small_pool_raises(self):
+        with pytest.raises(ValueError, match=">= 2 pages"):
+            PageAllocator(1)
+
+
+class TestPools:
+    def _model(self):
+        from repro.configs.base import get_smoke_config
+        from repro.models import LM
+        return LM(get_smoke_config("lm-100m"))
+
+    def test_pool_shapes_and_bytes(self):
+        model = self._model()
+        kvq = KVQuantSpec("orq-9", model.cfg.num_kv_heads,
+                          model.cfg.resolved_head_dim)
+        pools = init_kv_pools(model, kvq, num_pages=9, page_size=4)
+        leaves = jax.tree_util.tree_leaves(pools)
+        reps = sum(g.repeats * len(g.unit) for g in model.groups)
+        # kw/klv/vw/vlv per layer; leading axis carries the scan repeats
+        assert all(x.shape[1:3] == (9, 4) for x in leaves)
+        assert pool_bytes(pools) == sum(
+            x.size * x.dtype.itemsize for x in leaves)
+        # total pool bytes = layers * pages * page_size * token_bytes
+        assert pool_bytes(pools) == reps * 9 * 4 * kvq.token_bytes()
+
+    def test_bf16_pool_bytes(self):
+        model = self._model()
+        kvq = KVQuantSpec("bf16", model.cfg.num_kv_heads,
+                          model.cfg.resolved_head_dim)
+        pools = init_kv_pools(model, kvq, num_pages=5, page_size=4)
+        reps = sum(g.repeats * len(g.unit) for g in model.groups)
+        assert pool_bytes(pools) == reps * 5 * 4 * kvq.token_bytes()
+
+    def test_append_then_gather_round_trip(self):
+        """Tokens scattered at (page, slot) come back at context index ==
+        absolute position when gathered through the page table."""
+        S, nw, s = 4, 3, 2
+        pool = {"kw": jnp.zeros((6, S, nw), jnp.uint32),
+                "klv": jnp.zeros((6, S, s), jnp.float32)}
+        # sequence owns pages [2, 5]; write tokens at abs positions 1, 5
+        table = jnp.asarray([[2, 5]], jnp.int32)
+        pos = np.asarray([1, 5])
+        pages = jnp.asarray(table[0][pos // S])
+        slots = jnp.asarray(pos % S)
+        rows_w = jnp.asarray([[1, 2, 3], [4, 5, 6]], jnp.uint32)
+        rows_l = jnp.asarray([[.1, .2], [.3, .4]], jnp.float32)
+        pool = append_rows(pool, pages, slots,
+                           {"kw": rows_w, "klv": rows_l})
+        ctx = gather_context(pool, table)
+        assert ctx["kw"].shape == (1, 2 * S, nw)
+        np.testing.assert_array_equal(np.asarray(ctx["kw"][0, 1]),
+                                      np.asarray(rows_w[0]))
+        np.testing.assert_array_equal(np.asarray(ctx["kw"][0, 5]),
+                                      np.asarray(rows_w[1]))
+        np.testing.assert_array_equal(np.asarray(ctx["klv"][0, 5]),
+                                      np.asarray(rows_l[1]))
+        # untouched slots stay zero
+        assert int(jnp.abs(ctx["kw"][0, 0]).sum()) == 0
+
+
+class TestTokenRbits:
+    def test_keyed_on_seed_pos_salt_rep_only(self):
+        """The stream depends on (seed, position, salt, rep) — NOT on the
+        row's place in the batch (mixed-vs-alone determinism)."""
+        d = 16
+        seeds = jnp.asarray([7, 7, 9], jnp.int32)
+        pos = jnp.asarray([3, 4, 3], jnp.int32)
+        r = token_rbits(seeds, pos, salt=11, rep=jnp.int32(0), d=d)
+        assert r.shape == (3, d)
+        # same (seed, pos) alone == in a batch, any slot
+        alone = token_rbits(seeds[1:2], pos[1:2], salt=11,
+                            rep=jnp.int32(0), d=d)
+        np.testing.assert_array_equal(np.asarray(r[1]), np.asarray(alone[0]))
+        # varying any key component changes the bits
+        assert not np.array_equal(np.asarray(r[0]), np.asarray(r[1]))
+        assert not np.array_equal(np.asarray(r[0]), np.asarray(r[2]))
+        r_salt = token_rbits(seeds[:1], pos[:1], salt=12,
+                             rep=jnp.int32(0), d=d)
+        r_rep = token_rbits(seeds[:1], pos[:1], salt=11,
+                            rep=jnp.int32(1), d=d)
+        assert not np.array_equal(np.asarray(r[0]), np.asarray(r_salt[0]))
+        assert not np.array_equal(np.asarray(r[0]), np.asarray(r_rep[0]))

@@ -113,3 +113,70 @@ class TestServePlan:
                              capture_output=True, text=True, timeout=300)
         assert out.returncode == 0, out.stdout + out.stderr
         assert "PLAN OK" in out.stdout
+
+    def test_seq_sharded_decode_matches_unsharded(self):
+        """seq_sharded=True (long-context layout: the cache SEQUENCE dim
+        sharded over data x model, batch replicated) must decode the same
+        logits as the plain single-device path — XLA's derived
+        distributed softmax is a pure layout change."""
+        import os
+        import subprocess
+        import sys
+        import textwrap
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        env["PYTHONPATH"] = os.path.join(root, "src")
+        env["JAX_PLATFORMS"] = "cpu"
+        prog = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.configs.base import get_smoke_config
+        from repro.models import LM
+        from repro.serve.step import make_serve_step, plan_serve_sharding
+
+        model = LM(get_smoke_config("lm-100m"))
+        params = jax.jit(model.init)(jax.random.key(0))
+        params = jax.tree_util.tree_map(
+            lambda x: x.astype(jnp.bfloat16)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
+        B, C, S = 1, 64, 6
+        toks = jax.random.randint(jax.random.key(1), (B, S), 0,
+                                  model.cfg.vocab_size)
+
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        cache = model.init_cache(B, C)
+        plan = plan_serve_sharding(model, jax.eval_shape(lambda: params),
+                                   jax.eval_shape(lambda: cache), mesh,
+                                   seq_sharded=True)
+        # the long-context layout: cache seq over BOTH axes, batch
+        # replicated (batch_dp=False)
+        kspecs = [s for p, s in
+                  jax.tree_util.tree_leaves_with_path(plan.cache_specs)
+                  if "'k'" in jax.tree_util.keystr(p)]
+        assert kspecs and all(s[2] == ("data", "model") for s in kspecs), \\
+            kspecs
+        step = make_serve_step(model, mesh, plan, batch_dp=False)
+        sh_lg = []
+        for i in range(S):
+            lg, cache = step(params, cache, toks[:, i][:, None],
+                             jnp.int32(i))
+            sh_lg.append(np.asarray(lg[:, -1], np.float32))
+
+        ref_cache = model.init_cache(B, C)
+        for i in range(S):
+            lg, ref_cache = model.decode_step(params, ref_cache,
+                                              toks[:, i][:, None],
+                                              jnp.int32(i))
+            got = sh_lg[i]
+            want = np.asarray(lg[:, -1], np.float32)
+            # bf16 matmuls accumulate in a different (sharded) order, so
+            # compare absolutely at the bf16 resolution of the logits
+            np.testing.assert_allclose(got, want, rtol=0, atol=0.1)
+            assert np.array_equal(got.argmax(-1), want.argmax(-1)), i
+        print("SEQ-SHARDED OK")
+        """)
+        out = subprocess.run([sys.executable, "-c", prog], env=env,
+                             capture_output=True, text=True, timeout=300)
+        assert out.returncode == 0, out.stdout + out.stderr
+        assert "SEQ-SHARDED OK" in out.stdout
