@@ -1,0 +1,139 @@
+"""Rule-coverage snapshot of the invariant auditor (``repro.analysis``).
+
+Not a timing benchmark: the emitted quantity is COVERAGE — which rules
+are registered, how many bundles the matrix audit traced, and that both
+the audit and the seeded-violation selftest behave (zero findings on
+main; every rule fires on its seed). The committed snapshot
+(``benchmarks/ANALYSIS.json``) is the ratchet: a PR that unregisters a
+rule, shrinks the traced matrix, or breaks a seed fails ``--check``
+against the baseline even though the test suite may still be green.
+
+    {"schema": 1, "jax": ..., "n_findings": 0, "n_bundles": ...,
+     "selftest_ok": true,
+     "rules": [{"rule": ..., "kind": ..., "severity": ...,
+                "protects": ..., "findings": 0}, ...]}
+
+Usage:
+    PYTHONPATH=src:. python benchmarks/analysis.py \
+        [--out benchmarks/ANALYSIS_NEW.json]
+    PYTHONPATH=src:. python benchmarks/analysis.py --check NEW.json \
+        --baseline benchmarks/ANALYSIS.json
+    PYTHONPATH=src:. python benchmarks/analysis.py --update-baseline
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+from typing import List
+
+SCHEMA = 1
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "ANALYSIS.json")
+
+
+def _audit(*extra: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *extra],
+        env=env, capture_output=True, text=True, timeout=1800)
+
+
+def collect() -> dict:
+    """Run the full matrix audit + selftest in subprocesses (they need
+    their own 8-fake-device jax) and distill the coverage snapshot."""
+    with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as fh:
+        path = fh.name
+    try:
+        audit = _audit("--check", "--json", path)
+        if audit.returncode != 0:
+            raise RuntimeError(
+                f"matrix audit failed:\n{audit.stdout}\n{audit.stderr}")
+        with open(path) as fh:
+            rep = json.load(fh)
+    finally:
+        os.unlink(path)
+    selftest = _audit("--selftest")
+    return {
+        "schema": SCHEMA,
+        "jax": rep["jax"],
+        "n_findings": rep["n_findings"],
+        "n_bundles": len(rep["bundles"]),
+        "selftest_ok": selftest.returncode == 0,
+        "rules": rep["rules"],
+    }
+
+
+def check(new: dict, base: dict) -> List[str]:
+    fails: List[str] = []
+    if new.get("schema") != SCHEMA:
+        fails.append(f"schema {new.get('schema')} != {SCHEMA}")
+        return fails
+    if new.get("n_findings", -1) != 0:
+        fails.append(f"matrix audit has {new.get('n_findings')} finding(s) "
+                     f"(must be 0 on main)")
+    if not new.get("selftest_ok"):
+        fails.append("selftest failed: some rule no longer fires on its "
+                     "seeded violation")
+    new_rules = {r["rule"] for r in new.get("rules", [])}
+    lost = {r["rule"] for r in base.get("rules", [])} - new_rules
+    if lost:
+        fails.append(f"rule(s) unregistered vs baseline: {sorted(lost)}")
+    if new.get("n_bundles", 0) < base.get("n_bundles", 0):
+        fails.append(f"traced matrix shrank: {new.get('n_bundles')} < "
+                     f"baseline {base.get('n_bundles')}")
+    return fails
+
+
+def run(emit) -> None:
+    """benchmarks.run hook: one CSV row per rule + a coverage summary."""
+    snap = collect()
+    for r in snap["rules"]:
+        emit(f"analysis/{r['rule']},0.0,"
+             f"kind={r['kind']};findings={r['findings']}")
+    emit(f"analysis/coverage,0.0,bundles={snap['n_bundles']};"
+         f"selftest_ok={snap['selftest_ok']}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--check", metavar="NEW_JSON", default=None)
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--update-baseline", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.check:
+        with open(args.check) as fh:
+            new = json.load(fh)
+        with open(args.baseline) as fh:
+            base = json.load(fh)
+        fails = check(new, base)
+        for f in fails:
+            print(f"[FAIL] {f}")
+        if not fails:
+            print(f"[ok] coverage gate: {new['n_bundles']} bundles, "
+                  f"{len(new['rules'])} rules, 0 findings")
+        return 1 if fails else 0
+
+    snap = collect()
+    out = BASELINE if args.update_baseline else (
+        args.out or os.path.join(os.path.dirname(BASELINE),
+                                 "ANALYSIS_NEW.json"))
+    with open(out, "w") as fh:
+        json.dump(snap, fh, indent=1)
+        fh.write("\n")
+    print(f"wrote {out}: {snap['n_bundles']} bundles, "
+          f"{len(snap['rules'])} rules, findings={snap['n_findings']}, "
+          f"selftest_ok={snap['selftest_ok']}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

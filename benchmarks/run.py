@@ -21,6 +21,7 @@ MODULES = [
     ("kernels", "benchmarks.kernel_bench"),
     ("exchange", "benchmarks.exchange_bench"),
     ("serve", "benchmarks.serve_bench"),
+    ("analysis", "benchmarks.analysis"),
 ]
 
 

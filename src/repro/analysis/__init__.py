@@ -1,0 +1,32 @@
+"""Trace auditor: jaxpr/HLO invariant engine + AST source lint.
+
+The repo's load-bearing claims — O(1) quantized collectives per step,
+exactly one ``pallas_call`` per wire op, single-draw rounding streams,
+no dequantized full-buffer materialization, donated train state — are
+machine-checked here over the scheme x mode matrix instead of living
+only in scattered per-test jaxpr pins.
+
+Layout (everything below ``audit`` is import-light — no jax — so the
+CLI can set ``XLA_FLAGS`` before jax initializes):
+
+  ``traversal``  the ONE shared sub-jaxpr walker (pjit/scan/while/cond/
+                 shard_map/pallas_call bodies + the custom_vjp fwd rule
+                 the old ad-hoc walkers silently skipped)
+  ``findings``   the structured ``Finding`` record
+  ``engine``     ``@register_check`` registry + ``run_checks``
+  ``rules``      the trace-invariant rules (importing registers them)
+  ``lint``       the AST source-lint rules (ditto)
+  ``audit``      matrix builders (imports jax + the train/serve stack)
+  ``selftest``   seeded-violation corpus: one true positive per rule
+
+Run ``PYTHONPATH=src python -m repro.analysis --check`` for the full
+matrix; see EXPERIMENTS.md "Static invariants" for the rule catalog.
+"""
+from repro.analysis.findings import Finding
+from repro.analysis.engine import (CHECKS, SourceBundle, TraceBundle,
+                                   register_check, run_checks)
+from repro.analysis import rules as _rules    # noqa: F401  (registers)
+from repro.analysis import lint as _lint      # noqa: F401  (registers)
+
+__all__ = ["Finding", "CHECKS", "SourceBundle", "TraceBundle",
+           "register_check", "run_checks"]

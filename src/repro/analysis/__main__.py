@@ -1,0 +1,139 @@
+"""``python -m repro.analysis`` — the invariant auditor CLI.
+
+    PYTHONPATH=src python -m repro.analysis --check            # CI gate
+    PYTHONPATH=src python -m repro.analysis --list-rules
+    PYTHONPATH=src python -m repro.analysis --rules env-read --no-train
+    PYTHONPATH=src python -m repro.analysis --selftest         # rules fire?
+    PYTHONPATH=src python -m repro.analysis --check \
+        --inject-violation prng-single-draw                    # exits 1
+
+Runs the AST lint over ``src/repro`` plus the traced matrix
+(``audit.py``: wire ops x registered schemes, train step x
+replicated/FSDP x flat/two_level x pipeline_chunks, serve ``_fwd`` x KV
+schemes) through the same ``run_checks`` engine the tests call.
+``--check`` exits nonzero iff any finding survives; ``--json`` writes
+the structured report (the CI artifact / ``benchmarks/ANALYSIS.json``
+snapshot).
+"""
+# Before ANY jax import: the train matrix needs 8 fake devices (jax
+# locks the device count on first init).
+from repro.utils.env import force_host_device_count
+
+force_host_device_count(8)
+
+import argparse
+import json
+import sys
+
+
+def _report(bundles, findings, selftest=None):
+    import jax
+
+    from repro.analysis.engine import CHECKS
+
+    by_rule = {r: 0 for r in CHECKS}
+    for f in findings:
+        by_rule[f.rule] = by_rule.get(f.rule, 0) + 1
+    rep = {
+        "schema": 1,
+        "jax": jax.__version__,
+        "n_findings": len(findings),
+        "rules": [
+            {"rule": c.rule, "kind": c.kind, "severity": c.severity,
+             "protects": c.protects, "findings": by_rule.get(c.rule, 0)}
+            for c in CHECKS.values()
+        ],
+        "bundles": [
+            {"label": b.label, "kind": b.kind,
+             "meta_keys": sorted(getattr(b, "meta", {}))}
+            if getattr(b, "kind", None) != "source"
+            else {"label": b.label, "kind": "source",
+                  "files": len(b.files)}
+            for b in bundles
+        ],
+        "findings": [f.to_dict() for f in findings],
+    }
+    if selftest is not None:
+        rep["selftest"] = {r: len(fs) for r, fs in selftest.items()}
+    return rep
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jaxpr/HLO invariant audit + source lint")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero if any finding is produced")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the structured report to PATH")
+    ap.add_argument("--rules", metavar="R1,R2",
+                    help="comma-separated rule subset (default: all)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the registered rules and exit")
+    ap.add_argument("--selftest", action="store_true",
+                    help="apply every rule to its seeded violation; exit "
+                         "nonzero if any rule fails to fire")
+    ap.add_argument("--inject-violation", metavar="RULE",
+                    help="append RULE's seeded-violation bundle to the "
+                         "matrix (demonstrates the --check gate)")
+    ap.add_argument("--no-lint", action="store_true",
+                    help="skip the AST source lint")
+    ap.add_argument("--no-wire", action="store_true",
+                    help="skip the per-scheme wire-op traces")
+    ap.add_argument("--no-train", action="store_true",
+                    help="skip the train-step matrix traces")
+    ap.add_argument("--no-serve", action="store_true",
+                    help="skip the serve _fwd traces")
+    args = ap.parse_args(argv)
+
+    from repro.analysis import run_checks
+    from repro.analysis.engine import CHECKS
+    from repro.analysis.findings import render
+
+    if args.list_rules:
+        for c in CHECKS.values():
+            print(f"{c.rule:24s} [{c.kind:6s}] {c.protects}")
+        return 0
+
+    if args.selftest:
+        from repro.analysis.selftest import run_selftest
+
+        silent = [r for r, fs in run_selftest().items() if not fs]
+        if silent:
+            print(f"SELFTEST FAIL: rule(s) did not fire on their seeded "
+                  f"violation: {silent}")
+            return 1
+        print(f"selftest: all {len(CHECKS)} rules fire on their seeded "
+              f"violations")
+        return 0
+
+    rules = args.rules.split(",") if args.rules else None
+    from repro.analysis import audit, lint
+
+    bundles = []
+    if not args.no_lint:
+        bundles.append(lint.collect_sources())
+    bundles += audit.build_bundles(wire_ops=not args.no_wire,
+                                   train=not args.no_train,
+                                   serve=not args.no_serve)
+    if args.inject_violation:
+        from repro.analysis.selftest import seeded_bundle
+
+        bundles.append(seeded_bundle(args.inject_violation))
+
+    findings = run_checks(bundles, rules=rules)
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(_report(bundles, findings), fh, indent=1)
+    n_rules = len(rules) if rules else len(CHECKS)
+    if findings:
+        print(render(findings))
+        print(f"{len(findings)} finding(s) across {len(bundles)} bundles "
+              f"({n_rules} rules)")
+        return 1 if args.check else 0
+    print(f"OK: {len(bundles)} bundles x {n_rules} rules, 0 findings")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,106 @@
+"""``@register_check`` registry + bundle types + ``run_checks``.
+
+A *check* is a function ``check(bundle) -> list[Finding]`` registered
+under a stable rule id. Bundles come in two kinds:
+
+  * :class:`TraceBundle`  — one traced program (``jax.make_jaxpr``
+    output) plus the invariant expectations computed for it by
+    ``repro.analysis.audit`` (expected collective counts, pallas-call
+    budget, donation floor, PRNG baseline, ...). Trace rules read only
+    ``bundle.meta`` keys they understand and return ``[]`` when a key
+    is absent — so one bundle opts into exactly the rules that make
+    sense for it.
+  * :class:`SourceBundle` — parsed ASTs of the ``src/repro`` tree for
+    the lint rules.
+
+Tests and the ``python -m repro.analysis`` CLI both go through
+:func:`run_checks`, so an invariant pinned in a test IS the rule the CI
+matrix audit enforces (no parallel hand-rolled walkers).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.findings import Finding
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceBundle:
+    """One traced program + its invariant expectations.
+
+    ``label``  display name, e.g. ``train/replicated/two_level/k3``
+    ``kind``   ``train_step`` | ``wire_op`` | ``serve_fwd`` | ``exchange``
+    ``closed`` the ``ClosedJaxpr`` from ``jax.make_jaxpr``
+    ``meta``   rule expectations; see each rule in ``rules.py``
+    """
+
+    label: str
+    kind: str
+    closed: Any
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass(frozen=True)
+class SourceFile:
+    path: str          # repo-relative, e.g. src/repro/kernels/ops.py
+    text: str
+    tree: Any          # ast.Module
+
+
+@dataclasses.dataclass(frozen=True)
+class SourceBundle:
+    label: str
+    files: Tuple[SourceFile, ...]
+    kind: str = "source"
+
+
+@dataclasses.dataclass(frozen=True)
+class Check:
+    rule: str
+    fn: Callable[[Any], List[Finding]]
+    kind: str            # "trace" | "source"
+    severity: str
+    protects: str        # one-liner: which repo claim this rule guards
+
+
+#: rule id -> Check, in registration order
+CHECKS: Dict[str, Check] = {}
+
+
+def register_check(rule: str, *, kind: str, severity: str = "error",
+                   protects: str = ""):
+    """Decorator registering ``fn(bundle) -> list[Finding]`` as a rule."""
+    if kind not in ("trace", "source"):
+        raise ValueError(f"kind must be 'trace' or 'source', got {kind!r}")
+
+    def deco(fn):
+        if rule in CHECKS:
+            raise ValueError(f"duplicate rule id {rule!r}")
+        CHECKS[rule] = Check(rule=rule, fn=fn, kind=kind,
+                             severity=severity, protects=protects)
+        return fn
+
+    return deco
+
+
+def run_checks(bundles: Sequence[Any], *,
+               rules: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Apply every registered (or selected) rule to every bundle of the
+    matching kind; returns the concatenated findings."""
+    if rules is not None:
+        unknown = [r for r in rules if r not in CHECKS]
+        if unknown:
+            raise KeyError(
+                f"unknown rule(s) {unknown}; registered: "
+                f"{sorted(CHECKS)}")
+    findings: List[Finding] = []
+    for bundle in bundles:
+        is_source = getattr(bundle, "kind", None) == "source"
+        for check in CHECKS.values():
+            if rules is not None and check.rule not in rules:
+                continue
+            if (check.kind == "source") != is_source:
+                continue
+            findings.extend(check.fn(bundle))
+    return findings

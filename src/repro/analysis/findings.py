@@ -1,0 +1,49 @@
+"""Structured findings produced by the analysis rules."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+SEVERITIES = ("error", "warning")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation.
+
+    ``rule``      registered rule id (e.g. ``collective-budget``)
+    ``severity``  ``error`` (CI-failing) or ``warning``
+    ``bundle``    label of the audited trace/source bundle
+    ``location``  jaxpr path / ``file:line`` the violation anchors to
+    ``message``   human-readable statement of the violated invariant
+    """
+
+    rule: str
+    severity: str
+    bundle: str
+    location: str
+    message: str
+
+    def __post_init__(self):
+        if self.severity not in SEVERITIES:
+            raise ValueError(
+                f"severity must be one of {SEVERITIES}, "
+                f"got {self.severity!r}")
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def __str__(self) -> str:  # CLI/pytest-failure rendering
+        return (f"[{self.severity}] {self.rule} @ {self.bundle}"
+                f" ({self.location}): {self.message}")
+
+
+def render(findings, *, limit: Optional[int] = None) -> str:
+    """Multi-line report of findings (most severe first)."""
+    order = {s: i for i, s in enumerate(SEVERITIES)}
+    ranked = sorted(findings, key=lambda f: (order.get(f.severity, 9),
+                                             f.rule, f.bundle))
+    lines = [str(f) for f in (ranked if limit is None else ranked[:limit])]
+    if limit is not None and len(ranked) > limit:
+        lines.append(f"... and {len(ranked) - limit} more")
+    return "\n".join(lines)

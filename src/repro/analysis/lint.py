@@ -1,0 +1,249 @@
+"""AST source lint (the second half of the auditor; stdlib-only).
+
+Four rules over the ``src/repro`` tree:
+
+  env-read            trace-time ``os.environ``/``os.getenv`` access
+                      anywhere but the central ``utils/env.py`` accessor
+                      (scattered reads mean flags get resolved at
+                      different times relative to jit tracing)
+  set-axis-names      set-typed axis names (set iteration order follows
+                      PYTHONHASHSEED — collectives would change axis
+                      order between processes; ``_names()`` rejects them
+                      at runtime, the lint rejects them at review time)
+  pallas-body-discipline
+                      inside a ``kernels/`` pallas body (the function
+                      handed to ``pl.pallas_call``, plus module-local
+                      helpers it calls): no ``jax.random`` draws (streams
+                      are drawn ONCE outside and threaded in as rbits
+                      refs — the source-level twin of the
+                      ``prng-single-draw`` trace rule), no nested
+                      ``pallas_call``, no jit/vmap/grad, no float64.
+                      Plain ``jnp`` math is NOT flagged: inside Pallas it
+                      lowers to in-register VPU ops, which is the idiom
+                      the kernels are built on — the discipline worth
+                      machine-checking is what breaks one-pass/VMEM/
+                      bit-identity, not the namespace.
+  registry-bypass     direct ``Quantizer(...)`` construction outside the
+                      scheme registry (``core/api.py``) / the defining
+                      module — bypassing ``make_quantizer`` skips name
+                      parsing, level tables, and policy resolution
+
+Used by ``python -m repro.analysis`` and ``tests/test_analysis.py``
+through the same ``run_checks`` engine as the trace rules.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.engine import SourceBundle, SourceFile, register_check
+from repro.analysis.findings import Finding
+
+#: files allowed to touch os.environ (the accessor itself)
+ENV_ACCESSOR_FILES = ("repro/utils/env.py",)
+
+#: files allowed to construct Quantizer directly: the registry and the
+#: defining module
+REGISTRY_FILES = ("repro/core/api.py", "repro/core/quantizers.py")
+
+#: keyword names whose values must never be set-typed
+AXIS_KEYWORDS = ("axis_names", "axis_name", "intra_axes", "inter_axes",
+                 "axes")
+
+#: attribute chains forbidden inside a pallas kernel body
+KERNEL_FORBIDDEN_PREFIXES = (
+    ("jax", "random"),          # draw streams outside, thread rbits in
+    ("pl", "pallas_call"),      # no nested kernel launches
+    ("jax", "jit"), ("jax", "vmap"), ("jax", "grad"),
+    ("jax", "value_and_grad"), ("jax", "device_put"),
+)
+KERNEL_FORBIDDEN_DTYPES = ("float64",)
+
+
+def collect_sources(root: Optional[Path] = None,
+                    label: str = "src/repro") -> SourceBundle:
+    """Parse every ``.py`` under the ``repro`` package into a bundle.
+
+    ``root`` defaults to the installed package directory; paths in
+    findings are reported relative to its parent (``repro/...``)."""
+    pkg = Path(root) if root else Path(__file__).resolve().parents[1]
+    base = pkg.parent
+    files = []
+    for p in sorted(pkg.rglob("*.py")):
+        text = p.read_text()
+        files.append(SourceFile(path=str(p.relative_to(base)), text=text,
+                                tree=ast.parse(text, filename=str(p))))
+    return SourceBundle(label=label, files=tuple(files))
+
+
+def _dotted(node) -> Tuple[str, ...]:
+    """(`a`, `b`, `c`) for an ``a.b.c`` attribute chain, else ()."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return ()
+
+
+def _is_set_expr(node) -> bool:
+    if isinstance(node, ast.Set):
+        return True
+    return (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+            and node.func.id == "set")
+
+
+def _finding(rule: str, f: SourceFile, node, msg: str) -> Finding:
+    return Finding(rule=rule, severity="error", bundle="src/repro",
+                   location=f"{f.path}:{getattr(node, 'lineno', 0)}",
+                   message=msg)
+
+
+@register_check(
+    "env-read", kind="source",
+    protects="env flags resolve through ONE validated accessor with one "
+             "trace-time semantics")
+def env_read(bundle: SourceBundle) -> List[Finding]:
+    out: List[Finding] = []
+    for f in bundle.files:
+        if f.path in ENV_ACCESSOR_FILES:
+            continue
+        for node in ast.walk(f.tree):
+            chain = _dotted(node) if isinstance(node, ast.Attribute) else ()
+            # flag the exact ``os.environ`` attribute node (not every
+            # enclosing ``os.environ.get`` chain) — one finding per access
+            if chain == ("os", "environ"):
+                out.append(_finding(
+                    "env-read", f, node,
+                    "os.environ access outside repro.utils.env — use the "
+                    "central accessor (env_flag/force_host_device_count)"))
+            elif (isinstance(node, ast.Call)
+                  and _dotted(node.func)[:2] == ("os", "getenv")):
+                out.append(_finding(
+                    "env-read", f, node,
+                    "os.getenv outside repro.utils.env — use the central "
+                    "accessor"))
+    return out
+
+
+@register_check(
+    "set-axis-names", kind="source",
+    protects="collective axis order is deterministic (never "
+             "PYTHONHASHSEED-dependent set iteration)")
+def set_axis_names(bundle: SourceBundle) -> List[Finding]:
+    out: List[Finding] = []
+    for f in bundle.files:
+        for node in ast.walk(f.tree):
+            if isinstance(node, ast.Call):
+                # jax.shard_map's own ``axis_names`` parameter is
+                # set-typed BY its signature (manual-mode axis *membership*,
+                # no ordering semantics) — the hazard is sets flowing into
+                # repo collectives, where order defines the wire layout
+                if _dotted(node.func)[-1:] == ("shard_map",):
+                    continue
+                for kw in node.keywords:
+                    if kw.arg in AXIS_KEYWORDS and _is_set_expr(kw.value):
+                        out.append(_finding(
+                            "set-axis-names", f, kw.value,
+                            f"set-typed {kw.arg}= — axis names must be "
+                            f"an ordered tuple/list"))
+            elif isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    if (isinstance(tgt, ast.Name)
+                            and tgt.id.endswith(("axis_names", "axes"))
+                            and _is_set_expr(node.value)):
+                        out.append(_finding(
+                            "set-axis-names", f, node,
+                            f"set-typed axis container {tgt.id!r} — use "
+                            f"an ordered tuple/list"))
+    return out
+
+
+def _kernel_bodies(tree) -> Dict[str, ast.FunctionDef]:
+    """FunctionDefs reachable from a ``pl.pallas_call`` first argument in
+    this module, transitively through module-local helper calls."""
+    defs = {n.name: n for n in ast.walk(tree)
+            if isinstance(n, ast.FunctionDef)}
+    roots: Set[str] = set()
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and _dotted(node.func)[-1:] == ("pallas_call",)
+                and node.args):
+            continue
+        kern = node.args[0]
+        if (isinstance(kern, ast.Call)
+                and _dotted(kern.func)[-1:] == ("partial",) and kern.args):
+            kern = kern.args[0]
+        if isinstance(kern, ast.Name) and kern.id in defs:
+            roots.add(kern.id)
+    # transitive closure over module-local calls from kernel bodies
+    seen: Set[str] = set()
+    frontier = list(roots)
+    while frontier:
+        name = frontier.pop()
+        if name in seen:
+            continue
+        seen.add(name)
+        for node in ast.walk(defs[name]):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id in defs and node.func.id not in seen):
+                frontier.append(node.func.id)
+    return {n: defs[n] for n in seen}
+
+
+@register_check(
+    "pallas-body-discipline", kind="source",
+    protects="kernel bodies stay one-pass: no in-kernel PRNG draws "
+             "(bit-identity), no nested launches, no f64")
+def pallas_body_discipline(bundle: SourceBundle) -> List[Finding]:
+    out: List[Finding] = []
+    for f in bundle.files:
+        if not f.path.startswith("repro/kernels/"):
+            continue
+        for name, fn in sorted(_kernel_bodies(f.tree).items()):
+            for node in ast.walk(fn):
+                chain = _dotted(node) if isinstance(
+                    node, ast.Attribute) else ()
+                for bad in KERNEL_FORBIDDEN_PREFIXES:
+                    if chain[:len(bad)] == bad:
+                        out.append(_finding(
+                            "pallas-body-discipline", f, node,
+                            f"{'.'.join(chain)} inside pallas body "
+                            f"{name!r} — kernels receive rounding bits / "
+                            f"data as refs and never launch or draw"))
+                if chain and chain[-1] in KERNEL_FORBIDDEN_DTYPES:
+                    out.append(_finding(
+                        "pallas-body-discipline", f, node,
+                        f"float64 inside pallas body {name!r}"))
+                if (isinstance(node, ast.Constant)
+                        and node.value in KERNEL_FORBIDDEN_DTYPES):
+                    out.append(_finding(
+                        "pallas-body-discipline", f, node,
+                        f"float64 dtype string inside pallas body "
+                        f"{name!r}"))
+    return out
+
+
+@register_check(
+    "registry-bypass", kind="source",
+    protects="every scheme is constructed through the registry "
+             "(make_quantizer) — names, level tables, and policy "
+             "resolution stay consistent")
+def registry_bypass(bundle: SourceBundle) -> List[Finding]:
+    out: List[Finding] = []
+    for f in bundle.files:
+        if f.path in REGISTRY_FILES:
+            continue
+        for node in ast.walk(f.tree):
+            if (isinstance(node, ast.Call)
+                    and _dotted(node.func)[-1:] == ("Quantizer",)):
+                out.append(_finding(
+                    "registry-bypass", f, node,
+                    "direct Quantizer(...) construction — build schemes "
+                    "via repro.core.api.make_quantizer / "
+                    "QuantConfig.to_quantizer"))
+    return out

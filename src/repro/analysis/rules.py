@@ -1,0 +1,219 @@
+"""Trace-invariant rules (the jaxpr half of the auditor).
+
+Each rule reads the expectation keys it understands from
+``bundle.meta`` and returns ``[]`` when a bundle doesn't opt in — the
+``audit`` builders decide which invariants apply to which traced
+program. Expectations are EXACT where the repo's claims are exact
+(collective launch budgets, pallas-call counts, PRNG draw counts) and
+bounds where they are bounds (VMEM tile bytes, materialization,
+donation floor).
+
+Meta keys by rule:
+
+  collective-budget   "expected_collectives": {(prim, axes): count}
+                      "exclusive_prims": {prim: [axes, ...]} — prim may
+                      appear ONLY on the listed axis tuples
+  one-pallas-call     "expect_pallas_calls": int
+  vmem-tile-budget    "vmem_budget": bytes (default DEFAULT_VMEM_BUDGET)
+  no-materialization  "materialization": {"min_elems", "dtype",
+                      "max_count"}
+  donation            "expect_donated": int (minimum donated invars)
+  no-fp32-widening    "wire_min_elems": int (default 65536)
+  prng-single-draw    "prng": {"random_bits": int[, "fold_ins": int]}
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis import stats
+from repro.analysis.engine import TraceBundle, register_check
+from repro.analysis.findings import Finding
+from repro.analysis.pallas import pallas_call_stats
+from repro.analysis.traversal import aval_dtype, aval_elems, walk_eqns
+
+#: mirrors ``repro.kernels.fused_encode.VMEM_TILE_BYTES`` (tested equal)
+#: without importing jax into the rule layer
+DEFAULT_VMEM_BUDGET = 2 * 1024 * 1024
+
+#: arrays at least this large are "wire payload sized" for the widening
+#: rule when a bundle doesn't set its own threshold
+DEFAULT_WIRE_MIN_ELEMS = 1 << 16
+
+
+def _loc(path) -> str:
+    return "/".join(path) if path else "<top>"
+
+
+@register_check(
+    "collective-budget", kind="trace",
+    protects="O(1) quantized collectives per step; DCN-only quantized "
+             "traffic in two-level mode; 2K/4K launches at "
+             "pipeline_chunks=K")
+def collective_budget(bundle: TraceBundle) -> List[Finding]:
+    expected = bundle.meta.get("expected_collectives")
+    exclusive = bundle.meta.get("exclusive_prims", {})
+    if expected is None and not exclusive:
+        return []
+    counts = stats.collective_axis_counts(bundle.closed)
+    out: List[Finding] = []
+    for (prim, axes), want in (expected or {}).items():
+        got = stats.axis_collectives(counts, prim, axes)
+        if got != want:
+            out.append(Finding(
+                rule="collective-budget", severity="error",
+                bundle=bundle.label, location=f"{prim}[{axes}]",
+                message=f"expected exactly {want} {prim} launches on "
+                        f"axes {axes}, traced {got}"))
+    for prim, allowed in exclusive.items():
+        allowed = {tuple(a) for a in allowed}
+        for (p, ax), n in counts.items():
+            if p == prim and ax not in allowed:
+                out.append(Finding(
+                    rule="collective-budget", severity="error",
+                    bundle=bundle.label, location=f"{prim}[{ax}]",
+                    message=f"{n} {prim} launch(es) on non-budgeted axes "
+                            f"{ax} (allowed: {sorted(allowed)})"))
+    return out
+
+
+@register_check(
+    "one-pallas-call", kind="trace",
+    protects="each fused wire op is ONE kernel launch (one HBM pass)")
+def one_pallas_call(bundle: TraceBundle) -> List[Finding]:
+    want = bundle.meta.get("expect_pallas_calls")
+    if want is None:
+        return []
+    got = stats.pallas_call_count(bundle.closed)
+    if got == want:
+        return []
+    return [Finding(
+        rule="one-pallas-call", severity="error", bundle=bundle.label,
+        location="pallas_call",
+        message=f"expected exactly {want} pallas_call launch(es), "
+                f"traced {got}")]
+
+
+@register_check(
+    "vmem-tile-budget", kind="trace",
+    protects="every kernel's per-grid-step residency fits the VMEM tile "
+             "budget regardless of buffer size")
+def vmem_tile_budget(bundle: TraceBundle) -> List[Finding]:
+    budget = bundle.meta.get("vmem_budget", DEFAULT_VMEM_BUDGET)
+    out: List[Finding] = []
+    for st in pallas_call_stats(bundle.closed):
+        if st["vmem_bytes"] > budget:
+            out.append(Finding(
+                rule="vmem-tile-budget", severity="error",
+                bundle=bundle.label, location=str(st["kernel"]),
+                message=f"kernel {st['kernel']} holds "
+                        f"{st['vmem_bytes']} bytes per grid step "
+                        f"(> budget {budget}); grid={st['grid']}"))
+    return out
+
+
+@register_check(
+    "no-materialization", kind="trace",
+    protects="chunked/pipelined schedules never materialize extra "
+             "full-buffer f32 intermediates")
+def no_materialization(bundle: TraceBundle) -> List[Finding]:
+    spec = bundle.meta.get("materialization")
+    if spec is None:
+        return []
+    got = stats.sized_outvar_count(bundle.closed, spec["min_elems"],
+                                   spec.get("dtype"))
+    if got <= spec["max_count"]:
+        return []
+    return [Finding(
+        rule="no-materialization", severity="error", bundle=bundle.label,
+        location=f">={spec['min_elems']} elems",
+        message=f"{got} outvars of >= {spec['min_elems']} "
+                f"{spec.get('dtype', 'any')} elements (baseline allows "
+                f"{spec['max_count']}): a full-size buffer is being "
+                f"materialized")]
+
+
+@register_check(
+    "donation", kind="trace",
+    protects="the train state / KV pools are donated (updated in place, "
+             "no 2x-state HBM spike)")
+def donation(bundle: TraceBundle) -> List[Finding]:
+    want = bundle.meta.get("expect_donated")
+    if want is None:
+        return []
+    got = stats.donated_invar_count(bundle.closed)
+    if got >= want:
+        return []
+    return [Finding(
+        rule="donation", severity="error", bundle=bundle.label,
+        location="pjit.donated_invars",
+        message=f"only {got} donated invars on the top-level pjit "
+                f"(expected >= {want}): state buffers are being copied, "
+                f"not aliased")]
+
+
+@register_check(
+    "no-fp32-widening", kind="trace",
+    protects="packed wire payloads cross the network as uint words — "
+             "never widened to floats outside a kernel — and nothing "
+             "computes in f64")
+def no_fp32_widening(bundle: TraceBundle) -> List[Finding]:
+    min_elems = bundle.meta.get("wire_min_elems", DEFAULT_WIRE_MIN_ELEMS)
+    if min_elems is None:       # bundle explicitly opts out
+        return []
+    out: List[Finding] = []
+    for eqn, path in walk_eqns(bundle.closed):
+        if "pallas_call" in path:
+            continue        # in-VMEM dequant inside a kernel is the point
+        for v in eqn.outvars:
+            if aval_dtype(v) == "float64" and aval_elems(v) > 1:
+                out.append(Finding(
+                    rule="no-fp32-widening", severity="error",
+                    bundle=bundle.label, location=_loc(path),
+                    message=f"float64 intermediate of {aval_elems(v)} "
+                            f"elements under {_loc(path)}"))
+        if eqn.primitive.name != "convert_element_type":
+            continue
+        (iv,), (ov,) = eqn.invars, eqn.outvars
+        if (aval_dtype(iv).startswith("uint")
+                and aval_dtype(ov).startswith("float")
+                and aval_elems(iv) >= min_elems):
+            out.append(Finding(
+                rule="no-fp32-widening", severity="error",
+                bundle=bundle.label, location=_loc(path),
+                message=f"wire-sized {aval_dtype(iv)} payload "
+                        f"({aval_elems(iv)} elems) widened to "
+                        f"{aval_dtype(ov)} outside a kernel under "
+                        f"{_loc(path)}"))
+    return out
+
+
+@register_check(
+    "prng-single-draw", kind="trace",
+    protects="rounding streams are drawn once at full shape and sliced "
+             "(chunked/paged schedules stay bit-identical and ORQ stays "
+             "unbiased)")
+def prng_single_draw(bundle: TraceBundle) -> List[Finding]:
+    spec = bundle.meta.get("prng")
+    if spec is None:
+        return []
+    out: List[Finding] = []
+    got = stats.prng_draw_count(bundle.closed)
+    want = spec["random_bits"]
+    if got != want:
+        out.append(Finding(
+            rule="prng-single-draw", severity="error",
+            bundle=bundle.label, location="random_bits",
+            message=f"{got} rounding-stream draws traced, baseline "
+                    f"schedule draws {want}: a stream is being re-drawn "
+                    f"per chunk/page (breaks bit-identity and the "
+                    f"single-draw unbiasedness argument)"))
+    if "fold_ins" in spec:
+        gf = stats.prng_fold_count(bundle.closed)
+        if gf != spec["fold_ins"]:
+            out.append(Finding(
+                rule="prng-single-draw", severity="error",
+                bundle=bundle.label, location="random_fold_in",
+                message=f"{gf} key fold_ins traced, baseline has "
+                        f"{spec['fold_ins']}: the key schedule depends "
+                        f"on the chunking"))
+    return out

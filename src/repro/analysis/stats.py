@@ -1,0 +1,113 @@
+"""Counting queries over traced programs (all via the shared traversal).
+
+These are the primitives the invariant rules and the legacy
+``repro.utils.jaxpr`` helpers are built from: collective tallies by
+axis name, sized-outvar counts (full-buffer materialization), PRNG-draw
+counts, and pallas-call counts.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.analysis.traversal import aval_elems, walk_eqns
+
+COLLECTIVE_PRIMS = ("all_to_all", "all_gather", "psum_scatter",
+                    "reduce_scatter", "psum", "pmean", "ppermute")
+
+#: jaxpr-level PRNG primitives: ``random_bits`` materializes a rounding
+#: stream, ``random_fold_in`` derives a subkey (jax >= 0.4 key arrays
+#: and raw uint32 keys both trace to these)
+PRNG_DRAW_PRIMS = ("random_bits", "threefry2x32")
+PRNG_FOLD_PRIMS = ("random_fold_in",)
+
+
+def eqn_axes(eqn) -> Tuple:
+    """The axis-name tuple of a collective eqn (scalar names wrapped)."""
+    ax = eqn.params.get("axis_name", eqn.params.get("axes"))
+    return tuple(ax) if isinstance(ax, (tuple, list)) else (ax,)
+
+
+def collective_axis_counts(closed) -> Counter:
+    """Counter mapping ``(primitive_name, axis_names_tuple)`` -> count of
+    eqns, over the whole jaxpr including nested sub-jaxprs."""
+    counts: Counter = Counter()
+    for eqn, _path in walk_eqns(closed):
+        if eqn.primitive.name in COLLECTIVE_PRIMS:
+            counts[(eqn.primitive.name, eqn_axes(eqn))] += 1
+    return counts
+
+
+def axis_collectives(counts: Counter, prim: str,
+                     axes: Tuple[str, ...]) -> int:
+    """Total count of ``prim`` eqns whose axis tuple is exactly ``axes``."""
+    return sum(n for (p, ax), n in counts.items()
+               if p == prim and ax == tuple(axes))
+
+
+def sized_outvar_count(closed, min_elems: int, dtype=None) -> int:
+    """Count eqn OUTPUT variables (nested sub-jaxprs included) holding at
+    least ``min_elems`` elements, optionally restricted to ``dtype``."""
+    want = None if dtype is None else np.dtype(dtype)
+    count = 0
+    for eqn, _path in walk_eqns(closed):
+        for v in eqn.outvars:
+            aval = getattr(v, "aval", None)
+            if aval is None or not getattr(aval, "shape", None):
+                continue
+            if want is not None and aval.dtype != want:
+                continue
+            if aval_elems(v) >= min_elems:
+                count += 1
+    return count
+
+
+def prim_count(closed, names, *, exclude_under: Tuple[str, ...] = ()) -> int:
+    """Count eqns whose primitive is in ``names``, skipping eqns nested
+    under any primitive named in ``exclude_under``."""
+    if isinstance(names, str):
+        names = (names,)
+    n = 0
+    for eqn, path in walk_eqns(closed):
+        if eqn.primitive.name in names and not any(
+                p in exclude_under for p in path):
+            n += 1
+    return n
+
+
+def pallas_call_count(closed) -> int:
+    """Top-level-executed ``pallas_call`` eqns (never counts a kernel
+    nested inside another kernel's body twice)."""
+    return prim_count(closed, "pallas_call", exclude_under=("pallas_call",))
+
+
+def prng_draw_count(closed) -> int:
+    """Rounding-stream draws: ``random_bits``/``threefry2x32`` eqns
+    outside pallas bodies (kernels receive rbits as inputs, never draw)."""
+    return prim_count(closed, PRNG_DRAW_PRIMS,
+                      exclude_under=("pallas_call",))
+
+
+def prng_fold_count(closed) -> int:
+    return prim_count(closed, PRNG_FOLD_PRIMS,
+                      exclude_under=("pallas_call",))
+
+
+def donated_invar_count(closed) -> int:
+    """Donated inputs summed over TOP-LEVEL ``pjit`` eqns (tracing a
+    jitted function yields one outer pjit carrying ``donated_invars``)."""
+    total = 0
+    jaxpr = getattr(closed, "jaxpr", closed)
+    for eqn in jaxpr.eqns:
+        total += sum(bool(d)
+                     for d in eqn.params.get("donated_invars", ()))
+    return total
+
+
+def convert_eqns(closed):
+    """Yield ``(eqn, path)`` for every convert_element_type eqn."""
+    for eqn, path in walk_eqns(closed):
+        if eqn.primitive.name == "convert_element_type":
+            yield eqn, path

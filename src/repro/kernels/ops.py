@@ -11,24 +11,14 @@ op-by-op on repeat calls with the same static shapes.
 
 Environment overrides (both read at trace time — set them before the
 first jit of a step function; ``tests/test_fused_kernels.py`` pins the
-trace-time read):
-
-``REPRO_PALLAS_INTERPRET``
-    Overrides the backend autodetection for Pallas interpret mode in
-    either direction (default: interpret everywhere except on a real TPU
-    backend). ``1``/``true``/``yes``/``on`` forces interpret mode — e.g.
-    to debug kernel numerics ON a TPU — and ``0``/``false``/``no``/``off``
-    forces compiled kernels.
-
-``REPRO_USE_KERNELS``
-    ``0`` forces the pure-jnp reference oracle (``ref.py``) for EVERY op
-    regardless of the caller's ``use_kernels`` flag — the CI matrix runs
-    the whole tier-1 suite this way to enforce kernel/ref parity.
-    ``1``/unset keeps the caller's flag (kernels by default).
+trace-time read) resolve through the central accessor
+``repro.utils.env``: ``REPRO_PALLAS_INTERPRET`` (interpret-mode
+override; default backend autodetection) and ``REPRO_USE_KERNELS``
+(``0`` forces the pure-jnp reference oracle ``ref.py`` for every op —
+the CI parity matrix leg).
 """
 from __future__ import annotations
 
-import os
 from typing import Optional
 
 import jax
@@ -42,38 +32,8 @@ from repro.kernels import fused_encode as _fenc
 from repro.kernels import fused_kv as _fkv
 from repro.kernels import quant_rr as _quant
 from repro.kernels import ref as _ref
-
-_TRUE = ("1", "true", "yes", "on")
-_FALSE = ("0", "false", "no", "off")
-
-
-def _interpret() -> bool:
-    env = os.environ.get("REPRO_PALLAS_INTERPRET", "").strip().lower()
-    if env in _TRUE:
-        return True
-    if env in _FALSE:
-        return False
-    if env:
-        raise ValueError(
-            f"REPRO_PALLAS_INTERPRET={env!r}: expected one of "
-            f"{_TRUE + _FALSE} (or unset for backend autodetection)")
-    return jax.default_backend() != "tpu"
-
-
-def kernels_enabled() -> bool:
-    """The ``REPRO_USE_KERNELS`` env override: ``0`` forces the pure-jnp
-    reference oracle everywhere (the CI parity matrix leg); ``1``/unset
-    keeps each caller's ``use_kernels`` flag."""
-    env = os.environ.get("REPRO_USE_KERNELS", "").strip().lower()
-    if env in _TRUE:
-        return True
-    if env in _FALSE:
-        return False
-    if env:
-        raise ValueError(
-            f"REPRO_USE_KERNELS={env!r}: expected one of "
-            f"{_TRUE + _FALSE} (or unset to keep the caller's flag)")
-    return True
+from repro.utils.env import kernels_enabled  # noqa: F401  (public compat)
+from repro.utils.env import pallas_interpret as _interpret
 
 
 def _use(use_kernels: bool) -> bool:

@@ -9,14 +9,12 @@ Usage:
 # The VERY FIRST lines, before ANY other import (jax locks the device count
 # on first init). 512 placeholder host devices cover both the single-pod
 # (16x16) and multi-pod (2x16x16) production meshes.
-import os
+from repro.utils.env import force_host_device_count
 
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", ""))
-os.environ.setdefault("JAX_PLATFORMS", "cpu")
+force_host_device_count(512)
 
 import argparse
+import os
 import json
 import re
 import sys

@@ -28,6 +28,13 @@ import json
 import re
 from typing import Dict, List, Optional, Tuple
 
+from repro.analysis.pallas import _ARITH_PRIMS  # noqa: F401  (compat)
+from repro.analysis.pallas import _block_elems  # noqa: F401  (compat)
+from repro.analysis.pallas import (kernel_flops, pallas_call_stats,
+                                   pallas_eqn_stats)
+
+_kernel_flops = kernel_flops  # compat alias for pre-analysis callers
+
 _DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
                 "f8e5m2": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1,
                 "s64": 8, "s32": 4, "s16": 2, "s8": 1, "pred": 1,
@@ -200,125 +207,8 @@ def analyze(hlo: str) -> dict:
 
 
 # ---------------------------------------------------------------------------
-# Pallas-kernel cost extraction (jaxpr-based).
-#
-# The HLO parser above never sees the fused quantization kernels: in
-# interpret mode (this container) a pallas_call lowers to ordinary HLO ops
-# with no custom-call marker, so per-kernel footprints are invisible in the
-# HLO text. The jaxpr, however, carries every pallas_call eqn with its full
-# grid mapping — block shapes, array shapes, dtypes — which is exactly what
-# a VMEM/roofline report needs and is identical between interpret and
-# compiled lowering.
+# Pallas-kernel cost extraction (jaxpr-based) moved to
+# ``repro.analysis.pallas`` (shared with the ``vmem-tile-budget`` rule);
+# ``kernel_flops`` / ``pallas_eqn_stats`` / ``pallas_call_stats`` are
+# re-exported above for existing callers of this module.
 # ---------------------------------------------------------------------------
-
-#: elementwise / reduce primitives counted as one op per element for the
-#: arithmetic-intensity estimate (bit-twiddling in the pack stage included:
-#: on TPU those are real VPU lanes, not free address arithmetic)
-_ARITH_PRIMS = {
-    "add", "sub", "mul", "div", "rem", "max", "min", "neg", "abs", "sign",
-    "floor", "ceil", "round", "exp", "log", "sqrt", "rsqrt", "integer_pow",
-    "pow", "select_n", "and", "or", "xor", "not", "shift_left",
-    "shift_right_logical", "shift_right_arithmetic", "ge", "gt", "le", "lt",
-    "eq", "ne", "reduce_sum", "reduce_max", "reduce_min", "reduce_and",
-    "reduce_or", "argmax", "argmin", "cumsum", "dot_general",
-}
-
-
-def _aval_elems(v) -> int:
-    aval = getattr(v, "aval", None)
-    shape = getattr(aval, "shape", None)
-    if not shape:
-        return 1
-    n = 1
-    for d in shape:
-        n *= int(d)
-    return n
-
-
-def _block_elems(block_shape) -> int:
-    n = 1
-    for d in block_shape:
-        if d is None:               # squeezed / unblocked dim
-            continue
-        try:
-            n *= int(d)
-        except TypeError:           # BlockDim wrapper in newer jax
-            n *= int(getattr(d, "block_size", 1))
-    return n
-
-
-def _kernel_flops(jaxpr) -> float:
-    """Per-grid-step op estimate: one op per element of the widest operand
-    of every elementwise/reduce eqn, recursing into sub-jaxprs."""
-    flops = 0.0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name in _ARITH_PRIMS:
-            flops += max([_aval_elems(v) for v in
-                          list(eqn.invars) + list(eqn.outvars)] or [1])
-        for p in eqn.params.values():
-            vals = p if isinstance(p, (tuple, list)) else [p]
-            for v in vals:
-                sub = getattr(v, "jaxpr", v)
-                if hasattr(sub, "eqns"):
-                    flops += _kernel_flops(sub)
-    return flops
-
-
-def pallas_call_stats(closed) -> List[dict]:
-    """Per-``pallas_call`` VMEM footprint and arithmetic intensity.
-
-    ``closed`` is what ``jax.make_jaxpr(fn)(*args)`` returns. For every
-    pallas_call eqn (nested sub-jaxprs included) reports:
-
-      * ``kernel``       — kernel function name
-      * ``grid``         — grid tuple; ``grid_steps`` its product
-      * ``vmem_bytes``   — resident bytes per grid step: sum of
-                           block_shape x dtype over every operand/output
-                           BlockSpec (the quantity the kernels' row_block
-                           sizing holds under VMEM_TILE_BYTES)
-      * ``hbm_bytes``    — full operand + output array bytes (a one-pass
-                           kernel touches each exactly once)
-      * ``flops``        — elementwise-op estimate over the whole grid
-      * ``arithmetic_intensity`` — flops / hbm_bytes
-    """
-    out: List[dict] = []
-
-    def walk(jaxpr):
-        for eqn in jaxpr.eqns:
-            if eqn.primitive.name == "pallas_call":
-                gm = eqn.params["grid_mapping"]
-                grid = tuple(int(g) for g in gm.grid)
-                steps = 1
-                for g in grid:
-                    steps *= g
-                vmem = hbm = 0
-                for bm in gm.block_mappings:
-                    sds = bm.array_shape_dtype
-                    isz = sds.dtype.itemsize
-                    vmem += _block_elems(bm.block_shape) * isz
-                    full = 1
-                    for d in sds.shape:
-                        full *= int(d)
-                    hbm += full * isz
-                kj = eqn.params.get("jaxpr")
-                body = getattr(kj, "jaxpr", kj)
-                flops = (_kernel_flops(body) * steps
-                         if hasattr(body, "eqns") else 0.0)
-                nsi = eqn.params.get("name_and_src_info")
-                out.append({
-                    "kernel": getattr(nsi, "name", None) or str(nsi),
-                    "grid": grid, "grid_steps": steps,
-                    "vmem_bytes": vmem, "hbm_bytes": hbm, "flops": flops,
-                    "arithmetic_intensity":
-                        round(flops / hbm, 3) if hbm else 0.0,
-                })
-                continue        # kernel body already accounted above
-            for p in eqn.params.values():
-                vals = p if isinstance(p, (tuple, list)) else [p]
-                for v in vals:
-                    sub = getattr(v, "jaxpr", v)
-                    if hasattr(sub, "eqns"):
-                        walk(sub)
-
-    walk(closed.jaxpr)
-    return out

@@ -16,14 +16,12 @@ Variants (hypotheses are logged in EXPERIMENTS.md §Perf):
     capacity_1    MoE capacity factor 1.0 (drop more, compute less)
 """
 # Must precede any jax import (see dryrun.py).
-import os
+from repro.utils.env import force_host_device_count
 
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", ""))
-os.environ.setdefault("JAX_PLATFORMS", "cpu")
+force_host_device_count(512)
 
 import argparse
+import os
 import dataclasses
 import json
 import sys

@@ -46,7 +46,7 @@ import dataclasses
 import warnings
 import zlib
 from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -349,17 +349,31 @@ def init_state(model: LM, mesh, tcfg: TrainConfig, key) -> TrainState:
     return jax.jit(build, out_shardings=out_sh)(key)
 
 
-def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
-                    aparams=None):
-    """Returns (step_fn, plan). step_fn(state, batch, key) ->
-    (state, metrics); jit-compiled shard_map over the dp axes."""
-    lr_fn = lr_fn or constant_lr(0.1)
-    cfg = model.cfg
+class ExchangeEngines(NamedTuple):
+    """The exchange machinery one train step is built around. Produced
+    by :func:`exchange_engines` and consumed by both
+    :func:`make_train_step` and the ``repro.analysis`` auditor — the
+    collective-budget expectations are derived from these SAME objects,
+    so the accounting and the traced step cannot drift apart."""
+
+    pex: Any                        # PartitionedExchange (replicated path)
+    fex: Any                        # FsdpExchange | None (fused fsdp path)
+    plan: Any                       # ShardingPlan
+    policy: Any                     # resolved QuantPolicy
+    intra_axes: Tuple[str, ...]     # fast fp (ICI) axes; () = flat
+    inter_axes: Tuple[str, ...]     # quantized (DCN) axes
+    n_intra: int
+    fused_fsdp: bool
+
+
+def exchange_engines(model: LM, mesh, tcfg: TrainConfig,
+                     aparams=None) -> ExchangeEngines:
+    """Build the exchange engines exactly as :func:`make_train_step`
+    wires them (same policy resolution, hierarchy split, chunking)."""
     dp_axes = _dp_axes(mesh)
     if aparams is None:
         aparams = jax.eval_shape(model.init, jax.random.key(0))
     plan = plan_sharding(model, aparams, mesh)
-    optimizer = _make_optimizer(tcfg)
     policy = tcfg.resolved_policy()
     # hierarchy resolution: two_level splits the dp axes into fast intra
     # (ICI, full-precision mean) and slow inter (DCN, quantized Algorithm
@@ -367,7 +381,6 @@ def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
     # the engines behave exactly as before
     intra_axes, inter_axes, n_intra = _exchange_axes(tcfg, dp_axes, mesh,
                                                      plan)
-    two_level = bool(intra_axes)
     # partitioned fused engine: leaves grouped by resolved quantizer into
     # contiguous segments, one fused exchange per policy group (a uniform
     # policy degenerates to the single-group engine, bit-identical to the
@@ -385,7 +398,7 @@ def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
     # stream riding the residual-buffer cotangent — O(#groups) gradient
     # collectives per step (see core/comm/fsdp_exchange.py)
     fused_fsdp = _fused_fsdp_active(tcfg, plan)
-    fex = tree_gather = None
+    fex = None
     if fused_fsdp:
         fex = comm.FsdpExchange.build(
             policy, aparams, dp_axes, paths=plan.paths,
@@ -394,6 +407,29 @@ def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
             max_chunk_elems=tcfg.exchange_chunk_elems,
             intra_axes=intra_axes, n_intra=n_intra,
             pipeline_chunks=tcfg.pipeline_chunks)
+    return ExchangeEngines(pex=pex, fex=fex, plan=plan, policy=policy,
+                           intra_axes=intra_axes, inter_axes=inter_axes,
+                           n_intra=n_intra, fused_fsdp=fused_fsdp)
+
+
+def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
+                    aparams=None):
+    """Returns (step_fn, plan). step_fn(state, batch, key) ->
+    (state, metrics); jit-compiled shard_map over the dp axes."""
+    lr_fn = lr_fn or constant_lr(0.1)
+    cfg = model.cfg
+    dp_axes = _dp_axes(mesh)
+    if aparams is None:
+        aparams = jax.eval_shape(model.init, jax.random.key(0))
+    eng = exchange_engines(model, mesh, tcfg, aparams=aparams)
+    plan, policy = eng.plan, eng.policy
+    optimizer = _make_optimizer(tcfg)
+    intra_axes, inter_axes, n_intra = (eng.intra_axes, eng.inter_axes,
+                                       eng.n_intra)
+    two_level = bool(intra_axes)
+    pex, fex, fused_fsdp = eng.pex, eng.fex, eng.fused_fsdp
+    tree_gather = None
+    if fused_fsdp:
         if fex.layout.size > 1_000_000_000:
             # the fused path holds the whole gathered bf16 tree + full
             # f32 cotangent buffers per device during the step, vs the

@@ -1,93 +1,18 @@
-"""Jaxpr introspection helpers.
+"""Jaxpr introspection helpers (compat shim).
 
-``collective_axis_counts`` walks a (closed) jaxpr — recursing into pjit /
-shard_map / scan / custom-vjp sub-jaxprs — and tallies collective
-primitives BY AXIS NAME. The hierarchical-exchange tests and benchmarks
-use it to prove the quantized all_to_all/all_gather run only over the
-inter-pod axis while the intra-pod axis carries full-precision
-reduce_scatter/all_gather: string-matching on jaxpr pretty-printing is
-brittle across jax versions, the eqn walk is not.
+``collective_axis_counts`` tallies collective primitives BY AXIS NAME
+over a whole (closed) jaxpr; ``sized_outvar_count`` pins "no extra
+full-buffer materialization". Both now live in
+``repro.analysis.stats`` on top of the ONE shared sub-jaxpr traversal
+(``repro.analysis.traversal``) that also backs ``launch/hlo_cost.py``
+and the ``repro.analysis`` invariant rules — this module re-exports
+them for the existing tests/benchmarks import path.
 """
 from __future__ import annotations
 
-from collections import Counter
-from typing import Tuple
+from repro.analysis.stats import (COLLECTIVE_PRIMS, axis_collectives,
+                                  collective_axis_counts, eqn_axes,
+                                  sized_outvar_count)
 
-COLLECTIVE_PRIMS = ("all_to_all", "all_gather", "psum_scatter",
-                    "reduce_scatter", "psum", "pmean", "ppermute")
-
-
-def _sub_jaxprs(v):
-    if hasattr(v, "jaxpr") and hasattr(getattr(v, "jaxpr"), "eqns"):
-        return [v.jaxpr]                      # ClosedJaxpr
-    if hasattr(v, "eqns"):
-        return [v]                            # raw Jaxpr
-    if isinstance(v, (tuple, list)):
-        out = []
-        for u in v:
-            out.extend(_sub_jaxprs(u))
-        return out
-    return []
-
-
-def collective_axis_counts(closed) -> Counter:
-    """Counter mapping ``(primitive_name, axis_names_tuple)`` -> count of
-    eqns, over the whole jaxpr including nested sub-jaxprs. ``closed`` is
-    what ``jax.make_jaxpr(fn)(*args)`` returns."""
-    counts: Counter = Counter()
-
-    def walk(jaxpr):
-        for eqn in jaxpr.eqns:
-            if eqn.primitive.name in COLLECTIVE_PRIMS:
-                ax = eqn.params.get("axis_name",
-                                    eqn.params.get("axes"))
-                if isinstance(ax, (tuple, list)):
-                    ax = tuple(ax)
-                else:
-                    ax = (ax,)
-                counts[(eqn.primitive.name, ax)] += 1
-            for v in eqn.params.values():
-                for sub in _sub_jaxprs(v):
-                    walk(sub)
-
-    walk(closed.jaxpr)
-    return counts
-
-
-def axis_collectives(counts: Counter, prim: str,
-                     axes: Tuple[str, ...]) -> int:
-    """Total count of ``prim`` eqns whose axis tuple is exactly ``axes``."""
-    return sum(n for (p, ax), n in counts.items()
-               if p == prim and ax == tuple(axes))
-
-
-def sized_outvar_count(closed, min_elems: int, dtype=None) -> int:
-    """Count eqn OUTPUT variables (including nested sub-jaxprs) holding at
-    least ``min_elems`` elements, optionally restricted to ``dtype``.
-
-    The pipelined-exchange tests pin "no extra full-buffer
-    materialization" with this: splitting the exchange into K chunks must
-    not introduce additional full-buffer-sized f32 intermediates beyond
-    what the single-shot schedule already writes."""
-    count = 0
-
-    def walk(jaxpr):
-        nonlocal count
-        for eqn in jaxpr.eqns:
-            for v in eqn.outvars:
-                aval = getattr(v, "aval", None)
-                if aval is None or not getattr(aval, "shape", None):
-                    continue
-                if dtype is not None and aval.dtype != dtype:
-                    continue
-                size = 1
-                for d in aval.shape:
-                    size *= int(d)
-                if size >= min_elems:
-                    count += 1
-            for p in eqn.params.values():
-                for sub in _sub_jaxprs(p):
-                    walk(sub)
-
-    walk(closed.jaxpr)
-    return count
+__all__ = ["COLLECTIVE_PRIMS", "axis_collectives",
+           "collective_axis_counts", "eqn_axes", "sized_outvar_count"]

@@ -1,0 +1,256 @@
+"""Tests for the trace auditor (``repro.analysis``).
+
+Covers: one true positive per registered rule (the seeded-violation
+corpus), zero lint findings on the real tree, lint exemptions, the
+shared sub-jaxpr traversal (custom_vjp fwd / while bodies), engine
+registry semantics, the committed ``benchmarks/ANALYSIS.json``
+coverage snapshot, and the ``python -m repro.analysis`` CLI contract
+(``--check`` exit codes, ``--inject-violation``, ``--selftest``).
+"""
+import ast
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import CHECKS, SourceBundle, TraceBundle, run_checks
+from repro.analysis import register_check
+from repro.analysis import lint, rules
+from repro.analysis.engine import SourceFile
+from repro.analysis.selftest import seeded_bundle, run_selftest
+from repro.analysis.traversal import walk_eqns
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def _src(path: str, text: str) -> SourceBundle:
+    return SourceBundle(label="test", files=(
+        SourceFile(path=path, text=text,
+                   tree=ast.parse(text, filename=path)),))
+
+
+# ---------------------------------------------------------------- rules
+
+
+class TestTruePositives:
+    """Every registered rule must fire on its seeded violation —
+    the same corpus ``--selftest`` runs in CI."""
+
+    @pytest.mark.parametrize("rule", sorted(CHECKS))
+    def test_rule_fires_on_seed(self, rule):
+        findings = run_checks([seeded_bundle(rule)], rules=[rule])
+        assert findings, f"rule {rule!r} silent on its seeded violation"
+        assert all(f.rule == rule for f in findings)
+        for f in findings:
+            d = f.to_dict()
+            assert d["rule"] == rule and d["message"]
+
+    def test_run_selftest_covers_every_rule(self):
+        res = run_selftest()
+        assert set(res) == set(CHECKS)
+        assert all(res[r] for r in res)
+
+    def test_seeded_bundle_unknown_rule(self):
+        with pytest.raises(KeyError):
+            seeded_bundle("no-such-rule")
+
+
+class TestEngine:
+    def test_registry_has_trace_and_source_rules(self):
+        kinds = {c.kind for c in CHECKS.values()}
+        assert kinds == {"trace", "source"}
+        assert all(c.protects for c in CHECKS.values())
+
+    def test_duplicate_rule_id_raises(self):
+        existing = next(iter(CHECKS))
+        with pytest.raises(ValueError, match="duplicate"):
+            register_check(existing, kind="trace")(lambda b: [])
+
+    def test_bad_kind_raises(self):
+        with pytest.raises(ValueError, match="kind"):
+            register_check("x", kind="hlo")
+
+    def test_unknown_rule_selection_raises(self):
+        with pytest.raises(KeyError, match="no-such-rule"):
+            run_checks([], rules=["no-such-rule"])
+
+    def test_source_rules_skip_trace_bundles(self):
+        import jax
+        import jax.numpy as jnp
+
+        closed = jax.make_jaxpr(lambda x: x + 1.0)(jnp.ones(4))
+        bundle = TraceBundle(label="t", kind="wire_op", closed=closed)
+        src_rules = [r for r, c in CHECKS.items() if c.kind == "source"]
+        assert run_checks([bundle], rules=src_rules) == []
+
+    def test_vmem_budget_matches_kernel_constant(self):
+        from repro.kernels import fused_encode
+
+        assert rules.DEFAULT_VMEM_BUDGET == fused_encode.VMEM_TILE_BYTES
+
+
+# ----------------------------------------------------------------- lint
+
+
+class TestLint:
+    def test_real_tree_is_clean(self):
+        findings = run_checks([lint.collect_sources()])
+        assert findings == [], "\n".join(str(f) for f in findings)
+
+    def test_env_accessor_file_is_exempt(self):
+        text = "import os\nFLAG = os.environ.get('REPRO_USE_KERNELS')\n"
+        assert run_checks([_src("repro/utils/env.py", text)],
+                          rules=["env-read"]) == []
+        hits = run_checks([_src("repro/train/step.py", text)],
+                          rules=["env-read"])
+        assert len(hits) == 1 and "repro.utils.env" in hits[0].message
+
+    def test_set_axis_names_allows_tuples(self):
+        ok = "def f(r, x):\n    return r(x, axis_names=('pod', 'data'))\n"
+        bad = "def f(r, x):\n    return r(x, axis_names={'pod', 'data'})\n"
+        assert run_checks([_src("repro/core/comm/a.py", ok)],
+                          rules=["set-axis-names"]) == []
+        assert run_checks([_src("repro/core/comm/a.py", bad)],
+                          rules=["set-axis-names"])
+
+    def test_pallas_body_allows_plain_jnp(self):
+        text = (
+            "import jax.numpy as jnp\n"
+            "from jax.experimental import pallas as pl\n"
+            "\n"
+            "def _kernel(x_ref, o_ref):\n"
+            "    o_ref[...] = jnp.maximum(x_ref[...], 0.0)\n"
+            "\n"
+            "def op(x):\n"
+            "    return pl.pallas_call(_kernel, out_shape=x)(x)\n")
+        assert run_checks([_src("repro/kernels/relu.py", text)],
+                          rules=["pallas-body-discipline"]) == []
+
+    def test_registry_bypass_exempts_registry(self):
+        text = ("from repro.core.quantizers import Quantizer\n"
+                "q = Quantizer(bucket_size=8, method='orq', num_levels=9)\n")
+        assert run_checks([_src("repro/core/api.py", text)],
+                          rules=["registry-bypass"]) == []
+        assert run_checks([_src("repro/launch/perf.py", text)],
+                          rules=["registry-bypass"])
+
+
+# ------------------------------------------------------------ traversal
+
+
+class TestTraversal:
+    def test_custom_vjp_fwd_body_is_opt_in(self):
+        import jax
+        import jax.numpy as jnp
+
+        @jax.custom_vjp
+        def f(x):
+            return x * 2.0
+
+        def fwd(x):
+            return x * 2.0, jnp.sin(x)   # sin lives ONLY in the fwd rule
+
+        def bwd(res, g):
+            return (g * res,)
+
+        f.defvjp(fwd, bwd)
+        closed = jax.make_jaxpr(f)(jnp.ones(4))
+
+        def prims(**kw):
+            return [e.primitive.name for e, _ in walk_eqns(closed, **kw)]
+
+        assert "sin" not in prims()
+        assert "sin" in prims(include_custom_vjp_fwd=True)
+
+    def test_while_body_is_reachable(self):
+        import jax
+        import jax.numpy as jnp
+        from jax import lax
+
+        def f(x):
+            return lax.while_loop(lambda c: c[0] < 3,
+                                  lambda c: (c[0] + 1, jnp.sin(c[1])),
+                                  (0, x))
+
+        closed = jax.make_jaxpr(f)(jnp.ones(4))
+        hits = [(e, path) for e, path in walk_eqns(closed)
+                if e.primitive.name == "sin"]
+        assert hits and "while" in hits[0][1]
+
+
+# ----------------------------------------------------- coverage snapshot
+
+
+class TestAnalysisSnapshot:
+    def test_committed_snapshot_matches_registry(self):
+        snap = json.loads((ROOT / "benchmarks/ANALYSIS.json").read_text())
+        assert snap["schema"] == 1
+        assert snap["n_findings"] == 0
+        assert snap["selftest_ok"] is True
+        assert snap["n_bundles"] >= 60
+        assert {r["rule"] for r in snap["rules"]} == set(CHECKS), (
+            "benchmarks/ANALYSIS.json is stale — regenerate with "
+            "PYTHONPATH=src:. python benchmarks/analysis.py "
+            "--update-baseline")
+
+    def test_coverage_gate_flags_regressions(self):
+        from benchmarks.analysis import check
+
+        base = {"schema": 1, "n_findings": 0, "n_bundles": 66,
+                "selftest_ok": True,
+                "rules": [{"rule": r} for r in CHECKS]}
+        assert check(dict(base), base) == []
+        worse = dict(base, n_findings=2, n_bundles=10,
+                     rules=[{"rule": "collective-budget"}],
+                     selftest_ok=False)
+        fails = check(worse, base)
+        assert len(fails) == 4  # findings, selftest, lost rules, shrink
+
+
+# -------------------------------------------------------------- the CLI
+
+
+def _cli(*argv, timeout=600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *argv],
+        cwd=ROOT, env=env, capture_output=True, text=True, timeout=timeout)
+
+
+class TestCli:
+    def test_list_rules(self):
+        r = _cli("--list-rules")
+        assert r.returncode == 0
+        for rule in CHECKS:
+            assert rule in r.stdout
+
+    def test_check_lint_and_wire_clean(self):
+        r = _cli("--check", "--no-train", "--no-serve")
+        assert r.returncode == 0, r.stdout + r.stderr
+        assert "0 findings" in r.stdout
+
+    def test_inject_violation_fails_check(self):
+        r = _cli("--check", "--no-wire", "--no-train", "--no-serve",
+                 "--no-lint", "--inject-violation", "donation")
+        assert r.returncode == 1, r.stdout + r.stderr
+        assert "donation" in r.stdout
+
+    def test_selftest_passes(self):
+        r = _cli("--selftest")
+        assert r.returncode == 0, r.stdout + r.stderr
+
+    @pytest.mark.slow
+    def test_full_matrix_check_and_json(self, tmp_path):
+        out = tmp_path / "report.json"
+        r = _cli("--check", "--json", str(out))
+        assert r.returncode == 0, r.stdout + r.stderr
+        rep = json.loads(out.read_text())
+        assert rep["schema"] == 1 and rep["n_findings"] == 0
+        labels = {b["label"] for b in rep["bundles"]}
+        assert any(l.startswith("train/fsdp/two_level") for l in labels)
+        assert any(l.startswith("serve/") for l in labels)

@@ -320,15 +320,19 @@ def test_single_device_mesh_fused_matches_local_qdq():
 @pytest.mark.slow
 def test_train_step_collective_count_o1():
     """Acceptance: the replicated-mode train step issues O(1) quantized
-    collectives per step when fused (not O(num_leaves)), verified by
-    counting all_to_all/all_gather eqns in the traced jaxpr."""
+    collectives per step when fused (not O(num_leaves)). The fused leg is
+    enforced through the SAME collective-budget rule the CI matrix audit
+    runs, with expectations derived from the step's own exchange
+    engines; the per-leaf leg shows the contrast."""
+    from repro.analysis import TraceBundle, run_checks, stats
+    from repro.analysis.audit import expected_train_collectives
     from repro.configs.base import get_smoke_config
     from repro.core import QuantConfig
     from repro.data import SyntheticLM
     from repro.models import LM
     from repro.optim.schedule import constant_lr
     from repro.train import TrainConfig, make_train_step
-    from repro.train.step import init_state
+    from repro.train.step import exchange_engines, init_state
 
     cfg = get_smoke_config("lm-100m")
     model = LM(cfg)
@@ -339,23 +343,32 @@ def test_train_step_collective_count_o1():
         jax.eval_shape(model.init, jax.random.key(0))))
     assert n_leaves >= 10
 
-    counts = {}
+    closed = {}
     for fused in (True, False):
         tcfg = TrainConfig(quant=QuantConfig(name="orq-9", bucket_size=512),
                            mode="replicated", fused_exchange=fused)
         state = init_state(model, mesh, tcfg, jax.random.key(0))
         step_fn, _ = make_train_step(model, mesh, tcfg, constant_lr(0.05))
-        jx = str(jax.make_jaxpr(step_fn)(state, data.batch(0),
-                                         jax.random.key(1)))
-        # count eqns: "all_gather[" avoids the all_gather_dimension param
-        counts[fused] = (jx.count("all_to_all["), jx.count("all_gather["))
+        closed[fused] = jax.make_jaxpr(step_fn)(state, data.batch(0),
+                                                jax.random.key(1))
 
-    a2a_fused, ag_fused = counts[True]
-    a2a_leaf, ag_leaf = counts[False]
     # fused: exactly one payload + one level-table all_to_all (phase 1)
     # and two all_gathers (phase 2 re-quant), whatever the leaf count
-    assert a2a_fused == 2, counts
-    assert ag_fused == 2, counts
+    tcfg = TrainConfig(quant=QuantConfig(name="orq-9", bucket_size=512),
+                       mode="replicated", fused_exchange=True)
+    meta = expected_train_collectives(
+        exchange_engines(model, mesh, tcfg), mesh, tcfg.pipeline_chunks)
+    assert meta["expected_collectives"][("all_to_all", ("data",))] == 2, meta
+    assert meta["expected_collectives"][("all_gather", ("data",))] == 2, meta
+    fs = run_checks(
+        [TraceBundle(label="fused-o1", kind="train_step",
+                     closed=closed[True], meta=meta)],
+        rules=["collective-budget"])
+    assert not fs, [str(f) for f in fs]
+
     # per-leaf: one exchange per leaf
-    assert a2a_leaf == 2 * n_leaves, (counts, n_leaves)
-    assert ag_leaf == 2 * n_leaves, (counts, n_leaves)
+    leaf = stats.collective_axis_counts(closed[False])
+    assert stats.axis_collectives(
+        leaf, "all_to_all", ("data",)) == 2 * n_leaves, (leaf, n_leaves)
+    assert stats.axis_collectives(
+        leaf, "all_gather", ("data",)) == 2 * n_leaves, (leaf, n_leaves)

@@ -54,8 +54,22 @@ def _buffers(nb, d, valid=None, seed=1):
     return bkt, mask
 
 
-def _pallas_calls(jaxpr_str: str) -> int:
-    return jaxpr_str.count("pallas_call")
+def _pallas_calls(closed) -> int:
+    from repro.analysis import stats
+
+    return stats.pallas_call_count(closed)
+
+
+def _expect_pallas(closed, want: int) -> None:
+    """Pin the launch count through the SAME rule the CI matrix audit
+    runs (``python -m repro.analysis --check``)."""
+    from repro.analysis import TraceBundle, run_checks
+
+    fs = run_checks(
+        [TraceBundle(label="pin", kind="wire_op", closed=closed,
+                     meta={"expect_pallas_calls": want})],
+        rules=["one-pallas-call"])
+    assert not fs, [str(f) for f in fs]
 
 
 class TestEncodeParity:
@@ -159,43 +173,43 @@ class TestJaxprOnePallasCall:
 
     def _encode_jaxpr(self, qz, use_kernels):
         bkt, mask = _buffers(5, 37)
-        return str(jax.make_jaxpr(
+        return jax.make_jaxpr(
             lambda b, m, k: wire.encode(qz, b, m, k,
-                                        use_kernels=use_kernels))
-            (bkt, mask, KEY))
+                                        use_kernels=use_kernels))(
+            bkt, mask, KEY)
 
     @pytest.mark.parametrize("name", ["orq-9", "terngrad-clip", "bingrad-b",
                                       "signsgd"])
     def test_encode_single_pallas_call(self, name):
-        assert _pallas_calls(self._encode_jaxpr(_qz(name, 37), True)) == 1
+        _expect_pallas(self._encode_jaxpr(_qz(name, 37), True), 1)
 
     def test_encode_ref_has_none(self):
-        assert _pallas_calls(self._encode_jaxpr(_qz("orq-9", 37), False)) == 0
+        _expect_pallas(self._encode_jaxpr(_qz("orq-9", 37), False), 0)
 
     def test_encode_multipass_has_more(self):
         qz = _qz("orq-9", 37)
         bkt, mask = _buffers(5, 37)
-        jx = str(jax.make_jaxpr(
-            lambda b, m, k: wire.encode_multipass(qz, b, m, k))
-            (bkt, mask, KEY))
-        assert _pallas_calls(jx) >= 2
+        closed = jax.make_jaxpr(
+            lambda b, m, k: wire.encode_multipass(qz, b, m, k))(
+            bkt, mask, KEY)
+        assert _pallas_calls(closed) >= 2
 
     @pytest.mark.parametrize("average", [True, False])
     def test_decode_single_pallas_call(self, average):
         qz = _qz("orq-9", 37)
         ws = jnp.zeros((3, 5, 10), jnp.uint32)
         lvs = jnp.zeros((3, 5, 9))
-        jx = str(jax.make_jaxpr(
-            lambda w, l: wire.decode(qz, w, l, 37, average=average))
-            (ws, lvs))
-        assert _pallas_calls(jx) == 1
+        closed = jax.make_jaxpr(
+            lambda w, l: wire.decode(qz, w, l, 37, average=average))(
+            ws, lvs)
+        _expect_pallas(closed, 1)
 
     def test_qdq_single_pallas_call(self):
         qz = _qz("orq-9", 37)
         bkt, mask = _buffers(5, 37)
-        jx = str(jax.make_jaxpr(
-            lambda b, m, k: wire.qdq(qz, b, m, k))(bkt, mask, KEY))
-        assert _pallas_calls(jx) == 1
+        closed = jax.make_jaxpr(
+            lambda b, m, k: wire.qdq(qz, b, m, k))(bkt, mask, KEY)
+        _expect_pallas(closed, 1)
 
 
 class TestUseKernelsEnv:
@@ -227,7 +241,7 @@ class TestUseKernelsEnv:
         def trace():
             fn = lambda b, m, k: wire.encode(  # noqa: E731 — fresh each time
                 qz, b, m, k, use_kernels=True)
-            return _pallas_calls(str(jax.make_jaxpr(fn)(bkt, mask, KEY)))
+            return _pallas_calls(jax.make_jaxpr(fn)(bkt, mask, KEY))
 
         monkeypatch.setenv("REPRO_USE_KERNELS", "0")
         assert trace() == 0

@@ -193,34 +193,45 @@ class TestJaxprPins:
         # them vacuous/false
         monkeypatch.setenv("REPRO_USE_KERNELS", "1")
 
+    @staticmethod
+    def _expect_pallas(closed, want: int) -> None:
+        # the same rule the CI matrix audit runs (python -m repro.analysis)
+        from repro.analysis import TraceBundle, run_checks
+
+        fs = run_checks(
+            [TraceBundle(label="pin", kind="serve_fwd", closed=closed,
+                         meta={"expect_pallas_calls": want})],
+            rules=["one-pallas-call"])
+        assert not fs, [str(f) for f in fs]
+
     @pytest.mark.parametrize("name", sorted(SCHEMES))
     def test_append_single_pallas_call(self, name):
         qz = _qz(name)
         rb = _rbits(qz, 8)
-        jx = str(jax.make_jaxpr(
+        closed = jax.make_jaxpr(
             lambda k, v: append_kv(qz, k, v, rb))(
-                jnp.zeros((4, D)), jnp.zeros((4, D))))
-        assert jx.count("pallas_call") == 1
+                jnp.zeros((4, D)), jnp.zeros((4, D)))
+        self._expect_pallas(closed, 1)
 
     def test_attend_single_pallas_call(self):
         B, T, C, H = 2, 1, 8, 4
         qz, (kw, klv, vw, vlv) = _context("orq-9", B, C)
         mask = _fill_mask([8, 4], T, C)
-        jx = str(jax.make_jaxpr(
+        closed = jax.make_jaxpr(
             lambda q: decode_attend(q, kw, klv, vw, vlv, mask,
                                     bits=qz.wire_bits_per_element,
                                     kv_heads=KV, scale=0.25))(
-                jnp.zeros((B, T, H, HD))))
-        assert jx.count("pallas_call") == 1
+                jnp.zeros((B, T, H, HD)))
+        self._expect_pallas(closed, 1)
 
     def test_env_override_forces_oracle(self, monkeypatch):
         monkeypatch.setenv("REPRO_USE_KERNELS", "0")
         B, T, C, H = 2, 1, 8, 4
         qz, (kw, klv, vw, vlv) = _context("orq-9", B, C)
         mask = _fill_mask([8, 4], T, C)
-        jx = str(jax.make_jaxpr(
+        closed = jax.make_jaxpr(
             lambda q: ops.decode_attend(q, kw, klv, vw, vlv, mask,
                                         bits=qz.wire_bits_per_element,
                                         kv_heads=KV, scale=0.25))(
-                jnp.zeros((B, T, H, HD))))
-        assert jx.count("pallas_call") == 0
+                jnp.zeros((B, T, H, HD)))
+        self._expect_pallas(closed, 0)

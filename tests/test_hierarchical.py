@@ -323,12 +323,14 @@ def test_two_level_traced_collectives_pod_only():
     data axis carries one fp reduce_scatter (+ one fp all_gather in
     replicated mode), counted by walking the jaxpr eqns."""
     run_devices(COMMON + """
+from repro.analysis import TraceBundle, run_checks
+from repro.analysis.audit import expected_train_collectives
 from repro.configs.base import get_smoke_config
 from repro.data import SyntheticLM
 from repro.models import LM
 from repro.optim.schedule import constant_lr
 from repro.train import TrainConfig, make_train_step
-from repro.train.step import init_state
+from repro.train.step import exchange_engines, init_state
 
 cfg = get_smoke_config("lm-100m")
 model = LM(cfg)
@@ -336,37 +338,42 @@ mesh = jax.make_mesh((2, 4), ("pod", "data"))
 data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=16, batch_size=8,
                    seed=0)
 
-def counts(mode, hier):
+def bundle(mode, hier):
     tcfg = TrainConfig(policy="orq-9", mode=mode, hierarchy=hier)
     state = init_state(model, mesh, tcfg, jax.random.key(0))
     step_fn, _ = make_train_step(model, mesh, tcfg, constant_lr(0.05))
     closed = jax.make_jaxpr(step_fn)(state, data.batch(0),
                                      jax.random.key(1))
-    return collective_axis_counts(closed)
+    meta = expected_train_collectives(
+        exchange_engines(model, mesh, tcfg), mesh, tcfg.pipeline_chunks)
+    return TraceBundle(label=f"{mode}/{hier}", kind="train_step",
+                       closed=closed, meta=meta), meta
 
-c = counts("replicated", "two_level")
-# uniform policy = 1 group: 2 quantized a2a + 2 requant ag, pod ONLY
-assert axis_collectives(c, "all_to_all", ("pod",)) == 2, c
-assert axis_collectives(c, "all_gather", ("pod",)) == 2, c
-assert axis_collectives(c, "all_to_all", ("pod", "data")) == 0, c
-assert axis_collectives(c, "all_to_all", ("data",)) == 0, c
-# the data axis carries the fp scatter + reassembly gather
-assert (axis_collectives(c, "reduce_scatter", ("data",))
-        + axis_collectives(c, "psum_scatter", ("data",))) == 1, c
-assert axis_collectives(c, "all_gather", ("data",)) == 1, c
+# the engine-derived budgets must SAY what the paper claims before the
+# rule checks the trace against them: quantized a2a/ag on pod only, the
+# fp scatter/gather bracket on data only, 1 combined-axis fsdp broadcast
+b2, m2 = bundle("replicated", "two_level")
+exp = m2["expected_collectives"]
+assert exp[("all_to_all", ("pod",))] == 2, exp
+assert exp[("all_gather", ("pod",))] == 2, exp
+assert exp[("reduce_scatter", ("data",))] == 1, exp
+assert exp[("all_gather", ("data",))] == 1, exp
+assert m2["exclusive_prims"]["all_to_all"] == [("pod",)], m2
 
-cf = counts("replicated", "flat")
-assert axis_collectives(cf, "all_to_all", ("pod", "data")) == 2, cf
-assert axis_collectives(cf, "all_to_all", ("pod",)) == 0, cf
+bf, mf = bundle("replicated", "flat")
+assert mf["expected_collectives"][("all_to_all", ("pod", "data"))] == 2, mf
 
-cs = counts("fsdp", "two_level")
-assert axis_collectives(cs, "all_to_all", ("pod",)) == 2, cs
-assert axis_collectives(cs, "all_to_all", ("pod", "data")) == 0, cs
-assert axis_collectives(cs, "all_to_all", ("data",)) == 0, cs
-# forward param broadcast stays a combined-axis all_gather
-assert axis_collectives(cs, "all_gather", ("pod", "data")) == 1, cs
-assert (axis_collectives(cs, "reduce_scatter", ("data",))
-        + axis_collectives(cs, "psum_scatter", ("data",))) == 1, cs
+bs, ms = bundle("fsdp", "two_level")
+exp = ms["expected_collectives"]
+assert exp[("all_to_all", ("pod",))] == 2, exp
+assert exp[("all_gather", ("pod", "data"))] == 1, exp
+assert exp[("reduce_scatter", ("data",))] == 1, exp
+assert ms["exclusive_prims"]["all_to_all"] == [("pod",)], ms
+
+# ... and the traces must match them exactly (the same collective-budget
+# rule the CI matrix audit runs)
+fs = run_checks([b2, bf, bs], rules=["collective-budget"])
+assert not fs, [str(f) for f in fs]
 print("JAXPR-POD-ONLY OK")
 """)
 

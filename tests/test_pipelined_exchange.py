@@ -270,14 +270,16 @@ print("PIPELINED-FSDP OK")
 # ---------------------------------------------------------------------------
 
 def test_jaxpr_pins_chunked_collectives_and_no_materialization():
+    """The 2K-a2a/2K-ag budget and the no-extra-f32-buffers bound are
+    enforced through the SAME rules the CI matrix audit runs
+    (collective-budget / no-materialization in repro.analysis)."""
     run_devices("""
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro.analysis import TraceBundle, run_checks, stats
 from repro.core import comm
 from repro.core.api import QuantConfig
 from repro.utils.compat import shard_map
-from repro.utils.jaxpr import (axis_collectives, collective_axis_counts,
-                               sized_outvar_count)
 
 mesh = jax.make_mesh((8,), ("dp",))
 n = 512 * 96 - 100      # 12 bucket rows per worker chunk (ragged tail)
@@ -292,20 +294,28 @@ def make(k):
         lambda v: eng.exchange_flat(v[0], key), mesh=mesh,
         in_specs=P("dp"), out_specs=P(), check_vma=False))(x)
 
-for k in (1, 3):
-    counts = collective_axis_counts(make(k))
-    # phase 1: 2 all_to_all per chunk; phase 2: 2 all_gather per chunk
-    assert axis_collectives(counts, "all_to_all", ("dp",)) == 2 * k, (k,
-                                                                     counts)
-    assert axis_collectives(counts, "all_gather", ("dp",)) == 2 * k, (k,
-                                                                     counts)
-
+c1 = make(1)
 # chunking must not add full-buffer-sized f32 intermediates: the K-chunk
 # jaxpr holds no more >= n-element f32 arrays than the single-shot one
-m1 = sized_outvar_count(make(1), n, dtype=jnp.float32)
-m3 = sized_outvar_count(make(3), n, dtype=jnp.float32)
-assert m3 <= m1, (m3, m1)
-print("JAXPR-PIN OK", m1, m3)
+m1 = stats.sized_outvar_count(c1, n, dtype=jnp.float32)
+
+def bundle(k, closed, baseline=None):
+    # phase 1: 2 all_to_all per chunk; phase 2: 2 all_gather per chunk
+    meta = {
+        "expected_collectives": {("all_to_all", ("dp",)): 2 * k,
+                                 ("all_gather", ("dp",)): 2 * k},
+        "exclusive_prims": {"all_to_all": [("dp",)]},
+    }
+    if baseline is not None:
+        meta["materialization"] = {"min_elems": n, "dtype": "float32",
+                                   "max_count": baseline}
+    return TraceBundle(label=f"pipelined/k{k}", kind="exchange",
+                       closed=closed, meta=meta)
+
+fs = run_checks([bundle(1, c1), bundle(3, make(3), baseline=m1)],
+                rules=["collective-budget", "no-materialization"])
+assert not fs, [str(f) for f in fs]
+print("JAXPR-PIN OK", m1)
 """)
 
 
