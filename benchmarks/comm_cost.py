@@ -39,6 +39,8 @@ from repro.core import QuantPolicy, comm, make_quantizer
 from repro.models import LM
 
 MIXED_POLICY = "norm|bias=fp,default=orq-9"   # EXPERIMENTS.md recipe
+#: adaptive bit schedule the sched_* rows price (EXPERIMENTS.md)
+SCHED_SPEC = "embed=orq@5..2,norm|bias=fp,default=orq@4..1"
 
 PAPER_MODELS = {"AlexNet": 61.1e6, "VGG-19": 143.7e6, "DenseNet-161": 28.7e6,
                 "GoogLeNet": 13.0e6, "ResNet-50": 25.6e6}
@@ -125,6 +127,48 @@ def hierarchy_rows(emit, path_sizes, tag: str):
         f"pass_4x={'yes' if ratio >= 4.0 else 'NO'}"))
 
 
+def schedule_rows(emit, path_sizes, tag: str):
+    """Adaptive bit schedule on the 2x16x16 two-level mesh: one row per
+    PHASE (each phase's materialized static policy priced through the
+    same ``policy_link_stats`` path every other row uses — the shared
+    accounting the ``BitBudgetController`` cost_fn goes through too) and
+    one amortized bytes/step row vs the schedule's static HI/LO endpoint
+    policies. The ramp's win is the amortized column: early steps pay
+    near-HI bytes, late steps near-LO."""
+    from repro.core.policy import BitSchedule
+    n_inter, n_intra = 2, 16
+    total_steps, resolve_every = 1000, 250
+    sched = BitSchedule.parse(SCHED_SPEC, bucket_size=512)
+    phases = sched.phases(total_steps, resolve_every)
+    amortized = 0.0
+    for i, (start, a) in enumerate(phases):
+        end = phases[i + 1][0] if i + 1 < len(phases) else total_steps
+        pst, _ = comm.policy_link_stats(
+            sched.policy_at(a), path_sizes, n_intra=n_intra,
+            n_inter=n_inter, two_level=True)
+        amortized += pst["dcn_q_bytes"] * (end - start) / total_steps
+        bits = ",".join("fp" if b is None else str(b) for b in a)
+        emit(csv_row(
+            f"table1_comm/sched_{tag}_phase{start}", 0.0,
+            f"bits={bits};steps={start}..{end};"
+            f"dcn_quant={pst['dcn_q_bytes']/2**20:.2f}MiB;"
+            f"launches={int(pst['launches'])}"))
+    ends = {}
+    for name, a in [("hi", sched.ceil_assignment()),
+                    ("lo", sched.floor_assignment())]:
+        pst, _ = comm.policy_link_stats(
+            sched.policy_at(a), path_sizes, n_intra=n_intra,
+            n_inter=n_inter, two_level=True)
+        ends[name] = pst["dcn_q_bytes"]
+    emit(csv_row(
+        f"table1_comm/sched_{tag}_amortized", 0.0,
+        f"schedule={SCHED_SPEC.replace(',', ' ')};phases={len(phases)};"
+        f"dcn_quant_per_step={amortized/2**20:.2f}MiB;"
+        f"static_hi={ends['hi']/2**20:.2f}MiB;"
+        f"static_lo={ends['lo']/2**20:.2f}MiB;"
+        f"saved_vs_hi_pct={100*(1-amortized/max(ends['hi'],1.0)):.1f}"))
+
+
 def policy_vs_uniform(emit, path_sizes, tag: str):
     """Partitioned per-group exchange for the mixed recipe vs uniform fp /
     orq-9: per-group launches and wire bytes per worker."""
@@ -186,6 +230,7 @@ def run(emit, dry: bool = False):
         policy_vs_uniform(emit, ps, "lm-100m-smoke")
         fsdp_policy_rows(emit, model, shapes, ps, "lm-100m-smoke")
         hierarchy_rows(emit, ps, "lm-100m-smoke")
+        schedule_rows(emit, ps, "lm-100m-smoke")
         return
     # assigned archs: fused-vs-per-leaf cost + one full exchange per method
     # (one abstract init trace per arch, reused for both)
@@ -196,6 +241,7 @@ def run(emit, dry: bool = False):
         policy_vs_uniform(emit, ps, arch)
         fsdp_policy_rows(emit, model, shapes, ps, arch)
         hierarchy_rows(emit, ps, arch)
+        schedule_rows(emit, ps, arch)
         n = sum(sizes)
         for m in ["fp", "terngrad", "orq-9"]:
             qz = make_quantizer(m, bucket_size=512)

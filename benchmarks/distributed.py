@@ -36,7 +36,7 @@ data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=64, batch_size=16,
                    seed=11)
 out = {}
 for name in ["fp", "orq-9", "qsgd-9", "orq-3", "terngrad"]:
-    tcfg = TrainConfig(quant=QuantConfig(name=name, bucket_size=2048,
+    tcfg = TrainConfig(policy=QuantConfig(name=name, bucket_size=2048,
                                          clip_c=2.5 if name != "fp" else None),
                        mode="replicated")
     state = init_state(model, mesh, tcfg, jax.random.key(0))
@@ -52,7 +52,7 @@ import numpy as np
 from repro.core import comm, make_quantizer
 counts = {}
 for fused in (True, False):
-    tcfg = TrainConfig(quant=QuantConfig(name="orq-9", bucket_size=2048),
+    tcfg = TrainConfig(policy=QuantConfig(name="orq-9", bucket_size=2048),
                        mode="replicated", fused_exchange=fused)
     state = init_state(model, mesh, tcfg, jax.random.key(0))
     step_fn, _ = make_train_step(model, mesh, tcfg, constant_lr(0.05))
@@ -71,7 +71,7 @@ out["_collectives"] = {"counts": counts, "leaves": len(sizes),
 # fsdp (ZeRO-3): fused per-group reduce-scatter vs per-leaf gather backward
 fcounts = {}
 for fused in (True, False):
-    tcfg = TrainConfig(quant=QuantConfig(name="orq-9", bucket_size=2048),
+    tcfg = TrainConfig(policy=QuantConfig(name="orq-9", bucket_size=2048),
                        mode="fsdp", fused_exchange=fused)
     state = init_state(model, mesh, tcfg, jax.random.key(0))
     step_fn, plan = make_train_step(model, mesh, tcfg, constant_lr(0.05))

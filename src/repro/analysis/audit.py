@@ -65,6 +65,18 @@ TRAIN_MATRIX: List[Tuple[str, str, int, tuple, tuple, str]] = [
 #: plus the bf16 escape hatch (zero kernel launches)
 SERVE_SCHEMES = ("orq-9", "bingrad-b", "signsgd", "bf16")
 
+#: adaptive bit-schedule audit: the per-phase specialized steps of ONE
+#: by-rule engine skeleton, traced at every distinct phase the schedule
+#: produces — collective/pallas/prng budgets must track the phase bits
+#: while the group structure (EF shapes) stays put
+SCHED_SCHEDULE = "embed=orq@5..3,norm|bias=fp,default=orq@4..2"
+SCHED_STEPS, SCHED_RESOLVE = 100, 50
+SCHED_MATRIX: List[Tuple[str, str, tuple, tuple]] = [
+    ("replicated", "flat", (8,), ("data",)),
+    ("replicated", "two_level", (2, 4), ("pod", "data")),
+    ("fsdp", "flat", (8,), ("data",)),
+]
+
 
 # ---------------------------------------------------------------------------
 # wire-op bundles (per registered scheme)
@@ -328,6 +340,60 @@ def train_bundles(matrix: Optional[Sequence[tuple]] = None
     return out
 
 
+def sched_bundles(matrix: Optional[Sequence[tuple]] = None
+                  ) -> List[TraceBundle]:
+    """Trace the adaptive bit schedule's per-phase specialized steps.
+
+    One by-rule engine SKELETON per leg (what ``ScheduledTrainStep``
+    holds), re-specialized for every distinct phase of
+    ``SCHED_SCHEDULE`` — each phase's trace gets its own collective/
+    pallas/prng budget derived from the SPECIALIZED engines, extending
+    the invariant matrix across schedule boundaries: a bits change must
+    move the wire budgets and nothing else."""
+    import dataclasses
+
+    from repro.core.policy import BitSchedule
+    from repro.optim.schedule import constant_lr
+    from repro.train import TrainConfig, make_train_step
+    from repro.train.step import (exchange_engines, init_state,
+                                  specialize_engines)
+
+    model, data = _smoke_setup()
+    batch = data.batch(0)
+    schedule = BitSchedule.parse(SCHED_SCHEDULE)
+    out: List[TraceBundle] = []
+    for mode, hier, shape, axes in (matrix or SCHED_MATRIX):
+        mesh = jax.make_mesh(shape, axes)
+        base = TrainConfig(
+            policy=schedule.policy_at(schedule.ceil_assignment()),
+            mode=mode, hierarchy=hier, group_by_rule=True)
+        skeleton = exchange_engines(model, mesh, base)
+        state = jax.eval_shape(
+            lambda key: init_state(model, mesh, base, key),
+            jax.random.key(0))
+        for start, assignment in schedule.phases(SCHED_STEPS,
+                                                 SCHED_RESOLVE):
+            policy = schedule.policy_at(assignment)
+            eng = specialize_engines(skeleton, policy)
+            step_fn, _ = make_train_step(
+                model, mesh, dataclasses.replace(base, policy=policy),
+                constant_lr(0.05), engines=eng)
+            closed = jax.make_jaxpr(step_fn)(state, batch,
+                                             jax.random.key(1))
+            meta = expected_train_collectives(eng, mesh, 1)
+            meta["expect_donated"] = len(jax.tree_util.tree_leaves(state))
+            meta["prng"] = {"random_bits": expected_train_draws(eng, mesh)}
+            pallas = expected_train_pallas(eng, mesh, 1)
+            if pallas is not None:
+                meta["expect_pallas_calls"] = pallas
+            bits = ",".join("fp" if b is None else str(b)
+                            for b in assignment)
+            out.append(TraceBundle(
+                label=f"train/sched/{mode}/{hier}/phase{start}/b{bits}",
+                kind="train_step", closed=closed, meta=meta))
+    return out
+
+
 # ---------------------------------------------------------------------------
 # serve bundles (Engine._fwd at the decode shape)
 # ---------------------------------------------------------------------------
@@ -381,6 +447,7 @@ def build_bundles(*, wire_ops: bool = True, train: bool = True,
         bundles += wire_bundles()
     if train:
         bundles += train_bundles()
+        bundles += sched_bundles()
     if serve:
         bundles += serve_bundles()
     return bundles

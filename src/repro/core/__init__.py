@@ -9,7 +9,8 @@ Public surface:
 from repro.core.api import (QuantConfig, all_methods, make_quantizer,
                             register_scheme, registered_schemes,
                             unregister_scheme)
-from repro.core.policy import PolicyRule, QuantPolicy
+from repro.core.policy import (BitBudgetController, BitRamp, BitSchedule,
+                               PolicyRule, QuantPolicy, ramp_levels)
 from repro.core.quantizers import QuantizedTensor, Quantizer
 
 __all__ = [
@@ -17,6 +18,10 @@ __all__ = [
     "QuantConfig",
     "QuantPolicy",
     "PolicyRule",
+    "BitRamp",
+    "BitSchedule",
+    "BitBudgetController",
+    "ramp_levels",
     "all_methods",
     "make_quantizer",
     "register_scheme",

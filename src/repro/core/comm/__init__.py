@@ -26,8 +26,8 @@ from repro.core.comm.exchange import (GradientExchange, GradLayout,
                                       GroupSegment, LeafSlot,
                                       PartitionedExchange, PolicyLayout,
                                       fused_stats, link_stats,
-                                      per_leaf_stats, policy_link_stats,
-                                      policy_stats)
+                                      observed_link_stats, per_leaf_stats,
+                                      policy_link_stats, policy_stats)
 from repro.core.comm.hierarchical import (intra_all_gather, intra_chunk_len,
                                           intra_reduce_scatter_mean,
                                           resolve_hierarchy,
@@ -64,6 +64,7 @@ __all__ = [
     "policy_stats",
     "link_stats",
     "policy_link_stats",
+    "observed_link_stats",
     "resolve_hierarchy",
     "split_dp_axes",
     "intra_all_gather",

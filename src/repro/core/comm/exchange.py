@@ -382,11 +382,15 @@ class GradientExchange:
 @dataclasses.dataclass(frozen=True)
 class GroupSegment:
     """One policy group's contiguous segment: which canonical leaves it
-    owns and how large its fused buffer is."""
+    owns and how large its fused buffer is. ``rule_id`` is the policy
+    rule index the group was formed from (``by_rule`` layouts only;
+    None for config-grouped layouts) — the bits-independent handle a
+    ``BitSchedule`` phase specialization re-resolves configs through."""
 
     cfg: QuantConfig
     leaf_ids: Tuple[int, ...]    # canonical leaf order indices, ascending
     size: int                    # total element count of the group buffer
+    rule_id: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -406,11 +410,20 @@ class PolicyLayout:
     leaf_group: Tuple[int, ...]          # leaf i -> index into groups
 
     @classmethod
-    def from_tree(cls, tree, policy: QuantPolicy, *,
-                  paths=None) -> "PolicyLayout":
+    def from_tree(cls, tree, policy: QuantPolicy, *, paths=None,
+                  by_rule: bool = False) -> "PolicyLayout":
         """``paths`` optionally overrides the leaf path strings (a pytree of
         strings aligned with ``tree`` — e.g. ``model.param_paths``); the
-        default is the keystr paths of ``tree`` itself."""
+        default is the keystr paths of ``tree`` itself.
+
+        ``by_rule=True`` groups leaves by the policy RULE INDEX that
+        matched them instead of by resolved config. When every rule
+        resolves to a distinct config the partition (and group order —
+        both key on first leaf appearance) is identical to config
+        grouping, but the rule partition is invariant under config
+        re-materialization — a ``BitSchedule`` phase that collapses two
+        ramps onto the same scheme keeps two groups, so EF-residual
+        buffer shapes survive the phase boundary (``with_configs``)."""
         pairs, treedef = tree_flatten_with_path_strs(tree)
         if paths is not None:
             path_strs = list(jax.tree_util.tree_leaves(paths))
@@ -427,17 +440,21 @@ class PolicyLayout:
                 f"the patterns against the model's param paths",
                 stacklevel=2)
 
-        group_ix: Dict[QuantConfig, int] = {}
+        group_ix: Dict[Any, int] = {}
         g_cfg: List[QuantConfig] = []
+        g_rule: List[Optional[int]] = []
         g_leaves: List[List[int]] = []
         g_off: List[int] = []
         slots: List[LeafSlot] = []
         leaf_group: List[int] = []
         for i, ((_, leaf), path) in enumerate(zip(pairs, path_strs)):
             cfg = policy.resolve(path)
-            gi = group_ix.setdefault(cfg, len(g_cfg))
+            rid = policy.resolve_ix(path) if by_rule else None
+            gkey = rid if by_rule else cfg
+            gi = group_ix.setdefault(gkey, len(g_cfg))
             if gi == len(g_cfg):
                 g_cfg.append(cfg)
+                g_rule.append(rid)
                 g_leaves.append([])
                 g_off.append(0)
             size = int(np.prod(leaf.shape)) if leaf.shape else 1
@@ -448,10 +465,25 @@ class PolicyLayout:
             g_leaves[gi].append(i)
             leaf_group.append(gi)
         groups = tuple(
-            GroupSegment(cfg=c, leaf_ids=tuple(ls), size=off)
-            for c, ls, off in zip(g_cfg, g_leaves, g_off))
+            GroupSegment(cfg=c, leaf_ids=tuple(ls), size=off, rule_id=r)
+            for c, r, ls, off in zip(g_cfg, g_rule, g_leaves, g_off))
         return cls(treedef=treedef, slots=tuple(slots), groups=groups,
                    leaf_group=tuple(leaf_group))
+
+    def with_configs(self, policy: QuantPolicy) -> "PolicyLayout":
+        """Specialize a ``by_rule`` skeleton to one phase's concrete
+        configs: identical treedef/slots/offsets/group membership, only
+        each group's ``cfg`` re-resolved through its ``rule_id``. The
+        bits-independent part of the layout is reused, never rebuilt."""
+        for g in self.groups:
+            if g.rule_id is None:
+                raise ValueError(
+                    "with_configs needs a by_rule layout (group rule_ids "
+                    "are unset — build with from_tree(by_rule=True))")
+        groups = tuple(
+            dataclasses.replace(g, cfg=policy.cfg_for_rule(g.rule_id))
+            for g in self.groups)
+        return dataclasses.replace(self, groups=groups)
 
     @property
     def size(self) -> int:
@@ -500,12 +532,16 @@ class PartitionedExchange:
               use_kernels: bool = True,
               max_chunk_elems: Optional[int] = None,
               intra_axes: Tuple[str, ...] = (),
-              pipeline_chunks: int = 1) -> "PartitionedExchange":
+              pipeline_chunks: int = 1,
+              by_rule: bool = False) -> "PartitionedExchange":
         """``axis_names`` is the QUANTIZED (inter) axis tuple; a non-empty
         ``intra_axes`` turns every group engine hierarchical (two-level
         ICI/DCN mode — see ``GradientExchange``); ``pipeline_chunks``
-        pipelines every group's exchange (bit-identical schedule knob)."""
-        layout = PolicyLayout.from_tree(tree, policy, paths=paths)
+        pipelines every group's exchange (bit-identical schedule knob).
+        ``by_rule=True`` groups by policy rule index (bit-schedule
+        skeletons; see ``PolicyLayout.from_tree``)."""
+        layout = PolicyLayout.from_tree(tree, policy, paths=paths,
+                                        by_rule=by_rule)
         engines = tuple(
             GradientExchange(
                 g.cfg.to_quantizer(), axis_names,
@@ -515,6 +551,20 @@ class PartitionedExchange:
                 pipeline_chunks=pipeline_chunks)
             for g in layout.groups)
         return cls(layout=layout, engines=engines)
+
+    def specialize(self, policy: QuantPolicy) -> "PartitionedExchange":
+        """One phase's engine from a ``by_rule`` skeleton: the layout's
+        bits-independent part (treedef/slots/group membership) is reused
+        as-is, only per-group quantizers are rebuilt from the phase's
+        concrete configs. Group count, order, sizes, key folding — and
+        therefore EF-residual shapes — are identical across phases."""
+        layout = self.layout.with_configs(policy)
+        engines = tuple(
+            dataclasses.replace(
+                eng, qz=g.cfg.to_quantizer(),
+                server_requant=g.cfg.server_requant)
+            for eng, g in zip(self.engines, layout.groups))
+        return dataclasses.replace(self, layout=layout, engines=engines)
 
     @property
     def intra_axes(self) -> Tuple[str, ...]:
@@ -609,6 +659,28 @@ class PartitionedExchange:
         return tuple(
             eng.qdq_local_flat(buf, self._group_key(key, gi))
             for gi, (eng, buf) in enumerate(zip(self.engines, bufs)))
+
+    # -- runtime statistics (the BitBudgetController feed) -----------------
+    def group_stats(self, bufs: Sequence[jnp.ndarray],
+                    ef=None) -> jnp.ndarray:
+        """(n_groups, 3) f32 rows ``[sigma_sq, clip_frac, ef_norm_sq]``
+        from the SAME per-group buffers the encode consumes (pre-exchange;
+        each group bucketed at its own bucket_size): the mean per-bucket
+        gradient variance, the fraction of elements the sigma-clip would
+        clamp, and the squared norm of the group's error-feedback
+        residual (``ef`` is the group-aligned residual tuple; 0 without
+        EF). Cheap reductions only — no extra pallas_call, XLA fuses them
+        into the step. ``jax.lax.pmean`` over the dp axes yields the
+        fleet view the ``BitBudgetController.observe`` feed expects."""
+        rows = []
+        for gi, (eng, buf) in enumerate(zip(self.engines, bufs)):
+            d_eff = wire.bucket_len(buf.shape[0], eng.qz.bucket_size)
+            st = wire.encode_stats(eng.qz, buf, d_eff)
+            e = None if ef is None else ef[gi]
+            ef_sq = (jnp.zeros((), jnp.float32) if e is None
+                     else jnp.sum(jnp.square(e.astype(jnp.float32))))
+            rows.append(jnp.stack([st[0], st[1], ef_sq]))
+        return jnp.stack(rows)
 
     # -- static cost accounting --------------------------------------------
     def collective_launches(self) -> int:
@@ -753,6 +825,42 @@ def policy_link_stats(policy: QuantPolicy, path_sizes, *, n_intra: int,
             total[k] += st[k]
         labels.append(f"{cfg.name}/rs" if sharded else cfg.name)
     return total, tuple(labels)
+
+
+def observed_link_stats(ex: "PartitionedExchange", *, n_intra: int,
+                        n_inter: int, stats=None
+                        ) -> Tuple[Dict[str, float], Tuple[Dict[str, Any],
+                                                           ...]]:
+    """Per-link accounting priced from an engine AS BUILT — the observed
+    sibling of :func:`policy_link_stats`, which re-derives groups from a
+    policy + path sizes and can drift from what actually runs. Every
+    group row carries its :func:`link_stats` dict plus label/size, and —
+    when ``stats`` (the runtime ``group_stats`` output, host-fetched) is
+    given — the observed ``sigma_sq``/``clip_frac``/``ef_norm_sq``. The
+    ``BitBudgetController`` cost_fn and the benchmarks both price
+    assignments through THIS function, so the controller's budget and
+    the reported BENCH bytes cannot disagree (the shared accounting
+    path). Returns ``(summed totals, per-group rows)``."""
+    two_level = bool(ex.intra_axes)
+    total = {"ici_bytes": 0.0, "dcn_bytes": 0.0, "dcn_q_bytes": 0.0,
+             "launches": 0.0}
+    rows: List[Dict[str, Any]] = []
+    for gi, (eng, g) in enumerate(zip(ex.engines, ex.layout.groups)):
+        st = link_stats(eng.qz, g.size, n_intra=n_intra, n_inter=n_inter,
+                        two_level=two_level,
+                        server_requant=eng.server_requant,
+                        max_chunk_elems=eng.max_chunk_elems,
+                        pipeline_chunks=eng.pipeline_chunks)
+        row: Dict[str, Any] = {"label": g.cfg.name, "size": g.size,
+                               "rule_id": g.rule_id, **st}
+        if stats is not None:
+            s = np.asarray(stats[gi], dtype=np.float64)
+            row.update(sigma_sq=float(s[0]), clip_frac=float(s[1]),
+                       ef_norm_sq=float(s[2]))
+        rows.append(row)
+        for k in total:
+            total[k] += st[k]
+    return total, tuple(rows)
 
 
 def per_leaf_stats(qz: Quantizer, sizes: Sequence[int], n_workers: int, *,

@@ -58,6 +58,7 @@ import numpy as np
 from jax import lax
 
 from repro.core.api import QuantConfig
+from repro.core.comm import wire
 from repro.core.comm.collectives import (_names, _rs_mean_parts, axis_size,
                                          local_qdq_comm_layout,
                                          quantized_reduce_scatter_mean)
@@ -116,12 +117,15 @@ class FsdpSlot:
 
 @dataclasses.dataclass(frozen=True)
 class FsdpGroup:
-    """One policy group's contiguous segment."""
+    """One policy group's contiguous segment. ``rule_id`` is the policy
+    rule index (``by_rule`` layouts only) a ``BitSchedule`` phase
+    specialization re-resolves the config through."""
 
     cfg: QuantConfig
     sharded: bool                # True: reduce-scatter; False: all-reduce
     leaf_ids: Tuple[int, ...]    # canonical leaf order indices, ascending
     size: int                    # full element count of the group buffer
+    rule_id: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -143,24 +147,28 @@ class FsdpLayout:
 
     @classmethod
     def from_tree(cls, tree, policy: QuantPolicy, *, paths, shard_dims,
-                  n_shards: int) -> "FsdpLayout":
+                  n_shards: int, by_rule: bool = False) -> "FsdpLayout":
         """``paths``: pytree of path strings aligned with ``tree``;
         ``shard_dims``: path -> dp-shard dim in FULL leaf coords (None =
         replicated); ``n_shards``: dp worker count. Every sharded leaf's
         ``shape[dim]`` must divide by ``n_shards`` (``plan_sharding``
-        guarantees it)."""
+        guarantees it). ``by_rule=True`` keys the grouping on
+        ``(policy rule index, sharded)`` instead of ``(config,
+        sharded)`` — the bits-invariant partition a ``BitSchedule``
+        skeleton needs (see ``PolicyLayout.from_tree``)."""
         pairs, treedef = tree_flatten_with_path_strs(tree)
         path_strs = list(jax.tree_util.tree_leaves(paths))
         assert len(path_strs) == len(pairs), (len(path_strs), len(pairs))
 
-        group_ix: Dict[Tuple[QuantConfig, bool], int] = {}
-        g_cfg: List[Tuple[QuantConfig, bool]] = []
+        group_ix: Dict[Tuple[Any, bool], int] = {}
+        g_cfg: List[Tuple[QuantConfig, bool, Optional[int]]] = []
         g_leaves: List[List[int]] = []
         g_off: List[int] = []
         slots: List[FsdpSlot] = []
         leaf_group: List[int] = []
         for i, ((_, leaf), path) in enumerate(zip(pairs, path_strs)):
             cfg = policy.resolve(path)
+            rid = policy.resolve_ix(path) if by_rule else None
             dim = shard_dims.get(path)
             if dim is not None and (not leaf.shape
                                     or leaf.shape[dim] % n_shards):
@@ -168,10 +176,10 @@ class FsdpLayout:
                     f"leaf {path!r} shape {leaf.shape} is not divisible "
                     f"by {n_shards} along dim {dim}")
             sharded = dim is not None
-            gkey = (cfg, sharded)
+            gkey = (rid if by_rule else cfg, sharded)
             gi = group_ix.setdefault(gkey, len(g_cfg))
             if gi == len(g_cfg):
-                g_cfg.append(gkey)
+                g_cfg.append((cfg, sharded, rid))
                 g_leaves.append([])
                 g_off.append(0)
             size = int(np.prod(leaf.shape)) if leaf.shape else 1
@@ -185,10 +193,24 @@ class FsdpLayout:
             leaf_group.append(gi)
         groups = tuple(
             FsdpGroup(cfg=c, sharded=sh, leaf_ids=tuple(ls),
-                      size=off * (n_shards if sh else 1))
-            for (c, sh), ls, off in zip(g_cfg, g_leaves, g_off))
+                      size=off * (n_shards if sh else 1), rule_id=r)
+            for (c, sh, r), ls, off in zip(g_cfg, g_leaves, g_off))
         return cls(treedef=treedef, slots=tuple(slots), groups=groups,
                    leaf_group=tuple(leaf_group), n_shards=n_shards)
+
+    def with_configs(self, policy: QuantPolicy) -> "FsdpLayout":
+        """Specialize a ``by_rule`` skeleton to one phase's configs
+        (identical slots/offsets/group membership; see
+        ``PolicyLayout.with_configs``)."""
+        for g in self.groups:
+            if g.rule_id is None:
+                raise ValueError(
+                    "with_configs needs a by_rule layout (group rule_ids "
+                    "are unset — build with from_tree(by_rule=True))")
+        groups = tuple(
+            dataclasses.replace(g, cfg=policy.cfg_for_rule(g.rule_id))
+            for g in self.groups)
+        return dataclasses.replace(self, groups=groups)
 
     @property
     def size(self) -> int:
@@ -315,7 +337,8 @@ class FsdpExchange:
               shard_dims, n_shards: int, use_kernels: bool = True,
               max_chunk_elems: Optional[int] = None,
               intra_axes=(), n_intra: int = 1,
-              pipeline_chunks: int = 1) -> "FsdpExchange":
+              pipeline_chunks: int = 1,
+              by_rule: bool = False) -> "FsdpExchange":
         """``axis_names`` is the FULL ordered dp tuple; a non-empty
         ``intra_axes`` (with its static size ``n_intra``) switches on the
         two-level mode — the quantized collectives then run over the
@@ -343,7 +366,7 @@ class FsdpExchange:
             n_intra = 1
         layout = FsdpLayout.from_tree(tree, policy, paths=paths,
                                       shard_dims=shard_dims,
-                                      n_shards=n_shards)
+                                      n_shards=n_shards, by_rule=by_rule)
         engines = tuple(
             GradientExchange(
                 g.cfg.to_quantizer(), inter,
@@ -355,6 +378,21 @@ class FsdpExchange:
         return cls(layout=layout, engines=engines, dp_axes=dp,
                    intra_axes=intra, n_intra=n_intra,
                    use_kernels=use_kernels, pipeline_chunks=pipeline_chunks)
+
+    def specialize(self, policy: QuantPolicy) -> "FsdpExchange":
+        """One phase's engine from a ``by_rule`` skeleton: reuse the
+        bits-independent layout, rebuild only per-group quantizers from
+        the phase's concrete configs. Group structure — and therefore
+        ``ef_group_sizes`` shapes — is identical across phases (ramps
+        never materialize to identity, so the None pattern is static
+        too)."""
+        layout = self.layout.with_configs(policy)
+        engines = tuple(
+            dataclasses.replace(
+                eng, qz=g.cfg.to_quantizer(),
+                server_requant=g.cfg.server_requant)
+            for eng, g in zip(self.engines, layout.groups))
+        return dataclasses.replace(self, layout=layout, engines=engines)
 
     @property
     def axis_names(self):
@@ -540,6 +578,32 @@ class FsdpExchange:
             else:
                 sizes.append(-(-g.size // self.n_intra))
         return tuple(sizes)
+
+    # -- runtime statistics (the BitBudgetController feed) -----------------
+    def group_stats_stored(self, grads_tree, ef=None) -> jnp.ndarray:
+        """(n_groups, 3) f32 rows ``[sigma_sq, clip_frac, ef_norm_sq]``
+        from the STORED-shard gradient tree the exchange hands back
+        (each worker's param-shard slice of the across-worker mean).
+        Unlike the replicated ``PartitionedExchange.group_stats`` (exact,
+        pre-exchange) this is a post-exchange approximation — the mean is
+        already quantized — but the controller only consumes RELATIVE
+        group magnitudes, which survive. ``jax.lax.pmean`` over the dp
+        axes yields the fleet view."""
+        leaves = jax.tree_util.tree_leaves(grads_tree)
+        assert len(leaves) == len(self.layout.slots), \
+            (len(leaves), len(self.layout.slots))
+        rows = []
+        for gi, (eng, g) in enumerate(zip(self.engines, self.layout.groups)):
+            buf = jnp.concatenate([
+                leaves[i].astype(jnp.float32).reshape(-1)
+                for i in g.leaf_ids])
+            d_eff = wire.bucket_len(buf.shape[0], eng.qz.bucket_size)
+            st = wire.encode_stats(eng.qz, buf, d_eff)
+            e = None if ef is None else ef[gi]
+            ef_sq = (jnp.zeros((), jnp.float32) if e is None
+                     else jnp.sum(jnp.square(e.astype(jnp.float32))))
+            rows.append(jnp.stack([st[0], st[1], ef_sq]))
+        return jnp.stack(rows)
 
     # -- static cost accounting (benchmarks / tests) -----------------------
     def quantized_group_count(self) -> int:

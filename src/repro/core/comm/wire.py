@@ -221,6 +221,21 @@ def decode_each_multipass(qz: Quantizer, words, levels, d_eff: int, *,
     return jax.vmap(Quantizer.decode)(idx_all, levels)
 
 
+def encode_stats(qz: Quantizer, flat: jnp.ndarray,
+                 d_eff: int) -> jnp.ndarray:
+    """(3,) f32 ``[sigma_sq, clip_frac, l2_sq]`` of a flat buffer under
+    ``qz``'s bucket layout — the optional statistics output of the encode
+    path (per-bucket sigma^2 count-weighted over the buffer, the fraction
+    of elements ``qz.clip_c`` would clamp, the squared norm). This is the
+    cheap feed the adaptive ``BitBudgetController`` re-solves per-group
+    bits from; see ``ops.bucket_stats`` (reductions only, no extra
+    ``pallas_call``)."""
+    from repro.core import buckets
+
+    bkt, mask = buckets.to_buckets(flat.astype(jnp.float32), d_eff)
+    return ops.bucket_stats(bkt, mask, clip_c=qz.clip_c)
+
+
 def wire_unit_bytes(qz: Quantizer, nb: int, d_eff: int) -> int:
     """Bytes on the wire for one (words, levels) unit of nb buckets."""
     from repro.core import encode as E

@@ -19,9 +19,11 @@ the CI parity matrix leg).
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import bingrad as _bingrad
 from repro.kernels import bitpack as _bitpack
@@ -175,3 +177,34 @@ def decode_fused_each(words, levels, d: int, *, bits: int,
     return _fdec.decode_fused_each(words, levels, d=d, bits=bits,
                                    s=levels.shape[-1],
                                    interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("clip_c",))
+def _bucket_stats_impl(bkt, mask, clip_c):
+    m = mask.astype(bkt.dtype)
+    cnt = jnp.maximum(m.sum(axis=-1, keepdims=True), 1.0)
+    mean = (bkt * m).sum(axis=-1, keepdims=True) / cnt
+    var = (((bkt - mean) ** 2) * m).sum(axis=-1, keepdims=True) / cnt
+    total = jnp.maximum(m.sum(), 1.0)
+    # per-bucket variance weighted by valid count: the buffer's variance
+    # around its per-bucket means (what the level fit actually sees)
+    sigma_sq = (var[:, 0] * m.sum(axis=-1)).sum() / total
+    if clip_c is None:
+        clip_frac = jnp.zeros((), bkt.dtype)
+    else:
+        lim = clip_c * jnp.sqrt(var)
+        clip_frac = ((jnp.abs(bkt) > lim) * m).sum() / total
+    l2_sq = ((bkt * m) ** 2).sum()
+    return jnp.stack([sigma_sq, clip_frac, l2_sq]).astype(jnp.float32)
+
+
+def bucket_stats(bkt, mask, *, clip_c: Optional[float] = None):
+    """(nb, d) buckets + validity mask -> (3,) f32 ``[sigma_sq,
+    clip_frac, l2_sq]``: the count-weighted mean per-bucket variance,
+    the fraction of valid elements a ``clip_c``-sigma clip would clamp,
+    and the buffer's squared norm. The cheap statistics feed of the
+    adaptive bit-budget controller (``core/policy.BitBudgetController``)
+    — reductions only, no pallas_call (XLA fuses them into the step's
+    existing HBM pass), so there is no kernel/oracle split to keep in
+    parity."""
+    return _bucket_stats_impl(bkt, mask, clip_c)

@@ -9,6 +9,13 @@ mesh is exercised via launch/dryrun.py. Examples:
     # mixed per-parameter-group policy: fp norms/biases, ORQ-9 elsewhere
     PYTHONPATH=src python -m repro.launch.train --arch lm-100m --smoke \
         --quant "norm|bias=fp,default=orq-9" --mode replicated
+
+    # adaptive bit budget: per-group wire bits follow a schedule (and,
+    # with --bit-budget, a bytes/step water-filling solve fed by the
+    # fused encode's runtime statistics); see EXPERIMENTS.md
+    PYTHONPATH=src python -m repro.launch.train --arch lm-100m --smoke \
+        --bit-schedule "norm|bias=fp,default=orq@5..2" \
+        --bit-budget 2e5 --resolve-every 25 --mode replicated
 """
 from __future__ import annotations
 
@@ -22,13 +29,15 @@ import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.configs.base import get_config, get_smoke_config, list_archs
-from repro.core import QuantPolicy, all_methods
+from repro.core import (BitBudgetController, BitSchedule, QuantPolicy,
+                        all_methods, comm)
 from repro.data import SyntheticLM
 from repro.launch.mesh import make_host_mesh
 from repro.models import LM
 from repro.optim.schedule import step_decay
 from repro.train import TrainConfig, make_train_step
-from repro.train.step import init_state
+from repro.train.step import (ScheduledTrainStep, init_state,
+                              specialize_engines)
 
 
 def _params_digest(params) -> str:
@@ -58,6 +67,23 @@ def main(argv=None):
              "'pattern=scheme[,pattern=scheme...][,default=scheme]' with "
              "regex patterns matched against parameter paths (first match "
              'wins), e.g. "norm|bias=fp,embed=bingrad-b,default=orq-9".')
+    ap.add_argument(
+        "--bit-schedule", default=None, metavar="SCHEDULE",
+        help="adaptive bit schedule: the --quant policy grammar extended "
+             "with bit-ramp tokens 'family@HI..LO', HI <= 5 (e.g. "
+             "\"embed=orq@5..3,norm|bias=fp,default=orq@4..1\"); per-group "
+             "wire bits follow the ramp over --steps, re-resolved every "
+             "--resolve-every steps (recompile on phase boundary — bits "
+             "are never traced). Mutually exclusive with --quant.")
+    ap.add_argument(
+        "--bit-budget", type=float, default=None, metavar="BYTES",
+        help="quantized-DCN bytes/step budget: each phase water-fills "
+             "bits from the ramps' LO toward the deterministic ramp "
+             "value, largest marginal MSE-reduction per byte first, fed "
+             "by the fused encode's runtime statistics (needs "
+             "--bit-schedule)")
+    ap.add_argument("--resolve-every", type=int, default=50,
+                    help="bit-schedule phase length in steps")
     ap.add_argument("--bucket", type=int, default=2048)
     ap.add_argument("--clip-c", type=float, default=None)
     ap.add_argument("--mode", default="replicated",
@@ -91,9 +117,25 @@ def main(argv=None):
     ap.add_argument("--metrics-out", default=None)
     args = ap.parse_args(argv)
 
+    schedule = None
+    if args.bit_schedule is not None:
+        if args.quant != "fp":
+            ap.error("--bit-schedule and --quant are mutually exclusive "
+                     "(the schedule IS the policy; put static entries in "
+                     "the schedule string)")
+        if args.bit_budget is not None and args.per_leaf_exchange:
+            ap.error("--bit-budget needs the fused exchange (its "
+                     "statistics feed) — drop --per-leaf-exchange")
+        try:
+            schedule = BitSchedule.parse(args.bit_schedule,
+                                         bucket_size=args.bucket,
+                                         clip_c=args.clip_c)
+        except ValueError as e:
+            ap.error(str(e))
     try:
-        policy = QuantPolicy.parse(args.quant, bucket_size=args.bucket,
-                                   clip_c=args.clip_c)
+        policy = (None if schedule is not None else
+                  QuantPolicy.parse(args.quant, bucket_size=args.bucket,
+                                    clip_c=args.clip_c))
     except ValueError as e:
         ap.error(str(e))
 
@@ -110,10 +152,37 @@ def main(argv=None):
         fused_exchange=not args.per_leaf_exchange,
         error_feedback=args.error_feedback,
         exchange_chunk_elems=args.exchange_chunk,
-        pipeline_chunks=args.pipeline_chunks)
+        pipeline_chunks=args.pipeline_chunks,
+        # the water-filling solve is statistics-driven; the pure ramp
+        # needs no feed, so skip the per-step stats fetch without it
+        collect_stats=(schedule is not None
+                       and args.bit_budget is not None))
     lr_fn = step_decay(args.lr, [args.steps // 2, 3 * args.steps // 4])
-    state = init_state(model, mesh, tcfg, jax.random.key(args.seed))
-    step_fn, _ = make_train_step(model, mesh, tcfg, lr_fn)
+    controller = None
+    if schedule is not None:
+        controller = BitBudgetController(
+            schedule, total_steps=args.steps,
+            resolve_every=args.resolve_every,
+            dcn_budget_bytes=args.bit_budget)
+        step_fn = ScheduledTrainStep(model, mesh, tcfg, controller, lr_fn)
+        # price assignments with the SAME per-link accounting the
+        # benchmarks report, from the engines AS BUILT (shared path)
+        n_intra = max(1, step_fn.skeleton.n_intra)
+        n_inter = max(1, step_fn.plan.n_dp // n_intra)
+
+        def cost_fn(phase_policy):
+            eng = specialize_engines(step_fn.skeleton, phase_policy)
+            total, _ = comm.observed_link_stats(
+                eng.pex, n_intra=n_intra, n_inter=n_inter)
+            return total["dcn_q_bytes"]
+
+        controller.cost_fn = cost_fn
+        init_tcfg = step_fn.init_config
+    else:
+        init_tcfg = tcfg
+    state = init_state(model, mesh, init_tcfg, jax.random.key(args.seed))
+    if schedule is None:
+        step_fn, _ = make_train_step(model, mesh, tcfg, lr_fn)
     data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq,
                        batch_size=args.batch, seed=args.seed)
 
@@ -124,10 +193,16 @@ def main(argv=None):
         state, metrics = step_fn(state, batch, jax.random.key(args.seed))
         if i % args.log_every == 0 or i == args.steps - 1:
             loss = float(metrics["loss"])
-            history.append({"step": i, "loss": loss,
-                            "nll": float(metrics["nll"]),
-                            "lr": float(metrics["lr"])})
-            print(f"step {i:5d} loss {loss:.4f} "
+            row = {"step": i, "loss": loss,
+                   "nll": float(metrics["nll"]),
+                   "lr": float(metrics["lr"])}
+            bits = ""
+            if controller is not None:
+                row["bits"] = list(step_fn.last_assignment)
+                bits = " bits " + ",".join(
+                    "fp" if b is None else str(b) for b in row["bits"])
+            history.append(row)
+            print(f"step {i:5d} loss {loss:.4f}{bits} "
                   f"({(time.time()-t0)/(i+1):.2f}s/step)")
     # bit-level fingerprint of the final parameters: two runs of an
     # exchange schedule that is supposed to be bit-identical (e.g.
@@ -139,9 +214,11 @@ def main(argv=None):
                         step=int(state.step))
         print("checkpoint ->", args.checkpoint)
     if args.metrics_out:
+        out = {"history": history, "params_sha256": digest}
+        if controller is not None:
+            out["bit_decisions"] = controller.decisions
         with open(args.metrics_out, "w") as f:
-            json.dump({"history": history, "params_sha256": digest}, f,
-                      indent=1)
+            json.dump(out, f, indent=1)
     return 0
 
 

@@ -37,14 +37,25 @@ Quantization is configured through ``TrainConfig.policy`` (a
 scheme is resolved from its gather path, the replicated fused exchange
 partitions leaves into per-policy-group segments (O(#groups) collectives
 per step), and fsdp gathers quantize each leaf's backward with its
-resolved quantizer. ``TrainConfig.quant`` remains as the deprecated
-uniform-policy alias.
+resolved quantizer. (The historical ``TrainConfig.quant`` uniform alias
+is gone — passing it raises with a pointer at ``policy=``.)
+
+ADAPTIVE BIT BUDGET: ``ScheduledTrainStep`` drives a ``BitSchedule`` /
+``BitBudgetController`` (``repro.core.policy``) over this machinery —
+per-group wire bit-width becomes a function of the training step via a
+recompile-on-phase-boundary design: one bits-independent engine skeleton
+(leaves grouped by policy RULE, so EF-residual shapes are invariant),
+specialized per phase into concrete engines held in an LRU keyed by the
+bits tuple. Within a phase the step is bit-identical to the equivalent
+static policy; bit-width is never traced, so the one-``pallas_call``
+property is untouched.
 """
 from __future__ import annotations
 
 import dataclasses
 import warnings
 import zlib
+from collections import OrderedDict
 from functools import partial
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
@@ -70,12 +81,12 @@ _FUSED_SALT = zlib.crc32(b"fused_exchange") & 0x7FFFFFFF
 
 @dataclasses.dataclass(frozen=True)
 class TrainConfig:
-    # ``policy`` is the primary quantization surface: a QuantPolicy (or
+    # ``policy`` is the sole quantization surface: a QuantPolicy (or
     # anything QuantPolicy.coerce accepts — policy string, dict,
-    # QuantConfig). ``quant`` is the deprecated uniform-policy alias, kept
-    # for old call sites; it is ignored whenever ``policy`` is set.
+    # QuantConfig). The historical ``quant`` uniform alias is REMOVED;
+    # the sentinel below turns old call sites into a clear error.
     policy: Optional[Any] = None
-    quant: QuantConfig = QuantConfig(name="fp")
+    quant: Any = None               # REMOVED — kept only to fail loudly
     mode: str = "fsdp"              # fsdp | replicated
     hierarchy: str = "auto"         # flat | two_level | auto: two_level
                                     # quantizes only over the slow
@@ -103,18 +114,37 @@ class TrainConfig:
                                     # encode — bit-identical to K=1
                                     # (latency knob; see
                                     # core/comm/collectives.py)
+    group_by_rule: bool = False     # key fused-exchange groups on the
+                                    # policy RULE index instead of the
+                                    # resolved QuantConfig: same partition
+                                    # when configs are all distinct, but
+                                    # invariant under per-phase config
+                                    # re-materialization — what the
+                                    # bit-schedule skeleton/specialize
+                                    # machinery needs so EF shapes survive
+                                    # phase boundaries
+    collect_stats: bool = False     # emit an ``exchange_stats`` metric:
+                                    # (n_groups, 3) f32 [sigma_sq,
+                                    # clip_frac, ef_norm_sq] per policy
+                                    # group, pmean'd over dp — the
+                                    # BitBudgetController's feed (fused
+                                    # paths only; per-leaf paths have no
+                                    # group buffers to measure)
     compute_dtype: Any = jnp.bfloat16
 
+    def __post_init__(self):
+        if self.quant is not None:
+            raise ValueError(
+                "TrainConfig.quant was removed — pass policy= instead "
+                "(QuantPolicy.coerce accepts a QuantConfig, a scheme "
+                "name, a policy string like 'embed=fp,default=orq-9', or "
+                "a dict); a uniform policy is just "
+                "policy=QuantConfig(name=...)")
+
     def resolved_policy(self) -> QuantPolicy:
-        """The effective QuantPolicy (``policy`` if set, else the uniform
-        policy over the deprecated ``quant`` alias)."""
+        """The effective QuantPolicy (``policy``, else uniform fp)."""
         if self.policy is None:
-            return QuantPolicy.uniform(self.quant)
-        if self.quant != QuantConfig():
-            warnings.warn(
-                "TrainConfig.quant is ignored when TrainConfig.policy is "
-                "set — fold its settings into the policy instead",
-                DeprecationWarning, stacklevel=2)
+            return QuantPolicy.uniform(QuantConfig(name="fp"))
         return QuantPolicy.coerce(self.policy)
 
 
@@ -294,14 +324,14 @@ def _ef_group_sizes(aparams, tcfg: TrainConfig, plan: ShardingPlan,
         fex = comm.FsdpExchange.build(
             tcfg.resolved_policy(), aparams, plan.dp_axes, paths=plan.paths,
             shard_dims=plan.full_shard_dims(), n_shards=plan.n_dp,
-            intra_axes=intra, n_intra=n_intra)
+            intra_axes=intra, n_intra=n_intra, by_rule=tcfg.group_by_rule)
         sizes = fex.ef_group_sizes()
         return sizes if any(n is not None for n in sizes) else None
     if not intra:
         return None          # flat replicated EF stays params-shaped
     pex = comm.PartitionedExchange.build(
         tcfg.resolved_policy(), aparams, inter, paths=plan.paths,
-        intra_axes=intra)
+        intra_axes=intra, by_rule=tcfg.group_by_rule)
     sizes = pex.ef_shard_sizes(n_intra)
     return sizes if any(n is not None for n in sizes) else None
 
@@ -390,7 +420,8 @@ def exchange_engines(model: LM, mesh, tcfg: TrainConfig,
         use_kernels=tcfg.use_kernels,
         max_chunk_elems=tcfg.exchange_chunk_elems,
         intra_axes=intra_axes,
-        pipeline_chunks=tcfg.pipeline_chunks)
+        pipeline_chunks=tcfg.pipeline_chunks,
+        by_rule=tcfg.group_by_rule)
     # fused fsdp engine: ONE custom-VJP over the whole sharded tree whose
     # forward is a fused per-group parameter all-gather and whose backward
     # is one fused quantized reduce-scatter per sharded policy group (+
@@ -406,22 +437,39 @@ def exchange_engines(model: LM, mesh, tcfg: TrainConfig,
             use_kernels=tcfg.use_kernels,
             max_chunk_elems=tcfg.exchange_chunk_elems,
             intra_axes=intra_axes, n_intra=n_intra,
-            pipeline_chunks=tcfg.pipeline_chunks)
+            pipeline_chunks=tcfg.pipeline_chunks,
+            by_rule=tcfg.group_by_rule)
     return ExchangeEngines(pex=pex, fex=fex, plan=plan, policy=policy,
                            intra_axes=intra_axes, inter_axes=inter_axes,
                            n_intra=n_intra, fused_fsdp=fused_fsdp)
 
 
+def specialize_engines(eng: ExchangeEngines,
+                       policy: QuantPolicy) -> ExchangeEngines:
+    """Re-materialize a by-rule-grouped engine bundle for a new concrete
+    policy WITHOUT rebuilding layouts: same groups, same order, same EF
+    shapes — only the per-group QuantConfigs/quantizers change. This is
+    the per-phase specialization step of the adaptive bit schedule."""
+    pex = eng.pex.specialize(policy)
+    fex = eng.fex.specialize(policy) if eng.fex is not None else None
+    return eng._replace(pex=pex, fex=fex, policy=policy)
+
+
 def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
-                    aparams=None):
+                    aparams=None, engines: Optional[ExchangeEngines] = None):
     """Returns (step_fn, plan). step_fn(state, batch, key) ->
-    (state, metrics); jit-compiled shard_map over the dp axes."""
+    (state, metrics); jit-compiled shard_map over the dp axes.
+
+    ``engines`` optionally supplies a prebuilt :class:`ExchangeEngines`
+    (e.g. a specialized per-phase bundle from :func:`specialize_engines`);
+    its policy must match ``tcfg.resolved_policy()``."""
     lr_fn = lr_fn or constant_lr(0.1)
     cfg = model.cfg
     dp_axes = _dp_axes(mesh)
     if aparams is None:
         aparams = jax.eval_shape(model.init, jax.random.key(0))
-    eng = exchange_engines(model, mesh, tcfg, aparams=aparams)
+    eng = (engines if engines is not None
+           else exchange_engines(model, mesh, tcfg, aparams=aparams))
     plan, policy = eng.plan, eng.policy
     optimizer = _make_optimizer(tcfg)
     intra_axes, inter_axes, n_intra = (eng.intra_axes, eng.inter_axes,
@@ -452,6 +500,15 @@ def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
             "error_feedback needs the fused fsdp exchange (fused_exchange="
             "True on a pure-dp mesh); the per-leaf fsdp path has no "
             "residual stream — ignoring error_feedback", stacklevel=2)
+    collect_stats = tcfg.collect_stats
+    if collect_stats and not (
+            fused_fsdp or (tcfg.mode == "replicated"
+                           and tcfg.fused_exchange)):
+        warnings.warn(
+            "collect_stats needs a fused exchange path (there are no "
+            "per-group wire buffers to measure on the per-leaf paths) — "
+            "ignoring collect_stats", stacklevel=2)
+        collect_stats = False
 
     leaf_qz_cache: Dict[QuantConfig, Any] = {}
 
@@ -513,7 +570,14 @@ def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
                 (loss, metrics), grads = jax.value_and_grad(
                     fsdp_loss_fn, has_aux=True)(state.params, None)
                 new_ef = state.ef
-            return _finish(state, grads, new_ef, loss, metrics)
+            stats = None
+            if collect_stats:
+                # post-exchange approximation from the stored shards (the
+                # pre-exchange cotangent buffers live inside the custom
+                # VJP); pmean over dp in _finish gives the fleet view
+                stats = fex.group_stats_stored(
+                    grads, new_ef if use_fsdp_ef else None)
+            return _finish(state, grads, new_ef, loss, metrics, stats)
 
         gather = make_gather_fn(step_key)
 
@@ -526,6 +590,7 @@ def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
             loss_fn, has_aux=True)(state.params)
 
         new_ef = state.ef
+        stats = None
         use_ef = (tcfg.error_feedback and state.ef is not None
                   and not pex.is_identity)
         if use_ef and not two_level:
@@ -553,6 +618,11 @@ def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
                     new_ef = tuple(None if e is None else s - l
                                    for e, s, l in zip(state.ef, shards,
                                                       local))
+                if collect_stats:
+                    # measured on the EF-compensated intra shards — what
+                    # the quantized inter exchange actually encodes
+                    stats = pex.group_stats(
+                        shards, new_ef if use_ef else None)
                 mean_shards = pex.exchange_shard_parts(shards, k, valids)
                 grads = pex.layout.unflatten_groups(
                     pex.intra_gather_parts(mean_shards))
@@ -563,11 +633,14 @@ def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
                 # step, never O(#leaves) (see core/comm/exchange.py)
                 k = jax.random.fold_in(step_key, _FUSED_SALT)
                 bufs = pex.layout.flatten_groups(grads)
+                ef_bufs = None
                 if use_ef:
                     local = pex.local_qdq_parts(bufs, k)
+                    ef_bufs = [f - l for f, l in zip(bufs, local)]
                     new_ef = pex.layout.unflatten_groups(
-                        [f - l for f, l in zip(bufs, local)],
-                        restore_dtype=False)
+                        ef_bufs, restore_dtype=False)
+                if collect_stats:
+                    stats = pex.group_stats(bufs, ef_bufs)
                 grads = pex.layout.unflatten_groups(
                     pex.exchange_parts(bufs, k))
             else:
@@ -606,10 +679,13 @@ def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
                 k = jax.random.fold_in(step_key, _FUSED_SALT)
                 bufs = pex.layout.flatten_groups(grads)
                 qbufs = pex.qdq_local_parts(bufs, k)
+                ef_bufs = None
                 if use_ef:
+                    ef_bufs = [f - q for f, q in zip(bufs, qbufs)]
                     new_ef = pex.layout.unflatten_groups(
-                        [f - q for f, q in zip(bufs, qbufs)],
-                        restore_dtype=False)
+                        ef_bufs, restore_dtype=False)
+                if collect_stats:
+                    stats = pex.group_stats(bufs, ef_bufs)
                 grads = pex.layout.unflatten_groups(qbufs)
             elif not pex.is_identity:
                 def qdq(path, g):
@@ -629,13 +705,17 @@ def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
                         grads, quantized)
                 grads = quantized
 
-        return _finish(state, grads, new_ef, loss, metrics)
+        return _finish(state, grads, new_ef, loss, metrics, stats)
 
-    def _finish(state: TrainState, grads, new_ef, loss, metrics):
+    def _finish(state: TrainState, grads, new_ef, loss, metrics,
+                stats=None):
         lr = lr_fn(state.step)
         updates, new_opt = optimizer.update(grads, state.opt, state.params,
                                             lr)
         new_params = opt_lib.apply_updates(state.params, updates)
+        if stats is not None:
+            # (n_groups, 3) controller feed; pmean'd with the rest below
+            metrics = dict(metrics, exchange_stats=stats)
         if dp_axes:
             metrics = jax.tree_util.tree_map(
                 lambda m: jax.lax.pmean(m, dp_axes), metrics)
@@ -675,12 +755,13 @@ def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
         if cfg.encoder:
             batch_specs["enc_embeds"] = P(dp_axes if len(dp_axes) > 1
                                           else dp_axes[0])
+        rep_metric_specs = {"nll": P(), "aux": P(), "tokens": P(),
+                            "loss": P(), "lr": P()}
+        if collect_stats:
+            rep_metric_specs["exchange_stats"] = P()
         fn = shard_map(local_step, mesh=mesh,
                        in_specs=(state_specs, batch_specs, P()),
-                       out_specs=(state_specs,
-                                  {"nll": P(), "aux": P(),
-                                   "tokens": P(), "loss": P(),
-                                   "lr": P()}),
+                       out_specs=(state_specs, rep_metric_specs),
                        axis_names=dp_axes, check_vma=False)
         return jax.jit(fn, donate_argnums=(0,)), plan
 
@@ -697,6 +778,8 @@ def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
         batch_specs["enc_embeds"] = P(dp_ent)
     metric_specs = {"nll": P(), "aux": P(), "tokens": P(), "loss": P(),
                     "lr": P()}
+    if collect_stats:
+        metric_specs["exchange_stats"] = P()
     fn = shard_map(local_step, mesh=mesh,
                    in_specs=(state_specs, batch_specs, P()),
                    out_specs=(state_specs, metric_specs),
@@ -708,3 +791,127 @@ def _opt_specs(optimizer, tcfg: TrainConfig, pspec):
     if tcfg.optimizer == "adamw":
         return opt_lib.AdamState(mu=pspec, nu=pspec, count=P())
     return pspec  # sgd momentum mirrors params
+
+
+class ScheduledTrainStep:
+    """Host-side driver of the adaptive bit budget: a drop-in
+    ``step_fn(state, batch, key)`` whose per-group wire bit-width follows
+    a :class:`~repro.core.policy.BitBudgetController`.
+
+    Design (recompile-on-phase-boundary, NEVER traced bit-width):
+
+      * ONE bits-independent engine skeleton is built up front with
+        ``group_by_rule=True`` — leaves partition by policy RULE index,
+        so the group structure (and every EF-residual shape) is identical
+        for every bits assignment the schedule can produce;
+      * each phase's assignment is materialized into a concrete static
+        ``QuantPolicy`` (``schedule.policy_at``), the skeleton is
+        re-specialized (:func:`specialize_engines` — swaps quantizers,
+        keeps layouts) and compiled into a normal :func:`make_train_step`
+        function, held in an LRU keyed by the bits tuple;
+      * within a phase the compiled step is BIT-IDENTICAL to a static
+        run at that policy (same layouts, same PRNG streams, same single
+        ``pallas_call`` encode); a schedule that never changes bits
+        compiles exactly one engine and reproduces the static run's
+        params stream exactly;
+      * with ``tcfg.collect_stats`` the step emits the per-group
+        ``exchange_stats`` metric, which is folded per schedule entry and
+        fed back to ``controller.observe`` so the next phase's
+        water-filling solve is statistics-driven.
+
+    The step counter is read host-side from ``state.step`` — callers must
+    keep it consistent with the training loop (the launcher does)."""
+
+    def __init__(self, model: LM, mesh, tcfg: TrainConfig, controller,
+                 lr_fn=None, *, aparams=None, max_engines: int = 4):
+        if tcfg.policy is not None:
+            raise ValueError(
+                "ScheduledTrainStep derives the per-phase policy from the "
+                "controller's BitSchedule — leave TrainConfig.policy unset")
+        self.model, self.mesh, self.lr_fn = model, mesh, lr_fn
+        self.controller = controller
+        self.schedule = controller.schedule
+        # skeleton at the ceiling assignment: any valid assignment yields
+        # the same layouts/EF shapes (by-rule grouping), the ceiling just
+        # makes the warning-size accounting conservative
+        base_policy = self.schedule.policy_at(
+            self.schedule.ceil_assignment())
+        self.tcfg = dataclasses.replace(tcfg, policy=base_policy,
+                                        group_by_rule=True)
+        if aparams is None:
+            aparams = jax.eval_shape(model.init, jax.random.key(0))
+        self.aparams = aparams
+        self.skeleton = exchange_engines(model, mesh, self.tcfg,
+                                         aparams=aparams)
+        self.plan = self.skeleton.plan
+        groups = (self.skeleton.fex.layout.groups
+                  if self.skeleton.fused_fsdp
+                  else self.skeleton.pex.layout.groups)
+        self._group_rules = tuple(g.rule_id for g in groups)
+        self._group_sizes = tuple(g.size for g in groups)
+        if self.controller.group_sizes is None:
+            sizes = [0] * self.schedule.n_entries
+            for rid, size in zip(self._group_rules, self._group_sizes):
+                sizes[rid] += size
+            self.controller.group_sizes = tuple(sizes)
+        self.max_engines = max(1, int(max_engines))
+        self._cache: "OrderedDict[Tuple[Optional[int], ...], Any]" = \
+            OrderedDict()
+        self.last_assignment: Optional[Tuple[Optional[int], ...]] = None
+
+    @property
+    def init_config(self) -> TrainConfig:
+        """TrainConfig to ``init_state`` with: by-rule grouping + a
+        concrete schedule policy, so EF buffers come out with the (bits-
+        invariant) shapes every phase's compiled step expects."""
+        return self.tcfg
+
+    @property
+    def decisions(self):
+        return self.controller.decisions
+
+    def step_fn(self, assignment) -> Any:
+        """The compiled step function for one bits assignment (LRU'd)."""
+        key = tuple(assignment)
+        if key in self._cache:
+            self._cache.move_to_end(key)
+            return self._cache[key]
+        policy = self.schedule.policy_at(key)
+        eng = specialize_engines(self.skeleton, policy)
+        fn, _ = make_train_step(
+            self.model, self.mesh,
+            dataclasses.replace(self.tcfg, policy=policy), self.lr_fn,
+            aparams=self.aparams, engines=eng)
+        self._cache[key] = fn
+        while len(self._cache) > self.max_engines:
+            self._cache.popitem(last=False)
+        return fn
+
+    def entry_stats(self, group_stats) -> Tuple[Dict[str, float], ...]:
+        """Fold the (n_groups, 3) ``exchange_stats`` metric into one row
+        per schedule entry (size-weighted means for sigma_sq/clip_frac,
+        summed ef_norm_sq — fsdp splits one rule into sharded +
+        replicated groups)."""
+        g = np.asarray(jax.device_get(group_stats), dtype=np.float64)
+        n = self.schedule.n_entries
+        acc, w = np.zeros((n, 3)), np.zeros(n)
+        for rid, size, row in zip(self._group_rules, self._group_sizes, g):
+            acc[rid, 0] += row[0] * size
+            acc[rid, 1] += row[1] * size
+            acc[rid, 2] += row[2]
+            w[rid] += size
+        nz = w > 0
+        acc[nz, 0] /= w[nz]
+        acc[nz, 1] /= w[nz]
+        return tuple({"sigma_sq": float(r[0]), "clip_frac": float(r[1]),
+                      "ef_norm_sq": float(r[2])} for r in acc)
+
+    def __call__(self, state: TrainState, batch, key):
+        step = int(state.step)
+        assignment = self.controller.assignment_at(step)
+        self.last_assignment = assignment
+        state, metrics = self.step_fn(assignment)(state, batch, key)
+        if "exchange_stats" in metrics:
+            self.controller.observe(
+                self.entry_stats(metrics["exchange_stats"]))
+        return state, metrics

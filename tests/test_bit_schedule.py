@@ -1,0 +1,297 @@
+"""Adaptive bit budget: schedule grammar + controller unit tests, frozen-
+schedule bit-identity against the equivalent static policy (replicated
+flat / two-level / fsdp, with EF, 8 fake devices), EF-residual carry
+across a bits change, and the committed BENCH_convergence.json gate."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.core import QuantConfig, QuantPolicy
+from repro.core.policy import BitBudgetController, BitRamp, BitSchedule
+from repro.data import SyntheticLM
+from repro.models import LM
+from repro.optim.schedule import constant_lr
+from repro.train import TrainConfig, make_train_step
+from repro.train.step import ScheduledTrainStep, init_state
+
+jax.config.update("jax_platform_name", "cpu")
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_devices(body, n=8):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(body)],
+                         env=env, capture_output=True, text=True,
+                         timeout=1200)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+class TestGrammar:
+    def test_ramp_parse_and_describe(self):
+        s = BitSchedule.parse("embed=orq@5..3,norm|bias=fp,default=orq@4..1")
+        assert s.n_entries == 3
+        emb, nb, dflt = s.items
+        assert isinstance(emb, BitRamp) and (emb.hi, emb.lo) == (5, 3)
+        assert isinstance(nb, QuantConfig) and nb.name == "fp"
+        assert isinstance(dflt, BitRamp) and (dflt.hi, dflt.lo) == (4, 1)
+        assert not s.is_static
+        assert BitSchedule.parse(s.describe()).describe() == s.describe()
+
+    def test_constant_shorthand_is_static(self):
+        s = BitSchedule.parse("default=orq@4")
+        (r,) = s.items
+        assert (r.hi, r.lo) == (4, 4) and s.is_static
+
+    def test_hi_above_kernel_level_tile_rejected(self):
+        # 6 bits -> s=33 levels overflows the fused kernels' 32-lane
+        # level tile (LEVEL_PAD): must fail at parse, not inside pallas
+        with pytest.raises(ValueError, match="<= 5"):
+            BitSchedule.parse("default=orq@6..2")
+
+    def test_inverted_and_zero_ramps_rejected(self):
+        with pytest.raises(ValueError):
+            BitSchedule.parse("default=orq@2..4")
+        with pytest.raises(ValueError):
+            BitSchedule.parse("default=orq@4..0")
+
+    def test_assignment_and_materialization(self):
+        s = BitSchedule.parse("norm=fp,default=orq@5..1", bucket_size=512)
+        assert s.assignment(0, 100) == (None, 5)
+        assert s.assignment(99, 100) == (None, 1)
+        assert s.ceil_assignment() == (None, 5)
+        assert s.floor_assignment() == (None, 1)
+        hi = s.policy_at((None, 5))
+        lo = s.policy_at((None, 1))
+        assert hi.default.name == "orq-17" and hi.default.bucket_size == 512
+        assert lo.default.name == "minmax2"   # b=1 maps to minmax2
+        assert hi.rules[0].cfg.name == "fp"
+        with pytest.raises(ValueError, match="length"):
+            s.policy_at((None, 5, 4))
+
+    def test_phases_dedupe(self):
+        s = BitSchedule.parse("default=orq@4..3")
+        ph = s.phases(100, 10)
+        assert ph[0] == (0, (4,)) and ph[-1][1] == (3,)
+        assert len(ph) == 2   # only distinct assignments survive
+
+
+_NAME_BITS = {"minmax2": 1, "orq-3": 2, "orq-5": 3, "orq-9": 4, "orq-17": 5}
+
+
+def _bit_cost(sizes):
+    """cost_fn pricing a phase policy at bits-proportional bytes."""
+    def fn(policy):
+        cfgs = [r.cfg for r in policy.rules] + [policy.default]
+        return sum(_NAME_BITS.get(c.name, 0) * n / 8.0
+                   for c, n in zip(cfgs, sizes))
+    return fn
+
+
+class TestController:
+    def test_deterministic_without_budget(self):
+        s = BitSchedule.parse("norm=fp,default=orq@5..1")
+        ctl = BitBudgetController(s, 100, resolve_every=25)
+        assert ctl.assignment_at(0) == s.assignment(0, 100)
+        assert ctl.assignment_at(10) == ctl.assignment_at(0)   # same phase
+        assert ctl.assignment_at(99) == s.assignment(75, 100)  # phase start
+        assert all(not d["stats_driven"] for d in ctl.decisions)
+
+    def test_water_fill_respects_budget(self):
+        s = BitSchedule.parse("embed=orq@5..1,default=orq@5..1")
+        sizes = (1000, 1000)
+        # budget only fits ~6 total bits across the two entries at phase 0
+        ctl = BitBudgetController(s, 100, resolve_every=50,
+                                  dcn_budget_bytes=6 * 1000 / 8.0,
+                                  group_sizes=sizes,
+                                  cost_fn=_bit_cost(sizes))
+        a = ctl.assignment_at(0)
+        assert sum(a) <= 6 and all(1 <= b <= 5 for b in a)
+        est = ctl.decisions[0]["est_dcn_bytes"]
+        assert est <= 6 * 1000 / 8.0
+
+    def test_water_fill_follows_observed_variance(self):
+        s = BitSchedule.parse("embed=orq@5..1,default=orq@5..1")
+        sizes = (1000, 1000)
+        ctl = BitBudgetController(s, 100, resolve_every=50,
+                                  dcn_budget_bytes=5 * 1000 / 8.0,
+                                  group_sizes=sizes,
+                                  cost_fn=_bit_cost(sizes))
+        ctl.observe([{"sigma_sq": 10.0, "clip_frac": 0.0, "ef_norm_sq": 0.0},
+                     {"sigma_sq": 0.01, "clip_frac": 0.0, "ef_norm_sq": 0.0}])
+        a = ctl.assignment_at(0)
+        assert a[0] > a[1], a   # noisier entry wins the contested bits
+        assert ctl.decisions[0]["stats_driven"]
+
+    def test_blocked_entry_does_not_starve_smaller_one(self):
+        # big entry's next bit never fits; the small entry must still fill
+        s = BitSchedule.parse("embed=orq@5..1,default=orq@5..1")
+        sizes = (100, 10000)
+        ctl = BitBudgetController(s, 100, resolve_every=50,
+                                  dcn_budget_bytes=(10000 + 5 * 100) / 8.0,
+                                  group_sizes=sizes,
+                                  cost_fn=_bit_cost(sizes))
+        a = ctl.assignment_at(0)
+        assert a[1] == 1 and a[0] == 5, a
+
+    def test_observe_validates_length(self):
+        s = BitSchedule.parse("norm=fp,default=orq@5..1")
+        ctl = BitBudgetController(s, 100)
+        with pytest.raises(ValueError):
+            ctl.observe([{"sigma_sq": 1.0, "clip_frac": 0.0,
+                          "ef_norm_sq": 0.0}])
+
+
+def _setup(seed=0):
+    cfg = get_smoke_config("lm-100m")
+    model = LM(cfg)
+    mesh = jax.make_mesh((1,), ("data",))
+    data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=32, batch_size=8,
+                       seed=seed)
+    return model, mesh, data
+
+
+def _run_scheduled(spec, steps, resolve_every, ef_reset_at=None):
+    model, mesh, data = _setup()
+    ctl = BitBudgetController(BitSchedule.parse(spec, bucket_size=512),
+                              steps, resolve_every=resolve_every)
+    tcfg = TrainConfig(mode="replicated", error_feedback=True)
+    step_fn = ScheduledTrainStep(model, mesh, tcfg, ctl, constant_lr(0.05))
+    state = init_state(model, mesh, step_fn.init_config, jax.random.key(0))
+    seen = []
+    for i in range(steps):
+        if ef_reset_at is not None and i == ef_reset_at:
+            state = state._replace(
+                ef=jax.tree_util.tree_map(lambda x: x * 0.0, state.ef))
+        state, m = step_fn(state, data.batch(i), jax.random.key(7))
+        seen.append(step_fn.last_assignment)
+    return state, seen, step_fn
+
+
+class TestScheduledStep:
+    def test_frozen_schedule_bit_identical_to_static(self):
+        """A constant schedule compiles ONE engine and reproduces the
+        static policy's params stream exactly (same PRNG, same kernels)."""
+        model, mesh, data = _setup()
+        steps = 6
+        sstate = init_state(
+            model, mesh,
+            TrainConfig(policy=QuantPolicy.parse(
+                "norm|bias=fp,default=orq-9", bucket_size=512),
+                mode="replicated", error_feedback=True,
+                group_by_rule=True),
+            jax.random.key(0))
+        step_fn, _ = make_train_step(
+            model, mesh,
+            TrainConfig(policy=QuantPolicy.parse(
+                "norm|bias=fp,default=orq-9", bucket_size=512),
+                mode="replicated", error_feedback=True,
+                group_by_rule=True),
+            constant_lr(0.05))
+        for i in range(steps):
+            sstate, _ = step_fn(sstate, data.batch(i), jax.random.key(7))
+        dstate, seen, sched_fn = _run_scheduled(
+            "norm|bias=fp,default=orq@4", steps, resolve_every=2)
+        assert set(seen) == {(None, 4)}
+        assert len(sched_fn._cache) == 1
+        for a, b in zip(jax.tree_util.tree_leaves(sstate.params),
+                        jax.tree_util.tree_leaves(dstate.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_ef_carries_across_bits_change(self):
+        """EF residuals survive a phase boundary at bits-invariant shapes
+        — and actually matter: zeroing them at the boundary changes the
+        params stream."""
+        steps, boundary = 8, 4
+        carried, seen, _ = _run_scheduled("norm|bias=fp,default=orq@4..2",
+                                          steps, resolve_every=boundary)
+        assert len(set(seen)) > 1, seen   # the bits really changed
+        zeroed, _, _ = _run_scheduled("norm|bias=fp,default=orq@4..2",
+                                      steps, resolve_every=boundary,
+                                      ef_reset_at=boundary)
+        c = jax.tree_util.tree_leaves(carried.params)
+        z = jax.tree_util.tree_leaves(zeroed.params)
+        assert all(np.isfinite(np.asarray(x)).all() for x in c)
+        assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+                   for a, b in zip(c, z))
+        # residuals after the boundary are live, not silently zeroed
+        assert any(float(np.abs(np.asarray(e)).max()) > 0
+                   for e in jax.tree_util.tree_leaves(carried.ef))
+
+
+def test_frozen_schedule_matches_static_multi_device():
+    """Replicated flat (8), two-level (2x4) and fsdp (8): the frozen
+    schedule's params after 3 EF steps equal the static policy's."""
+    run_devices("""
+import jax, numpy as np
+from repro.configs.base import get_smoke_config
+from repro.core import QuantPolicy
+from repro.core.policy import BitBudgetController, BitSchedule
+from repro.data import SyntheticLM
+from repro.models import LM
+from repro.optim.schedule import constant_lr
+from repro.train import TrainConfig, make_train_step
+from repro.train.step import ScheduledTrainStep, init_state
+
+cfg = get_smoke_config("lm-100m")
+model = LM(cfg)
+data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=32, batch_size=8,
+                   seed=3)
+SPEC_S = "norm|bias=fp,default=orq-9"
+SPEC_D = "norm|bias=fp,default=orq@4"
+for mode, hier, shape, axes in [("replicated", "flat", (8,), ("data",)),
+                                ("replicated", "two_level", (2, 4),
+                                 ("pod", "data")),
+                                ("fsdp", "flat", (8,), ("data",))]:
+    mesh = jax.make_mesh(shape, axes)
+    tcfg = TrainConfig(policy=QuantPolicy.parse(SPEC_S, bucket_size=512),
+                       mode=mode, hierarchy=hier, error_feedback=True,
+                       group_by_rule=True)
+    state = init_state(model, mesh, tcfg, jax.random.key(0))
+    step_fn, _ = make_train_step(model, mesh, tcfg, constant_lr(0.05))
+    for i in range(3):
+        state, _ = step_fn(state, data.batch(i), jax.random.key(7))
+
+    ctl = BitBudgetController(BitSchedule.parse(SPEC_D, bucket_size=512),
+                              3, resolve_every=1)
+    dcfg = TrainConfig(mode=mode, hierarchy=hier, error_feedback=True)
+    sched_fn = ScheduledTrainStep(model, mesh, dcfg, ctl, constant_lr(0.05))
+    dstate = init_state(model, mesh, sched_fn.init_config, jax.random.key(0))
+    for i in range(3):
+        dstate, _ = sched_fn(dstate, data.batch(i), jax.random.key(7))
+    assert len(sched_fn._cache) == 1
+    for a, b in zip(jax.tree_util.tree_leaves(state.params),
+                    jax.tree_util.tree_leaves(dstate.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    print("OK", mode, hier)
+""")
+
+
+def test_bench_convergence_snapshot_gate():
+    """The committed dynamic-vs-static snapshot certifies the ISSUE gate:
+    dynamic loss <= best static at strictly fewer total DCN bytes."""
+    path = os.path.join(ROOT, "benchmarks", "BENCH_convergence.json")
+    with open(path) as f:
+        d = json.load(f)
+    assert d["schema"] == 1
+    best = d["gate"]["best_static"]
+    assert best in d["static"]
+    assert d["gate"]["dynamic_loss_le_best_static"] is True
+    assert d["gate"]["dynamic_bytes_lt_best_static"] is True
+    # the booleans must be consistent with the recorded numbers
+    assert (d["dynamic"]["final_loss"]
+            <= d["static"][best]["final_loss"])
+    assert (d["dynamic"]["total_dcn_bytes"]
+            < d["static"][best]["total_dcn_bytes"])
+    assert d["dynamic"]["decisions"], "controller recorded no decisions"

@@ -29,7 +29,7 @@ def _train(quant, ef, steps=30, seed=0):
     cfg = get_smoke_config("lm-100m")
     model = LM(cfg)
     mesh = jax.make_mesh((1,), ("data",))
-    tcfg = TrainConfig(quant=QuantConfig(name=quant, bucket_size=512),
+    tcfg = TrainConfig(policy=QuantConfig(name=quant, bucket_size=512),
                        mode="replicated", error_feedback=ef)
     state = init_state(model, mesh, tcfg, jax.random.key(seed))
     step_fn, _ = make_train_step(model, mesh, tcfg, constant_lr(0.05))

@@ -191,7 +191,7 @@ class TestDonation:
         cfg = get_smoke_config("lm-100m")
         model = LM(cfg)
         mesh = jax.make_mesh((1,) * len(mesh_axes), mesh_axes)
-        tcfg = TrainConfig(quant=QuantConfig(name="orq-9", bucket_size=512),
+        tcfg = TrainConfig(policy=QuantConfig(name="orq-9", bucket_size=512),
                            mode=mode)
         state = init_state(model, mesh, tcfg, jax.random.key(0))
         step_fn, _ = make_train_step(model, mesh, tcfg, constant_lr(0.05))

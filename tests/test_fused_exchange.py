@@ -345,7 +345,7 @@ def test_train_step_collective_count_o1():
 
     closed = {}
     for fused in (True, False):
-        tcfg = TrainConfig(quant=QuantConfig(name="orq-9", bucket_size=512),
+        tcfg = TrainConfig(policy=QuantConfig(name="orq-9", bucket_size=512),
                            mode="replicated", fused_exchange=fused)
         state = init_state(model, mesh, tcfg, jax.random.key(0))
         step_fn, _ = make_train_step(model, mesh, tcfg, constant_lr(0.05))
@@ -354,7 +354,7 @@ def test_train_step_collective_count_o1():
 
     # fused: exactly one payload + one level-table all_to_all (phase 1)
     # and two all_gathers (phase 2 re-quant), whatever the leaf count
-    tcfg = TrainConfig(quant=QuantConfig(name="orq-9", bucket_size=512),
+    tcfg = TrainConfig(policy=QuantConfig(name="orq-9", bucket_size=512),
                        mode="replicated", fused_exchange=True)
     meta = expected_train_collectives(
         exchange_engines(model, mesh, tcfg), mesh, tcfg.pipeline_chunks)

@@ -129,20 +129,18 @@ class TestResolution:
             {"embed": {"name": "qsgd-5", "bucket_size": 64}})
         assert f.rules[0].cfg == QuantConfig(name="qsgd-5", bucket_size=64)
 
-    def test_trainconfig_quant_policy_conflict_warns(self):
-        import warnings as W
-
+    def test_trainconfig_quant_alias_removed(self):
         from repro.train import TrainConfig
 
-        with W.catch_warnings():
-            W.simplefilter("error")
-            # alias alone: no warning
-            TrainConfig(quant=QuantConfig(name="orq-9")).resolved_policy()
-            # policy alone: no warning
-            TrainConfig(policy="orq-9").resolved_policy()
-        with pytest.warns(DeprecationWarning, match="ignored"):
-            TrainConfig(policy="orq-9",
-                        quant=QuantConfig(name="terngrad")).resolved_policy()
+        # the historical uniform alias fails loudly with a pointer at
+        # policy= (QuantConfig rides policy= directly for uniform cases)
+        with pytest.raises(ValueError, match="policy="):
+            TrainConfig(quant=QuantConfig(name="orq-9"))
+        p = TrainConfig(
+            policy=QuantConfig(name="orq-9")).resolved_policy()
+        assert p.is_uniform and p.default.name == "orq-9"
+        # unset policy resolves to uniform fp
+        assert TrainConfig().resolved_policy().default.name == "fp"
 
     def test_coerce(self):
         p = QuantPolicy.parse("norm=fp, default=orq-9")
@@ -479,7 +477,7 @@ def test_train_step_collectives_o_groups():
     assert mixed == (2, 2), mixed       # one quantized group, fp is a psum
 
     uniform_policy = counts(TrainConfig(policy="orq-9", mode="replicated"))
-    uniform_alias = counts(TrainConfig(
-        quant=QuantConfig(name="orq-9", bucket_size=2048),
+    uniform_cfg = counts(TrainConfig(
+        policy=QuantConfig(name="orq-9", bucket_size=2048),
         mode="replicated"))
-    assert uniform_policy == uniform_alias == (2, 2)
+    assert uniform_policy == uniform_cfg == (2, 2)

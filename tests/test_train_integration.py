@@ -40,7 +40,7 @@ def _train_single(quant_name: str, steps: int = 30):
     cfg = get_smoke_config("lm-100m")
     model = LM(cfg)
     mesh = jax.make_mesh((1,), ("data",))
-    tcfg = TrainConfig(quant=QuantConfig(name=quant_name, bucket_size=512),
+    tcfg = TrainConfig(policy=QuantConfig(name=quant_name, bucket_size=512),
                        mode="replicated")
     state = init_state(model, mesh, tcfg, jax.random.key(0))
     step_fn, _ = make_train_step(model, mesh, tcfg, constant_lr(0.05))
@@ -87,7 +87,7 @@ data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=32, batch_size=8,
                    seed=3)
 
 def run(mode, quant):
-    tcfg = TrainConfig(quant=QuantConfig(name=quant, bucket_size=512),
+    tcfg = TrainConfig(policy=QuantConfig(name=quant, bucket_size=512),
                        mode=mode)
     state = init_state(model, mesh, tcfg, jax.random.key(0))
     step_fn, plan = make_train_step(model, mesh, tcfg, constant_lr(0.05))
@@ -127,7 +127,7 @@ from repro.train.step import init_state
 cfg = get_smoke_config("whisper-base")
 model = LM(cfg)
 mesh = jax.make_mesh((4, 2), ("data", "model"))
-tcfg = TrainConfig(quant=QuantConfig(name="orq-5", bucket_size=256),
+tcfg = TrainConfig(policy=QuantConfig(name="orq-5", bucket_size=256),
                    mode="fsdp")
 state = init_state(model, mesh, tcfg, jax.random.key(0))
 step_fn, _ = make_train_step(model, mesh, tcfg, constant_lr(0.05))
@@ -159,7 +159,7 @@ mesh = jax.make_mesh((4, 2), ("data", "model"))
 for arch in ["mixtral-8x22b", "jamba-v0.1-52b", "rwkv6-3b"]:
     cfg = get_smoke_config(arch)
     model = LM(cfg)
-    tcfg = TrainConfig(quant=QuantConfig(name="terngrad", bucket_size=256),
+    tcfg = TrainConfig(policy=QuantConfig(name="terngrad", bucket_size=256),
                        mode="fsdp")
     state = init_state(model, mesh, tcfg, jax.random.key(0))
     step_fn, _ = make_train_step(model, mesh, tcfg, constant_lr(0.02))
