@@ -125,6 +125,31 @@ def hierarchy_rows(emit, path_sizes, tag: str):
         f"table1_comm/hier_{tag}_dcn_saving", 0.0,
         f"dcn_quant_flat_over_two_level={ratio:.1f}x;"
         f"pass_4x={'yes' if ratio >= 4.0 else 'NO'}"))
+    # temporal tier on top of the spatial one: two_level_async(H) pays the
+    # quantized outer exchange once per H-step window, so the PER-STEP
+    # quantized DCN bytes drop exactly H-fold (the inner fp intra
+    # all-reduce it adds rides the fast ICI links only)
+    for h in (4, 8):
+        st = comm.link_stats(make_quantizer("orq-9", bucket_size=512), n,
+                             n_intra=n_intra, n_inter=n_inter,
+                             two_level=True, sync_every=h)
+        pst, _ = comm.policy_link_stats(policy, path_sizes,
+                                        n_intra=n_intra, n_inter=n_inter,
+                                        two_level=True, sync_every=h)
+        hratio = rows["two_level"]["dcn_q_bytes"] / max(st["dcn_q_bytes"],
+                                                        1.0)
+        emit(csv_row(
+            f"table1_comm/hier_{tag}_async_h{h}", 0.0,
+            f"mesh=2x16x16;dp=pod2*data16;scheme=orq-9;local_steps={h};"
+            f"ici={st['ici_bytes']/2**20:.2f}MiB;"
+            f"dcn={st['dcn_bytes']/2**20:.2f}MiB;"
+            f"dcn_quant={st['dcn_q_bytes']/2**20:.2f}MiB;"
+            f"t_ici={st['ici_bytes']/ICI_BW*1e3:.2f}ms;"
+            f"t_dcn={st['dcn_bytes']/DCN_BW*1e3:.2f}ms;"
+            f"launches={st['launches']:.2f};"
+            f"mixed_policy_dcn_quant={pst['dcn_q_bytes']/2**20:.4f}MiB;"
+            f"dcn_quant_two_level_over_async={hratio:.2f}x;"
+            f"pass_hx={'yes' if 0.9 * h <= hratio <= 1.1 * h else 'NO'}"))
 
 
 def schedule_rows(emit, path_sizes, tag: str):

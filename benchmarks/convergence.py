@@ -17,6 +17,20 @@ at strictly fewer total DCN bytes) is asserted by
 
     PYTHONPATH=src:. python benchmarks/convergence.py --adaptive \
         [--out BENCH_convergence.json] [--steps 120]
+
+TEMPORAL HIERARCHY (``--hier``): the two_level_async H-sweep — REAL
+launcher runs (two_level baseline + H in {1, 2, 4, 8}) on an
+8-fake-device pod2*data4 mesh, each priced through the same
+``policy_link_stats(sync_every=H)`` accounting; merges a "hier" section
+(losses, param digests, bytes/step, gate) into the snapshot. Gate: the
+H=1 digest EQUALS the two_level digest (bit-identity), per-step
+quantized DCN bytes strictly decreasing and tracking 1/H, losses
+finite.
+
+``--check [JSON]`` validates the COMMITTED snapshot without retraining
+(re-derives every priced figure through the live accounting, recomputes
+both gates) — what the CI convergence-bench job and
+``python -m benchmarks.run --check`` run.
 """
 from __future__ import annotations
 
@@ -52,6 +66,13 @@ ACC_WORKERS = 4
 BUCKET = 2048
 ADAPT_STEPS = 120   # the gate horizon; losses are averaged over the tail
 LOSS_TAIL = 5
+
+#: temporal-hierarchy H-sweep (``--hier``): real launcher runs on an
+#: 8-fake-device pod2*data4 mesh, priced on the same per-link accounting
+HIER_POLICY = "norm|bias=fp,default=orq-9"
+HIER_STEPS = 40
+HIER_WINDOWS = [1, 2, 4, 8]
+HIER_INTRA, HIER_INTER = 4, 2
 
 
 def train_once(name: str, steps: int = STEPS, seed: int = 0):
@@ -226,15 +247,214 @@ def adaptive_report(steps: int = ADAPT_STEPS,
     }
 
 
-def main():
+# ------------------------------------------------------- temporal hierarchy
+
+def _hier_dcn_per_step(h: int, path_sizes) -> float:
+    """Quantized-DCN bytes/step of the outer exchange on the pod2*data4
+    reference mesh, amortized over the H-step window — the same
+    ``sync_every`` accounting the launcher's controller cost_fn and the
+    comm_cost benchmark rows use."""
+    policy = QuantPolicy.parse(HIER_POLICY, bucket_size=BUCKET)
+    st, _ = comm.policy_link_stats(policy, path_sizes,
+                                   n_intra=HIER_INTRA, n_inter=HIER_INTER,
+                                   two_level=True, sync_every=h)
+    return st["dcn_q_bytes"]
+
+
+def _hier_launch(hierarchy: str, local_steps: int, steps: int) -> dict:
+    """One REAL launcher run (subprocess: the mesh needs its own 8 fake
+    devices); returns {"final_loss", "params_sha256"}."""
+    import os
+    import subprocess
+    import sys
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as tmp:
+        out = os.path.join(tmp, "metrics.json")
+        cmd = [sys.executable, "-m", "repro.launch.train", "--arch",
+               "lm-100m", "--smoke", "--steps", str(steps), "--batch", "8",
+               "--seq", "16", "--mode", "replicated", "--pods", "2",
+               "--quant", HIER_POLICY, "--error-feedback", "--hierarchy",
+               hierarchy, "--local-steps", str(local_steps),
+               "--log-every", "1", "--metrics-out", out]
+        env = dict(os.environ,
+                   XLA_FLAGS="--xla_force_host_platform_device_count=8",
+                   JAX_PLATFORMS="cpu")
+        env["PYTHONPATH"] = os.pathsep.join(
+            [os.path.join(os.path.dirname(os.path.dirname(
+                os.path.abspath(__file__))), "src")]
+            + env.get("PYTHONPATH", "").split(os.pathsep))
+        subprocess.run(cmd, env=env, check=True, capture_output=True)
+        with open(out) as f:
+            m = json.load(f)
+    tail = [r["loss"] for r in m["history"][-LOSS_TAIL:]]
+    return {"final_loss": round(sum(tail) / len(tail), 6),
+            "params_sha256": m["params_sha256"]}
+
+
+def _hier_gate(hier: dict) -> dict:
+    """Recompute the hier gate booleans from a report section's recorded
+    numbers (shared by the sweep and by ``--check``)."""
+    import math
+    tl = hier["two_level"]
+    runs = hier["async"]
+    hs = sorted(int(h) for h in runs)
+    bytes_by_h = [runs[str(h)]["dcn_bytes_per_step"] for h in hs]
+    ratio_ok = all(
+        0.95 * h <= tl["dcn_bytes_per_step"] / runs[str(h)]
+        ["dcn_bytes_per_step"] <= 1.05 * h for h in hs)
+    return {
+        "h1_bit_identical_to_two_level":
+            runs["1"]["params_sha256"] == tl["params_sha256"],
+        "dcn_bytes_strictly_decreasing":
+            all(a > b for a, b in zip(bytes_by_h, bytes_by_h[1:])),
+        "dcn_ratio_tracks_h": ratio_ok,
+        "losses_finite": all(
+            math.isfinite(r["final_loss"])
+            for r in [tl] + [runs[str(h)] for h in hs]),
+    }
+
+
+def hier_report(steps: int = HIER_STEPS) -> dict:
+    """The H-sweep payload merged into BENCH_convergence.json under
+    "hier": a two_level baseline plus two_level_async at H in
+    ``HIER_WINDOWS``, all REAL launcher runs on the pod2*data4 mesh.
+    The H=1 run must be BIT-identical to two_level (same params digest:
+    the degenerate window resolves to the very same program)."""
+    model, _, _ = _setup()
+    ps = _path_sizes(model)
+    base = _hier_launch("two_level", 1, steps)
+    base["dcn_bytes_per_step"] = _hier_dcn_per_step(1, ps)
+    print(f"  two_level    loss={base['final_loss']:.4f} "
+          f"sha={base['params_sha256'][:12]}")
+    runs = {}
+    for h in HIER_WINDOWS:
+        r = _hier_launch("two_level_async", h, steps)
+        r["dcn_bytes_per_step"] = _hier_dcn_per_step(h, ps)
+        runs[str(h)] = r
+        print(f"  async H={h:<2d}   loss={r['final_loss']:.4f} "
+              f"bytes/step={r['dcn_bytes_per_step']/2**20:.4f}MiB "
+              f"sha={r['params_sha256'][:12]}")
+    hier = {
+        "steps": steps,
+        "policy": HIER_POLICY,
+        "mesh": "pod2*data4",
+        "windows": HIER_WINDOWS,
+        "accounting": {"n_intra": HIER_INTRA, "n_inter": HIER_INTER,
+                       "two_level": True, "metric": "dcn_q_bytes"},
+        "two_level": base,
+        "async": runs,
+    }
+    hier["gate"] = _hier_gate(hier)
+    return hier
+
+
+def check_report(path: str) -> bool:
+    """CI validator for the COMMITTED snapshot — no training: re-derives
+    every priced bytes figure through the live accounting and recomputes
+    both gates from the recorded numbers, so a drifted accounting model,
+    a hand-edited snapshot, or a false gate boolean all fail."""
+    with open(path) as f:
+        d = json.load(f)
+    failures = []
+
+    def expect(cond, msg):
+        if not cond:
+            failures.append(msg)
+
+    expect(d.get("schema") == 1, f"schema != 1: {d.get('schema')}")
+    model, _, _ = _setup()
+    ps = _path_sizes(model)
+    best = d["gate"]["best_static"]
+    expect(best in d["static"], f"best_static {best!r} not recorded")
+    for name, s in d["static"].items():
+        priced = _dcn_per_step(
+            QuantPolicy.parse(s["policy"], bucket_size=d["bucket_size"]),
+            ps)
+        expect(abs(priced - s["dcn_bytes_per_step"]) <= 1e-6 * priced,
+               f"static {name}: recorded bytes/step "
+               f"{s['dcn_bytes_per_step']} != live accounting {priced}")
+        expect(abs(s["total_dcn_bytes"]
+                   - s["dcn_bytes_per_step"] * d["steps"])
+               <= 1e-6 * s["total_dcn_bytes"],
+               f"static {name}: total != per_step * steps")
+    expect(d["dynamic"]["final_loss"] <= d["static"][best]["final_loss"],
+           "adaptive gate: dynamic loss > best static")
+    expect(d["dynamic"]["total_dcn_bytes"]
+           < d["static"][best]["total_dcn_bytes"],
+           "adaptive gate: dynamic bytes >= best static")
+    expect(d["gate"]["dynamic_loss_le_best_static"] is True
+           and d["gate"]["dynamic_bytes_lt_best_static"] is True,
+           "adaptive gate booleans not all true")
+    hier = d.get("hier")
+    expect(hier is not None, "no 'hier' section (run --hier to add it)")
+    if hier is not None:
+        rows = [("two_level", 1, hier["two_level"])] + [
+            (f"async h{h}", int(h), hier["async"][str(h)])
+            for h in sorted(hier["async"], key=int)]
+        for name, h, r in rows:
+            priced = _hier_dcn_per_step(h, ps)
+            expect(abs(priced - r["dcn_bytes_per_step"]) <= 1e-6 * priced,
+                   f"hier {name}: recorded bytes/step "
+                   f"{r['dcn_bytes_per_step']} != live accounting "
+                   f"{priced}")
+        gate = _hier_gate(hier)
+        expect(gate == hier["gate"],
+               f"hier gate drift: recorded {hier['gate']} recomputed "
+               f"{gate}")
+        for k, v in gate.items():
+            expect(v is True, f"hier gate {k} is {v}")
+    for msg in failures:
+        print(f"[check] FAIL: {msg}")
+    print(f"{path}: {'PASS' if not failures else 'FAIL'} "
+          f"({len(failures)} finding(s))")
+    return not failures
+
+
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--adaptive", action="store_true",
                     help="dynamic-vs-static bit budget gate -> JSON")
+    ap.add_argument("--hier", action="store_true",
+                    help="two_level_async H-sweep (REAL launcher runs); "
+                         "merges a 'hier' section into --out")
+    ap.add_argument("--check", nargs="?", const="", default=None,
+                    metavar="JSON",
+                    help="validate a committed snapshot (default: the "
+                         "repo's benchmarks/BENCH_convergence.json) "
+                         "WITHOUT retraining; exit 1 on any failure")
     ap.add_argument("--out", default="BENCH_convergence.json")
     ap.add_argument("--steps", type=int, default=ADAPT_STEPS)
-    args = ap.parse_args()
+    ap.add_argument("--hier-steps", type=int, default=HIER_STEPS)
+    args = ap.parse_args(argv)
+    if args.check is not None:
+        import os
+        path = args.check or os.path.join(
+            os.path.dirname(os.path.abspath(__file__)),
+            "BENCH_convergence.json")
+        raise SystemExit(0 if check_report(path) else 1)
+    if args.hier:
+        import os
+        report = {}
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                report = json.load(f)
+        report["hier"] = hier_report(steps=args.hier_steps)
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=1, sort_keys=True)
+        g = report["hier"]["gate"]
+        ok = all(v is True for v in g.values())
+        print(f"wrote {args.out}; hier gate "
+              f"{'PASS' if ok else 'FAIL'} ({g})")
+        raise SystemExit(0 if ok else 1)
     if args.adaptive:
         report = adaptive_report(steps=args.steps)
+        import os
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                prior = json.load(f)
+            if "hier" in prior:         # keep the H-sweep section
+                report["hier"] = prior["hier"]
         with open(args.out, "w") as f:
             json.dump(report, f, indent=1, sort_keys=True)
         g = report["gate"]

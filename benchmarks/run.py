@@ -1,6 +1,11 @@
 """Benchmark harness: one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig1,table3]
+    PYTHONPATH=src python -m benchmarks.run --check
+
+``--check`` runs every registered self-contained snapshot gate (a
+module's ``--check`` mode validating its COMMITTED baseline without
+re-benchmarking) and exits nonzero when any of them fails.
 
 Prints ``name,us_per_call,derived`` CSV rows.
 """
@@ -24,13 +29,47 @@ MODULES = [
     ("analysis", "benchmarks.analysis"),
 ]
 
+#: (tag, module, argv) snapshot gates ``--check`` runs: each module's
+#: main() must validate its committed artifact with these args and exit
+#: nonzero on failure (the RUN_JSON-style checks that need a fresh
+#: benchmark run first don't belong here — CI drives those per-job)
+CHECKS = [
+    ("table2_convergence", "benchmarks.convergence", ["--check"]),
+]
+
+
+def _run_check(tag: str, modname: str, argv) -> bool:
+    """True iff the module's check passed; a crash counts as a failure."""
+    try:
+        mod = __import__(modname, fromlist=["main"])
+        code = mod.main(argv)
+        return not code
+    except SystemExit as e:  # argparse-style mains exit instead of return
+        return not e.code
+    except Exception:  # noqa: BLE001
+        print(f"# {tag}/--check crashed:", file=sys.stderr)
+        traceback.print_exc()
+        return False
+
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated prefixes of benchmarks to run")
+    ap.add_argument("--check", action="store_true",
+                    help="run every registered snapshot gate instead of "
+                         "benchmarking; exit 1 if any fails")
     args = ap.parse_args(argv)
     only = args.only.split(",") if args.only else None
+
+    if args.check:
+        checks = [(t, m, a) for t, m, a in CHECKS
+                  if not only or any(t.startswith(o) for o in only)]
+        failed = [t for t, m, a in checks if not _run_check(t, m, a)]
+        for t in failed:
+            print(f"# check FAILED: {t}", file=sys.stderr)
+        print(f"# {len(checks) - len(failed)}/{len(checks)} checks passed")
+        sys.exit(1 if failed else 0)
 
     print("name,us_per_call,derived")
 

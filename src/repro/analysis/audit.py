@@ -77,6 +77,16 @@ SCHED_MATRIX: List[Tuple[str, str, tuple, tuple]] = [
     ("fsdp", "flat", (8,), ("data",)),
 ]
 
+#: temporal-hierarchy audit: (local_steps H, pipeline_chunks) legs of the
+#: two_level_async step pair on the 2x4 pod mesh. The INNER step must
+#: carry ZERO wire collectives (the whole point of the time hierarchy:
+#: quantized traffic exists only on DCN axes and only on sync steps) and
+#: the SYNC step must carry exactly the two_level outer-exchange budget.
+ASYNC_MATRIX: List[Tuple[int, int]] = [
+    (4, 1),
+    (4, 3),
+]
+
 
 # ---------------------------------------------------------------------------
 # wire-op bundles (per registered scheme)
@@ -207,10 +217,13 @@ def expected_train_collectives(eng, mesh,
     }
 
 
-def expected_train_pallas(eng, mesh, pipeline_chunks: int) -> Optional[int]:
+def expected_train_pallas(eng, mesh, pipeline_chunks: int, *,
+                          ef: bool = False) -> Optional[int]:
     """Kernel launches one step makes: replicated requant = encode +
     server decode_each + re-encode + worker decode per chunk (4K);
-    fsdp reduce-scatter = encode + decode_mean per chunk (2K)."""
+    fsdp reduce-scatter = encode + decode_mean per chunk (2K). ``ef``
+    adds the replicated error-feedback residual's fused local qdq — one
+    launch per span of every quantized group (``local_qdq_shard``)."""
     if not kernels_enabled():
         return 0
     total = 0
@@ -249,10 +262,12 @@ def expected_train_pallas(eng, mesh, pipeline_chunks: int) -> Optional[int]:
             total += sum(
                 4 * e._pipeline_k(b - a, _axis_prod(mesh, e.axis_names))
                 for a, b in e.spans(m))
+            if ef:
+                total += len(e.spans(m))
     return total
 
 
-def expected_train_draws(eng, mesh) -> int:
+def expected_train_draws(eng, mesh, *, ef: bool = False) -> int:
     """Rounding-stream draws per step: one per quantized encode site
     (worker encode + server re-encode per span when re-quantizing; the
     fsdp reduce-scatter has no server phase). Invariant in K — the
@@ -279,6 +294,10 @@ def expected_train_draws(eng, mesh) -> int:
             if intra:
                 m = hierarchical.intra_chunk_len(m, _axis_prod(mesh, intra))
             draws += len(e.spans(m)) * (2 if e.server_requant else 1)
+            if ef:
+                # the residual's local qdq folds the same span keys and
+                # draws its own stream copy per span
+                draws += len(e.spans(m))
     return draws
 
 
@@ -394,6 +413,95 @@ def sched_bundles(matrix: Optional[Sequence[tuple]] = None
     return out
 
 
+def async_bundles(matrix: Optional[Sequence[tuple]] = None
+                  ) -> List[TraceBundle]:
+    """Trace BOTH programs of the two_level_async step pair.
+
+    The dispatcher (``AsyncTrainStep``) is host-side, so the time
+    hierarchy's central claim lives in two separate jaxprs:
+
+      * ``inner_fn`` — H-1 of every H steps.  May touch NO wire
+        primitive at all (``all_to_all``/``all_gather``/
+        ``reduce_scatter``/``psum_scatter`` forbidden outright), draws
+        no rounding bits, launches no kernels; its only collectives are
+        ``psum`` means on the dp axes (grad pmean over intra, metric
+        pmean over full dp).
+      * ``sync_fn``  — the window's last step.  Must carry EXACTLY the
+        two_level outer-exchange budget derived from the engines as
+        built (fp scatter/gather on intra, quantized a2a + gather on
+        inter only), pinned with the same collective/pallas/prng/
+        materialization rules as the synchronous train legs.
+    """
+    from repro.analysis import stats
+    from repro.optim.schedule import constant_lr
+    from repro.train import TrainConfig, make_train_step
+    from repro.train.step import exchange_engines, init_state
+
+    model, data = _smoke_setup()
+    batch = data.batch(0)
+    shape, axes, policy = (2, 4), ("pod", "data"), MIXED_POLICY
+    out: List[TraceBundle] = []
+    mat_baseline: Dict[int, int] = {}
+    for local_steps, k in (matrix or ASYNC_MATRIX):
+        mesh = jax.make_mesh(shape, axes)
+        tcfg = TrainConfig(policy=QuantPolicy.parse(policy),
+                           mode="replicated", hierarchy="two_level_async",
+                           local_steps=local_steps, error_feedback=True,
+                           pipeline_chunks=k)
+        state = jax.eval_shape(
+            lambda key: init_state(model, mesh, tcfg, key),
+            jax.random.key(0))
+        step_fn, _ = make_train_step(model, mesh, tcfg, constant_lr(0.05))
+        eng = exchange_engines(model, mesh, tcfg)
+        intra = tuple(eng.intra_axes)
+        inter = tuple(eng.inter_axes)
+        full_dp = inter + intra
+        donated = len(jax.tree_util.tree_leaves(state))
+        tag = f"train/async/h{local_steps}/k{k}/{policy}"
+
+        closed = jax.make_jaxpr(step_fn.inner_fn)(state, batch,
+                                                  jax.random.key(1))
+        out.append(TraceBundle(
+            label=f"{tag}/inner", kind="train_step", closed=closed,
+            meta={
+                "expected_collectives": {},
+                # empty allowed-axes list = the primitive may not appear
+                # anywhere: inner steps are wire-silent by construction
+                "exclusive_prims": {
+                    "all_to_all": [],
+                    "all_gather": [],
+                    "reduce_scatter": [],
+                    "psum_scatter": [],
+                    "psum": [ax for ax in (full_dp, intra) if ax],
+                },
+                "expect_pallas_calls": 0,
+                "prng": {"random_bits": 0},
+                "expect_donated": donated,
+            }))
+
+        closed = jax.make_jaxpr(step_fn.sync_fn)(state, batch,
+                                                 jax.random.key(1))
+        meta = expected_train_collectives(eng, mesh, k)
+        meta["expect_donated"] = donated
+        meta["prng"] = {"random_bits":
+                        expected_train_draws(eng, mesh, ef=True)}
+        pallas = expected_train_pallas(eng, mesh, k, ef=True)
+        if pallas is not None:
+            meta["expect_pallas_calls"] = pallas
+        group_elems = max(g.size for g in eng.pex.layout.groups)
+        if k == 1:
+            mat_baseline[local_steps] = stats.sized_outvar_count(
+                closed, group_elems, "float32")
+        elif local_steps in mat_baseline:
+            meta["materialization"] = {"min_elems": group_elems,
+                                       "dtype": "float32",
+                                       "max_count":
+                                           mat_baseline[local_steps]}
+        out.append(TraceBundle(label=f"{tag}/sync", kind="train_step",
+                               closed=closed, meta=meta))
+    return out
+
+
 # ---------------------------------------------------------------------------
 # serve bundles (Engine._fwd at the decode shape)
 # ---------------------------------------------------------------------------
@@ -448,6 +556,7 @@ def build_bundles(*, wire_ops: bool = True, train: bool = True,
     if train:
         bundles += train_bundles()
         bundles += sched_bundles()
+        bundles += async_bundles()
     if serve:
         bundles += serve_bundles()
     return bundles

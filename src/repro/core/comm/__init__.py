@@ -28,7 +28,8 @@ from repro.core.comm.exchange import (GradientExchange, GradLayout,
                                       fused_stats, link_stats,
                                       observed_link_stats, per_leaf_stats,
                                       policy_link_stats, policy_stats)
-from repro.core.comm.hierarchical import (intra_all_gather, intra_chunk_len,
+from repro.core.comm.hierarchical import (HIERARCHIES, INTER_AXIS_NAMES,
+                                          intra_all_gather, intra_chunk_len,
                                           intra_reduce_scatter_mean,
                                           resolve_hierarchy,
                                           shard_valid_mask, split_dp_axes)
@@ -65,6 +66,8 @@ __all__ = [
     "link_stats",
     "policy_link_stats",
     "observed_link_stats",
+    "HIERARCHIES",
+    "INTER_AXIS_NAMES",
     "resolve_hierarchy",
     "split_dp_axes",
     "intra_all_gather",

@@ -737,7 +737,8 @@ def link_stats(qz: Quantizer, n: int, *, n_intra: int, n_inter: int,
                two_level: bool, server_requant: bool = True,
                sharded: bool = False,
                max_chunk_elems: Optional[int] = None,
-               pipeline_chunks: int = 1) -> Dict[str, float]:
+               pipeline_chunks: int = 1,
+               sync_every: int = 1) -> Dict[str, float]:
     """Per-LINK wire bytes one worker transmits for ONE exchange of ``n``
     elements on an (n_inter pods) x (n_intra chips/pod) dp mesh:
 
@@ -755,7 +756,16 @@ def link_stats(qz: Quantizer, n: int, *, n_intra: int, n_inter: int,
     bandwidth constants (ICI_BW / DCN_BW). ``pipeline_chunks`` leaves every
     byte count unchanged (the pipelined schedule moves the same payload)
     but multiplies the quantized launch counts — per-chunk wire units each
-    pay their own collective launch."""
+    pay their own collective launch.
+
+    ``sync_every=H > 1`` prices the temporal ``two_level_async`` hierarchy
+    PER STEP in steady state: the exchange above runs once every H steps
+    (all its bytes and launches amortize /H — the quantized DCN spend
+    drops exactly H-fold), while every step additionally pays one
+    full-precision all-reduce of the full (n,) gradient over the fast
+    intra links (ring: 2(L_i-1)/L_i * 4n bytes, one launch)."""
+    if sync_every < 1:
+        raise ValueError(f"sync_every must be >= 1, got {sync_every}")
     L = n_intra * n_inter
     dcn_frac = (n_inter - 1) / n_inter if n_inter > 1 else 0.0
     if not two_level:
@@ -770,9 +780,10 @@ def link_stats(qz: Quantizer, n: int, *, n_intra: int, n_inter: int,
             launches = eng.collective_launches(n, L)
             total = eng.wire_bytes_per_worker(n, L)
         dcn = total * dcn_frac
-        return {"ici_bytes": total - dcn, "dcn_bytes": dcn,
-                "dcn_q_bytes": 0.0 if qz.is_identity else dcn,
-                "launches": float(launches)}
+        st = {"ici_bytes": total - dcn, "dcn_bytes": dcn,
+              "dcn_q_bytes": 0.0 if qz.is_identity else dcn,
+              "launches": float(launches)}
+        return _amortize_sync(st, n, n_intra, sync_every)
     # two-level: fp intra phases + quantized inter exchange of the shard
     shard = -(-n // n_intra)
     ici = 4.0 * n * (n_intra - 1) / n_intra        # intra reduce-scatter
@@ -790,20 +801,37 @@ def link_stats(qz: Quantizer, n: int, *, n_intra: int, n_inter: int,
         launches += 1
     launches += l_i
     dcn = inter_total * dcn_frac
-    return {"ici_bytes": ici + inter_total - dcn, "dcn_bytes": dcn,
-            "dcn_q_bytes": 0.0 if qz.is_identity else dcn,
-            "launches": float(launches)}
+    st = {"ici_bytes": ici + inter_total - dcn, "dcn_bytes": dcn,
+          "dcn_q_bytes": 0.0 if qz.is_identity else dcn,
+          "launches": float(launches)}
+    return _amortize_sync(st, n, n_intra, sync_every)
+
+
+def _amortize_sync(st: Dict[str, float], n: int, n_intra: int,
+                   sync_every: int) -> Dict[str, float]:
+    """Amortize one exchange's link stats over an H-step inner window and
+    add the per-step full-precision intra all-reduce every inner step
+    pays (two_level_async steady state)."""
+    if sync_every <= 1:
+        return st
+    st = {k: v / sync_every for k, v in st.items()}
+    if n_intra > 1:
+        st["ici_bytes"] += 8.0 * n * (n_intra - 1) / n_intra
+        st["launches"] += 1.0
+    return st
 
 
 def policy_link_stats(policy: QuantPolicy, path_sizes, *, n_intra: int,
                       n_inter: int, two_level: bool, sharded_paths=None,
                       max_chunk_elems: Optional[int] = None,
-                      pipeline_chunks: int = 1
+                      pipeline_chunks: int = 1, sync_every: int = 1
                       ) -> Tuple[Dict[str, float], Tuple[str, ...]]:
     """Aggregate :func:`link_stats` over a policy's groups (the per-link
     sibling of :func:`policy_stats`): returns the summed per-link dict and
     the group labels. Sharded leaves (fsdp reduce-scatter, phase-1 only)
-    are rounded up to a worker multiple like in :func:`policy_stats`."""
+    are rounded up to a worker multiple like in :func:`policy_stats`.
+    ``sync_every`` amortizes over an H-step two_level_async window (see
+    :func:`link_stats`)."""
     L = n_intra * n_inter
     sharded_paths = frozenset(sharded_paths or ())
     groups: Dict[Tuple[QuantConfig, bool], int] = {}
@@ -820,7 +848,8 @@ def policy_link_stats(policy: QuantPolicy, path_sizes, *, n_intra: int,
                         n_inter=n_inter, two_level=two_level,
                         server_requant=cfg.server_requant, sharded=sharded,
                         max_chunk_elems=max_chunk_elems,
-                        pipeline_chunks=pipeline_chunks)
+                        pipeline_chunks=pipeline_chunks,
+                        sync_every=sync_every)
         for k in total:
             total[k] += st[k]
         labels.append(f"{cfg.name}/rs" if sharded else cfg.name)
@@ -828,7 +857,7 @@ def policy_link_stats(policy: QuantPolicy, path_sizes, *, n_intra: int,
 
 
 def observed_link_stats(ex: "PartitionedExchange", *, n_intra: int,
-                        n_inter: int, stats=None
+                        n_inter: int, stats=None, sync_every: int = 1
                         ) -> Tuple[Dict[str, float], Tuple[Dict[str, Any],
                                                            ...]]:
     """Per-link accounting priced from an engine AS BUILT — the observed
@@ -850,7 +879,8 @@ def observed_link_stats(ex: "PartitionedExchange", *, n_intra: int,
                         two_level=two_level,
                         server_requant=eng.server_requant,
                         max_chunk_elems=eng.max_chunk_elems,
-                        pipeline_chunks=eng.pipeline_chunks)
+                        pipeline_chunks=eng.pipeline_chunks,
+                        sync_every=sync_every)
         row: Dict[str, Any] = {"label": g.cfg.name, "size": g.size,
                                "rule_id": g.rule_id, **st}
         if stats is not None:

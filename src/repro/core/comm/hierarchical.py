@@ -43,17 +43,28 @@ from repro.core.comm.collectives import _names, axis_size
 # multi-pod convention (launch/mesh.py: ("pod", "data", "model")).
 INTER_AXIS_NAMES: Tuple[str, ...] = ("pod",)
 
-HIERARCHIES = ("flat", "two_level", "auto")
+HIERARCHIES = ("flat", "two_level", "two_level_async", "auto")
 
 
-def resolve_hierarchy(hierarchy: str, dp_axes) -> str:
-    """'flat' or 'two_level' for a dp axis tuple; 'auto' picks two_level
-    whenever the dp mesh has >= 2 axes (i.e. a pod axis to split off)."""
+def resolve_hierarchy(hierarchy: str, dp_axes, local_steps: int = 1) -> str:
+    """'flat', 'two_level' or 'two_level_async' for a dp axis tuple; 'auto'
+    picks two_level whenever the dp mesh has >= 2 axes (i.e. a pod axis to
+    split off) — never the temporal variant, which changes training
+    semantics and must be opted into explicitly.
+
+    ``two_level_async`` with ``local_steps <= 1`` resolves to
+    ``two_level``: an H=1 window syncs on every step, which IS the spatial
+    hierarchy — routing it onto the literal two_level code path makes the
+    flat≡H=1 bit-identity hold by construction, the same way a single-pod
+    two_level IS flat.
+    """
     if hierarchy not in HIERARCHIES:
         raise ValueError(
             f"hierarchy must be one of {HIERARCHIES}, got {hierarchy!r}")
     if hierarchy == "auto":
         return "two_level" if len(tuple(dp_axes)) >= 2 else "flat"
+    if hierarchy == "two_level_async" and local_steps <= 1:
+        return "two_level"
     return hierarchy
 
 

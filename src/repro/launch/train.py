@@ -27,7 +27,7 @@ import time
 import jax
 import numpy as np
 
-from repro.checkpoint import save_checkpoint
+from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.configs.base import get_config, get_smoke_config, list_archs
 from repro.core import (BitBudgetController, BitSchedule, QuantPolicy,
                         all_methods, comm)
@@ -89,11 +89,26 @@ def main(argv=None):
     ap.add_argument("--mode", default="replicated",
                     choices=["replicated", "fsdp"])
     ap.add_argument("--hierarchy", default="auto",
-                    choices=["flat", "two_level", "auto"],
+                    choices=list(comm.HIERARCHIES),
                     help="two_level runs the quantized exchange only over "
                          "the slow inter-pod (DCN) axis after a full-"
                          "precision intra-pod mean; auto picks two_level "
-                         "whenever the dp mesh has >= 2 axes")
+                         "whenever the dp mesh has >= 2 axes; "
+                         "two_level_async additionally runs --local-steps "
+                         "inner steps synced only over the fast intra "
+                         "axis between quantized outer syncs of the "
+                         "parameter delta (DiLoCo-style; needs "
+                         "--pods >= 2 and replicated mode)")
+    ap.add_argument("--local-steps", type=int, default=1,
+                    help="two_level_async window H: inner steps per "
+                         "quantized outer sync (H=1 is bit-identical to "
+                         "two_level)")
+    ap.add_argument("--outer-optimizer", default="nesterov",
+                    choices=["nesterov", "sgd"],
+                    help="outer optimizer applied to the window's "
+                         "parameter delta at sync steps")
+    ap.add_argument("--outer-lr", type=float, default=0.7)
+    ap.add_argument("--outer-momentum", type=float, default=0.9)
     ap.add_argument("--pods", type=int, default=1,
                     help="leading pod axis size of the host mesh (>1 "
                          "builds the multi-pod ('pod','data','model') "
@@ -113,9 +128,29 @@ def main(argv=None):
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
-    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--checkpoint", default=None,
+                    help="save final PARAMS here (params-only snapshot)")
+    ap.add_argument("--state-checkpoint", default=None,
+                    help="save the FULL TrainState here (params + "
+                         "optimizer + EF residuals + outer state — what "
+                         "--resume restores bit-for-bit, including mid-"
+                         "window two_level_async positions)")
+    ap.add_argument("--checkpoint-at", type=int, default=None,
+                    metavar="STEP",
+                    help="write --state-checkpoint after this step instead "
+                         "of at the end (the run continues): a later "
+                         "--resume of it must reproduce the rest of THIS "
+                         "run bit-for-bit — lr boundaries and data stream "
+                         "key off the absolute step, so the comparison "
+                         "run must use the same --steps")
+    ap.add_argument("--resume", default=None, metavar="STATE_CKPT",
+                    help="restore a --state-checkpoint and continue from "
+                         "its step counter (strict load: the tree must "
+                         "match the configured run exactly)")
     ap.add_argument("--metrics-out", default=None)
     args = ap.parse_args(argv)
+    if args.checkpoint_at is not None and not args.state_checkpoint:
+        ap.error("--checkpoint-at needs --state-checkpoint")
 
     schedule = None
     if args.bit_schedule is not None:
@@ -145,18 +180,25 @@ def main(argv=None):
         mesh = make_host_mesh(model=args.model_parallel, pods=args.pods)
     except ValueError as e:
         ap.error(str(e))
-    tcfg = TrainConfig(
-        policy=policy,
-        mode=args.mode,
-        hierarchy=args.hierarchy,
-        fused_exchange=not args.per_leaf_exchange,
-        error_feedback=args.error_feedback,
-        exchange_chunk_elems=args.exchange_chunk,
-        pipeline_chunks=args.pipeline_chunks,
-        # the water-filling solve is statistics-driven; the pure ramp
-        # needs no feed, so skip the per-step stats fetch without it
-        collect_stats=(schedule is not None
-                       and args.bit_budget is not None))
+    try:
+        tcfg = TrainConfig(
+            policy=policy,
+            mode=args.mode,
+            hierarchy=args.hierarchy,
+            local_steps=args.local_steps,
+            outer_optimizer=args.outer_optimizer,
+            outer_lr=args.outer_lr,
+            outer_momentum=args.outer_momentum,
+            fused_exchange=not args.per_leaf_exchange,
+            error_feedback=args.error_feedback,
+            exchange_chunk_elems=args.exchange_chunk,
+            pipeline_chunks=args.pipeline_chunks,
+            # the water-filling solve is statistics-driven; the pure ramp
+            # needs no feed, so skip the per-step stats fetch without it
+            collect_stats=(schedule is not None
+                           and args.bit_budget is not None))
+    except ValueError as e:
+        ap.error(str(e))
     lr_fn = step_decay(args.lr, [args.steps // 2, 3 * args.steps // 4])
     controller = None
     if schedule is not None:
@@ -169,11 +211,18 @@ def main(argv=None):
         # benchmarks report, from the engines AS BUILT (shared path)
         n_intra = max(1, step_fn.skeleton.n_intra)
         n_inter = max(1, step_fn.plan.n_dp // n_intra)
+        # two_level_async amortizes the outer exchange over the H-step
+        # window — the controller budgets the same per-step DCN spend the
+        # benchmarks report
+        sync_every = (args.local_steps if comm.resolve_hierarchy(
+            args.hierarchy, step_fn.plan.dp_axes,
+            args.local_steps) == "two_level_async" else 1)
 
         def cost_fn(phase_policy):
             eng = specialize_engines(step_fn.skeleton, phase_policy)
             total, _ = comm.observed_link_stats(
-                eng.pex, n_intra=n_intra, n_inter=n_inter)
+                eng.pex, n_intra=n_intra, n_inter=n_inter,
+                sync_every=sync_every)
             return total["dcn_q_bytes"]
 
         controller.cost_fn = cost_fn
@@ -186,11 +235,25 @@ def main(argv=None):
     data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=args.seq,
                        batch_size=args.batch, seed=args.seed)
 
+    start = 0
+    if args.resume:
+        # strict full-state load against the freshly built state's tree:
+        # params + optimizer + EF residuals + outer anchor/momentum all
+        # round-trip, so a mid-window two_level_async run reproduces its
+        # next outer sync bit-for-bit
+        state, _ = load_checkpoint(args.resume, like=state)
+        start = int(state.step)
+        print(f"resumed {args.resume} at step {start}")
     history = []
     t0 = time.time()
-    for i in range(args.steps):
+    for i in range(start, args.steps):
         batch = data.batch(i)
         state, metrics = step_fn(state, batch, jax.random.key(args.seed))
+        if args.state_checkpoint and args.checkpoint_at == i + 1:
+            save_checkpoint(args.state_checkpoint, state,
+                            step=int(state.step))
+            print(f"state checkpoint -> {args.state_checkpoint} "
+                  f"at step {i + 1}")
         if i % args.log_every == 0 or i == args.steps - 1:
             loss = float(metrics["loss"])
             row = {"step": i, "loss": loss,
@@ -203,7 +266,7 @@ def main(argv=None):
                     "fp" if b is None else str(b) for b in row["bits"])
             history.append(row)
             print(f"step {i:5d} loss {loss:.4f}{bits} "
-                  f"({(time.time()-t0)/(i+1):.2f}s/step)")
+                  f"({(time.time()-t0)/(i-start+1):.2f}s/step)")
     # bit-level fingerprint of the final parameters: two runs of an
     # exchange schedule that is supposed to be bit-identical (e.g.
     # --pipeline-chunks K vs 1) must print the same digest
@@ -213,6 +276,9 @@ def main(argv=None):
         save_checkpoint(args.checkpoint, state.params,
                         step=int(state.step))
         print("checkpoint ->", args.checkpoint)
+    if args.state_checkpoint and args.checkpoint_at is None:
+        save_checkpoint(args.state_checkpoint, state, step=int(state.step))
+        print("state checkpoint ->", args.state_checkpoint)
     if args.metrics_out:
         out = {"history": history, "params_sha256": digest}
         if controller is not None:

@@ -1,5 +1,6 @@
-from repro.train.state import TrainState
-from repro.train.step import ShardingPlan, TrainConfig, make_train_step, plan_sharding
+from repro.train.state import OuterState, TrainState
+from repro.train.step import (AsyncTrainStep, ShardingPlan, TrainConfig,
+                              make_train_step, plan_sharding)
 
-__all__ = ["TrainState", "TrainConfig", "make_train_step", "plan_sharding",
-           "ShardingPlan"]
+__all__ = ["TrainState", "OuterState", "TrainConfig", "AsyncTrainStep",
+           "make_train_step", "plan_sharding", "ShardingPlan"]

@@ -6,9 +6,28 @@ from typing import Any, NamedTuple
 import jax.numpy as jnp
 
 
+class OuterState(NamedTuple):
+    """Outer-optimizer state of the temporal two_level_async hierarchy.
+
+    ``anchor`` is the globally agreed parameter tree the current H-step
+    inner window started from — the outer pseudo-gradient is
+    ``anchor - local_params`` at the window's end, and every worker holds
+    the identical anchor (it is only rewritten at sync steps from the
+    quantized all-reduce's identical output). ``mom`` is the outer
+    SGD-momentum/Nesterov buffer, params-shaped f32, equally replicated.
+    """
+    anchor: Any                 # params-shaped window start (replicated)
+    mom: Any                    # params-shaped f32 outer momentum
+
+
 class TrainState(NamedTuple):
     params: Any                 # f32 master weights (ZeRO-3 sharded slices
-                                # in fsdp mode; replicated otherwise)
+                                # in fsdp mode; replicated otherwise; in
+                                # two_level_async mode each leaf carries a
+                                # leading worker axis — inner steps make
+                                # params pod-divergent, and the stacked
+                                # layout keeps that divergence honest in
+                                # shardings, checkpoints and digests)
     opt: Any                    # optimizer state, sharded like params
     step: jnp.ndarray           # scalar int32
     ef: Any = None              # error-feedback residuals (beyond-paper;
@@ -23,3 +42,5 @@ class TrainState(NamedTuple):
                                 # intra shard in two-level mode) —
                                 # checkpointed and donated with the rest
                                 # of the state.
+    outer: Any = None           # OuterState in two_level_async mode; None
+                                # for every single-time-scale hierarchy.

@@ -69,7 +69,7 @@ from repro.core import QuantConfig, QuantPolicy, comm
 from repro.models.model import LM
 from repro.optim import optimizers as opt_lib
 from repro.optim.schedule import constant_lr
-from repro.train.state import TrainState
+from repro.train.state import OuterState, TrainState
 from repro.utils.compat import shard_map
 from repro.utils.sharding import (choose_fsdp_dim, dp_axis_names,
                                   spec_dp_dim)
@@ -88,16 +88,34 @@ class TrainConfig:
     policy: Optional[Any] = None
     quant: Any = None               # REMOVED — kept only to fail loudly
     mode: str = "fsdp"              # fsdp | replicated
-    hierarchy: str = "auto"         # flat | two_level | auto: two_level
-                                    # quantizes only over the slow
-                                    # inter-pod ("pod", DCN) axes after a
-                                    # full-precision intra-pod mean —
-                                    # "auto" switches it on whenever the
-                                    # dp mesh has >= 2 axes (see
+    hierarchy: str = "auto"         # flat | two_level | two_level_async |
+                                    # auto: two_level quantizes only over
+                                    # the slow inter-pod ("pod", DCN) axes
+                                    # after a full-precision intra-pod
+                                    # mean — "auto" switches it on
+                                    # whenever the dp mesh has >= 2 axes;
+                                    # two_level_async additionally makes
+                                    # the hierarchy TEMPORAL (see
+                                    # local_steps below and
                                     # core/comm/hierarchical.py)
+    local_steps: int = 1            # two_level_async window H: run H
+                                    # inner optimizer steps synced only
+                                    # over the fast intra (ICI) axes,
+                                    # then ONE quantized outer exchange
+                                    # of the window's parameter delta
+                                    # over the DCN axes feeding the outer
+                                    # optimizer below. H=1 resolves to
+                                    # the literal two_level path
+                                    # (bit-identity by construction).
     optimizer: str = "sgd"          # sgd | adamw  (paper: SGD+momentum 0.9)
     momentum: float = 0.9
     weight_decay: float = 0.0
+    outer_optimizer: str = "nesterov"   # nesterov | sgd — applied to the
+                                        # outer pseudo-gradient
+                                        # (anchor - local params) at sync
+                                        # steps (two_level_async only)
+    outer_lr: float = 0.7           # DiLoCo-style outer step size
+    outer_momentum: float = 0.9
     use_kernels: bool = True
     error_feedback: bool = False    # beyond-paper: EF residual accumulation
                                     # (replicated mode + fused fsdp;
@@ -140,6 +158,31 @@ class TrainConfig:
                 "name, a policy string like 'embed=fp,default=orq-9', or "
                 "a dict); a uniform policy is just "
                 "policy=QuantConfig(name=...)")
+        if self.local_steps < 1:
+            raise ValueError(
+                f"local_steps must be >= 1, got {self.local_steps}")
+        if self.local_steps > 1 and self.hierarchy != "two_level_async":
+            raise ValueError(
+                "local_steps > 1 is the two_level_async inner-window "
+                "length — set hierarchy='two_level_async' (got "
+                f"hierarchy={self.hierarchy!r})")
+        if self.hierarchy == "two_level_async":
+            # the temporal tier rides the fused replicated two-level
+            # machinery; silently falling back to a per-step exchange
+            # would change training semantics, so validation is strict
+            if self.mode != "replicated":
+                raise ValueError(
+                    "hierarchy='two_level_async' needs mode='replicated' "
+                    "(the outer delta exchange rides the fused replicated "
+                    f"engines), got mode={self.mode!r}")
+            if not self.fused_exchange:
+                raise ValueError(
+                    "hierarchy='two_level_async' needs the fused exchange "
+                    "(fused_exchange=True)")
+        if self.outer_optimizer not in ("nesterov", "sgd"):
+            raise ValueError(
+                "outer_optimizer must be 'nesterov' or 'sgd', got "
+                f"{self.outer_optimizer!r}")
 
     def resolved_policy(self) -> QuantPolicy:
         """The effective QuantPolicy (``policy``, else uniform fp)."""
@@ -197,6 +240,17 @@ def _dp_axes(mesh) -> Tuple[str, ...]:
     return dp_axis_names(mesh)
 
 
+def _async_local_steps(tcfg: TrainConfig, dp_axes) -> int:
+    """Effective inner-window length H: > 1 only when the temporal
+    ``two_level_async`` hierarchy is active after resolution (H=1 resolves
+    to the literal ``two_level`` path, so everything below behaves as if
+    the temporal tier didn't exist — the bit-identity anchor)."""
+    if comm.resolve_hierarchy(tcfg.hierarchy, dp_axes,
+                              tcfg.local_steps) == "two_level_async":
+        return tcfg.local_steps
+    return 1
+
+
 def _exchange_axes(tcfg: TrainConfig, dp_axes: Tuple[str, ...], mesh,
                    plan: Optional["ShardingPlan"] = None
                    ) -> Tuple[Tuple[str, ...], Tuple[str, ...], int]:
@@ -207,8 +261,30 @@ def _exchange_axes(tcfg: TrainConfig, dp_axes: Tuple[str, ...], mesh,
     Two-level needs the fused engines (the per-leaf fallbacks keep the
     flat combined-axis exchange): an explicitly requested "two_level" that
     cannot run warns; "auto" falls back silently.
+
+    ``two_level_async`` with H > 1 validates strictly instead of falling
+    back: it needs an inter-pod axis to run the outer sync over, and
+    dropping the sync silently would train the pods independently. When
+    the intra half degenerates (no ``data`` axis, or size 1) the OUTER
+    exchange runs flat over all dp axes — inner steps then sync over
+    nothing, which is plain DiLoCo local SGD.
     """
     flat = (), tuple(dp_axes), 1
+    if _async_local_steps(tcfg, dp_axes) > 1:
+        if not dp_axes or not any(a in comm.INTER_AXIS_NAMES
+                                  for a in dp_axes):
+            raise ValueError(
+                "hierarchy='two_level_async' with local_steps="
+                f"{tcfg.local_steps} needs an inter-pod dp axis "
+                f"({comm.INTER_AXIS_NAMES}) to run the outer sync over — "
+                f"dp axes are {tuple(dp_axes)}; build the mesh with "
+                "--pods >= 2")
+        intra, inter = comm.split_dp_axes(dp_axes, "two_level")
+        if not intra:
+            return flat
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        n_intra = int(np.prod([sizes[a] for a in intra]))
+        return flat if n_intra <= 1 else (intra, inter, n_intra)
     if not dp_axes:
         return flat
     intra, inter = comm.split_dp_axes(dp_axes, tcfg.hierarchy)
@@ -327,8 +403,12 @@ def _ef_group_sizes(aparams, tcfg: TrainConfig, plan: ShardingPlan,
             intra_axes=intra, n_intra=n_intra, by_rule=tcfg.group_by_rule)
         sizes = fex.ef_group_sizes()
         return sizes if any(n is not None for n in sizes) else None
-    if not intra:
+    if not intra and _async_local_steps(tcfg, plan.dp_axes) <= 1:
         return None          # flat replicated EF stays params-shaped
+    # two-level shards — or, in two_level_async mode with a degenerate
+    # intra half (n_intra == 1), full per-worker group buffers: the outer
+    # delta stream only exists at sync steps, so its residuals live in
+    # group-aligned buffers either way, never a params-shaped tree
     pex = comm.PartitionedExchange.build(
         tcfg.resolved_policy(), aparams, inter, paths=plan.paths,
         intra_axes=intra, by_rule=tcfg.group_by_rule)
@@ -337,13 +417,24 @@ def _ef_group_sizes(aparams, tcfg: TrainConfig, plan: ShardingPlan,
 
 
 def init_state(model: LM, mesh, tcfg: TrainConfig, key) -> TrainState:
-    """Initialize TrainState with plan-consistent shardings."""
+    """Initialize TrainState with plan-consistent shardings.
+
+    In ``two_level_async`` mode (H > 1) params/opt leaves are STACKED with
+    a leading worker axis sharded over the dp axes: inner steps make them
+    pod-divergent, and the stacked layout keeps every pod's copy visible
+    to shardings, ``device_get`` and checkpoints (required for bit-exact
+    mid-window resume). The replicated outer anchor/momentum live in
+    ``TrainState.outer``.
+    """
     aparams = jax.eval_shape(model.init, key)
     plan = plan_sharding(model, aparams, mesh)
     optimizer = _make_optimizer(tcfg)
     ef_sizes = _ef_group_sizes(aparams, tcfg, plan, mesh)
     dp_ent = (plan.dp_axes if len(plan.dp_axes) > 1
               else (plan.dp_axes[0] if plan.dp_axes else None))
+    h_async = _async_local_steps(tcfg, plan.dp_axes)
+    if h_async > 1:
+        _exchange_axes(tcfg, plan.dp_axes, mesh, plan)  # strict validation
 
     def build(key):
         params = model.init(key)
@@ -355,15 +446,40 @@ def init_state(model: LM, mesh, tcfg: TrainConfig, key) -> TrainState:
             ef = tuple(None if n is None
                        else jnp.zeros((plan.n_dp * n,), jnp.float32)
                        for n in ef_sizes)
-        elif tcfg.error_feedback and tcfg.mode == "replicated":
+        elif (tcfg.error_feedback and tcfg.mode == "replicated"
+              and h_async <= 1):
             ef = jax.tree_util.tree_map(jnp.zeros_like, params)
         else:
             ef = None
+        if h_async > 1:
+            def stack(t):
+                return jax.tree_util.tree_map(
+                    lambda x: jnp.broadcast_to(x[None],
+                                               (plan.n_dp,) + x.shape), t)
+
+            return TrainState(
+                params=stack(params), opt=stack(optimizer.init(params)),
+                step=jnp.int32(0), ef=ef,
+                outer=OuterState(
+                    anchor=params,
+                    mom=jax.tree_util.tree_map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32),
+                        params)))
         return TrainState(params=params, opt=optimizer.init(params),
                           step=jnp.int32(0), ef=ef)
 
     if tcfg.mode == "replicated":
         out_sh = None
+        if h_async > 1:
+            rep = NamedSharding(mesh, P())
+            stk = NamedSharding(mesh, P(dp_ent))
+            aout = jax.eval_shape(build, key)
+            out_sh = jax.tree_util.tree_map(lambda _: rep, aout)
+            out_sh = out_sh._replace(
+                params=jax.tree_util.tree_map(lambda _: stk, aout.params),
+                opt=jax.tree_util.tree_map(lambda _: stk, aout.opt),
+                ef=(None if aout.ef is None else jax.tree_util.tree_map(
+                    lambda _: stk, aout.ef)))
     else:
         psh = plan.shardings(mesh)
         out_sh = TrainState(params=psh,
@@ -733,6 +849,14 @@ def make_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn=None,
         # replicated mode still runs under shard_map for the dp collectives
         if not dp_axes:
             return jax.jit(local_step, donate_argnums=(0,)), plan
+        if _async_local_steps(tcfg, dp_axes) > 1:
+            # temporal two_level_async hierarchy: H inner steps synced
+            # only over the intra (ICI) axes, then ONE quantized outer
+            # exchange of the window's parameter delta — a two-function
+            # dispatcher instead of a single compiled step
+            return _make_async_train_step(model, mesh, tcfg, lr_fn,
+                                          optimizer, eng, collect_stats,
+                                          aparams), plan
         pspec = jax.tree_util.tree_map(lambda _: P(), aparams)
         rep_ef_sizes = None
         if tcfg.error_feedback and two_level:
@@ -791,6 +915,202 @@ def _opt_specs(optimizer, tcfg: TrainConfig, pspec):
     if tcfg.optimizer == "adamw":
         return opt_lib.AdamState(mu=pspec, nu=pspec, count=P())
     return pspec  # sgd momentum mirrors params
+
+
+class AsyncTrainStep:
+    """Two-time-scale ``step_fn(state, batch, key)`` for the temporal
+    ``two_level_async`` hierarchy: a host-side dispatcher over TWO
+    compiled shard_maps —
+
+      ``inner_fn``   one inner optimizer step on the worker's local
+                     (stacked) params, gradients pmean'd over the fast
+                     intra (ICI) axes only: ZERO wire collectives, no
+                     rounding-stream draws, the DCN tier is never touched;
+      ``sync_fn``    the window's H-th inner update followed by ONE
+                     quantized Algorithm-2 exchange of the outer
+                     pseudo-gradient (``anchor - local_params``) over the
+                     DCN axes through the same fused engines the spatial
+                     two_level step uses (policy groups, EF residuals,
+                     ``pipeline_chunks`` all compose), feeding the outer
+                     SGD-momentum/Nesterov optimizer in
+                     ``TrainState.outer`` — after which every worker holds
+                     the identical new anchor.
+
+    The window position is read host-side from the ABSOLUTE step counter
+    (like :class:`ScheduledTrainStep` reads its phase), so a checkpoint
+    restored mid-window resumes at the right phase with no extra
+    bookkeeping: sync fires on steps H-1, 2H-1, ... — the H-th update of
+    every window."""
+
+    def __init__(self, inner_fn, sync_fn, local_steps: int):
+        self.inner_fn, self.sync_fn = inner_fn, sync_fn
+        self.local_steps = int(local_steps)
+
+    def is_sync_step(self, step: int) -> bool:
+        return (int(step) + 1) % self.local_steps == 0
+
+    def __call__(self, state: TrainState, batch, key):
+        if self.is_sync_step(int(state.step)):
+            return self.sync_fn(state, batch, key)
+        return self.inner_fn(state, batch, key)
+
+
+def _make_async_train_step(model: LM, mesh, tcfg: TrainConfig, lr_fn,
+                           optimizer, eng: ExchangeEngines, collect_stats,
+                           aparams) -> AsyncTrainStep:
+    """Build the two compiled halves of :class:`AsyncTrainStep`.
+
+    State layout (see :func:`init_state`): params/opt leaves carry a
+    leading worker axis sharded over the dp axes (inner steps make them
+    pod-divergent; the stacked layout keeps that divergence honest in
+    shardings and checkpoints — each worker sees its own ``leaf[0]``
+    slice inside the shard_map), while ``outer.anchor``/``outer.mom`` are
+    truly replicated (rewritten only at sync steps from the exchange's
+    identical output)."""
+    cfg = model.cfg
+    dp_axes = eng.plan.dp_axes
+    pex, intra_axes, n_intra = eng.pex, eng.intra_axes, eng.n_intra
+    two_level = bool(intra_axes)
+    nesterov = tcfg.outer_optimizer == "nesterov"
+    outer_lr, outer_mu = tcfg.outer_lr, tcfg.outer_momentum
+    ef_sizes = pex.ef_shard_sizes(n_intra)
+    use_ef = (tcfg.error_feedback
+              and any(s is not None for s in ef_sizes))
+
+    def unstack(t):
+        return jax.tree_util.tree_map(lambda x: x[0], t)
+
+    def stack(t):
+        return jax.tree_util.tree_map(lambda x: x[None], t)
+
+    def _inner_update(state: TrainState, batch):
+        """The shared inner computation: pod-synchronous gradient + one
+        inner optimizer step on this worker's local parameter view."""
+        params = unstack(state.params)
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(params, batch)
+        if intra_axes:
+            # ONE multi-operand psum over the fast ICI axes; inner steps
+            # never touch the DCN tier (the point of the temporal split)
+            grads = jax.lax.pmean(grads, intra_axes)
+        lr = lr_fn(state.step)
+        updates, new_opt = optimizer.update(grads, unstack(state.opt),
+                                            params, lr)
+        return (opt_lib.apply_updates(params, updates), new_opt, loss,
+                metrics, lr)
+
+    def _pack(state, new_params, new_opt, new_ef, outer, loss, metrics,
+              lr, stats=None):
+        if stats is not None:
+            metrics = dict(metrics, exchange_stats=stats)
+        # scalar logging reductions over the FULL dp mesh (negligible
+        # bytes; the gradient payload itself never crosses pods here)
+        metrics = jax.tree_util.tree_map(
+            lambda m: jax.lax.pmean(m, dp_axes), metrics)
+        loss = jax.lax.pmean(loss, dp_axes)
+        metrics = dict(metrics, loss=loss, lr=lr)
+        return TrainState(params=stack(new_params), opt=stack(new_opt),
+                          step=state.step + 1, ef=new_ef,
+                          outer=outer), metrics
+
+    def inner_step(state: TrainState, batch, key):
+        del key              # inner steps draw no rounding bits at all
+        new_params, new_opt, loss, metrics, lr = _inner_update(state,
+                                                               batch)
+        return _pack(state, new_params, new_opt, state.ef, state.outer,
+                     loss, metrics, lr)
+
+    def sync_step(state: TrainState, batch, key):
+        new_params, new_opt, loss, metrics, lr = _inner_update(state,
+                                                               batch)
+        # outer pseudo-gradient: the window's parameter delta — identical
+        # within a pod (inner grads are intra-pmean'd), divergent across
+        # pods; exactly the arbitrary-distribution input the optimal-
+        # condition level fits are built for
+        delta = jax.tree_util.tree_map(
+            lambda a, p: (a - p).astype(jnp.float32),
+            state.outer.anchor, new_params)
+        step_key = jax.random.fold_in(key, state.step)
+        k = jax.random.fold_in(step_key, _FUSED_SALT)
+        bufs = pex.layout.flatten_groups(delta)
+        new_ef = state.ef
+        stats = None
+        if two_level:
+            # the literal two_level wire path, fed the delta: fp intra
+            # scatter -> EF add on the shard -> quantized Algorithm 2
+            # over the pod axes only -> fp intra gather
+            shards, valids = pex.intra_scatter_parts(bufs)
+            if use_ef:
+                shards = tuple(s if e is None else s + e
+                               for s, e in zip(shards, state.ef))
+                local = pex.local_qdq_shard_parts(shards, k, valids)
+                new_ef = tuple(None if e is None else s - l
+                               for e, s, l in zip(state.ef, shards,
+                                                  local))
+            if collect_stats:
+                stats = pex.group_stats(shards, new_ef if use_ef else None)
+            mean_shards = pex.exchange_shard_parts(shards, k, valids)
+            delta_mean = pex.layout.unflatten_groups(
+                pex.intra_gather_parts(mean_shards), restore_dtype=False)
+        else:
+            # degenerate intra half (pods-only dp mesh): the outer
+            # exchange runs flat over all dp axes, EF on the full buffers
+            if use_ef:
+                bufs = tuple(b if e is None else b + e
+                             for b, e in zip(bufs, state.ef))
+                local = pex.local_qdq_parts(bufs, k)
+                new_ef = tuple(None if e is None else b - l
+                               for e, b, l in zip(state.ef, bufs, local))
+            if collect_stats:
+                stats = pex.group_stats(bufs, new_ef if use_ef else None)
+            delta_mean = pex.layout.unflatten_groups(
+                pex.exchange_parts(bufs, k), restore_dtype=False)
+        # outer optimizer on the exchanged mean pseudo-gradient; its
+        # output is globally identical, so anchor/mom stay replicated
+        mom = jax.tree_util.tree_map(
+            lambda m, d: outer_mu * m + d, state.outer.mom, delta_mean)
+        upd = (jax.tree_util.tree_map(
+                   lambda d, m: d + outer_mu * m, delta_mean, mom)
+               if nesterov else mom)
+        outer_params = jax.tree_util.tree_map(
+            lambda a, u: (a - outer_lr * u).astype(a.dtype),
+            state.outer.anchor, upd)
+        outer = OuterState(anchor=outer_params, mom=mom)
+        return _pack(state, outer_params, new_opt, new_ef, outer, loss,
+                     metrics, lr, stats)
+
+    dp_ent = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    stacked = jax.tree_util.tree_map(lambda _: P(dp_ent), aparams)
+    aopt = jax.eval_shape(optimizer.init, aparams)
+    rep = lambda t: jax.tree_util.tree_map(lambda _: P(), t)  # noqa: E731
+    state_specs = TrainState(
+        params=stacked,
+        opt=jax.tree_util.tree_map(lambda _: P(dp_ent), aopt),
+        step=P(),
+        ef=(tuple(None if s is None else P(dp_ent) for s in ef_sizes)
+            if use_ef else None),
+        outer=OuterState(anchor=rep(aparams), mom=rep(aparams)))
+    batch_specs = {"tokens": P(dp_ent)}
+    if cfg.encoder:
+        batch_specs["enc_embeds"] = P(dp_ent)
+    inner_metric_specs = {"nll": P(), "aux": P(), "tokens": P(),
+                          "loss": P(), "lr": P()}
+    sync_metric_specs = dict(inner_metric_specs)
+    if collect_stats:
+        sync_metric_specs["exchange_stats"] = P()
+    inner_fn = jax.jit(
+        shard_map(inner_step, mesh=mesh,
+                  in_specs=(state_specs, batch_specs, P()),
+                  out_specs=(state_specs, inner_metric_specs),
+                  axis_names=dp_axes, check_vma=False),
+        donate_argnums=(0,))
+    sync_fn = jax.jit(
+        shard_map(sync_step, mesh=mesh,
+                  in_specs=(state_specs, batch_specs, P()),
+                  out_specs=(state_specs, sync_metric_specs),
+                  axis_names=dp_axes, check_vma=False),
+        donate_argnums=(0,))
+    return AsyncTrainStep(inner_fn, sync_fn, tcfg.local_steps)
 
 
 class ScheduledTrainStep:

@@ -1,0 +1,333 @@
+"""Temporal hierarchy (two_level_async) suite (PR tentpole).
+
+Covers: hierarchy resolution (the degenerate H=1 window IS two_level);
+TrainConfig validation; the ``sync_every`` per-link accounting (exactly
+H-fold fewer quantized DCN bytes/step, inner fp intra all-reduce added
+to ICI); and, in 8-fake-device subprocesses: H=1 bit-identity to
+two_level, the H=4 window's pod divergence between syncs + global
+reconvergence at syncs, mid-window checkpoint/resume reproducing the
+next outer sync bit-for-bit, and the traced collective split (inner
+step wire-silent, sync step's quantized traffic on the pod axis only).
+
+Multi-device cases run in subprocesses with XLA_FLAGS forcing 8 host
+devices (the main test process must keep the default single-device
+view, per the repo's dry-run-only rule for fake device counts).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import pytest
+
+from repro.core import comm, make_quantizer
+from repro.train import TrainConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_devices(body: str, n_devices: int = 8) -> str:
+    prog = textwrap.dedent(body)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", prog], env=env,
+                         capture_output=True, text=True, timeout=1800)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+class TestResolve:
+    def test_registered(self):
+        assert "two_level_async" in comm.HIERARCHIES
+
+    def test_h1_resolves_to_two_level(self):
+        # the degenerate window is not "similar to" two_level — it IS the
+        # two_level code path, so H=1 bit-identity holds by construction
+        assert comm.resolve_hierarchy("two_level_async", ("pod", "data"),
+                                      local_steps=1) == "two_level"
+
+    def test_h_gt_1_stays_async(self):
+        assert comm.resolve_hierarchy("two_level_async", ("pod", "data"),
+                                      local_steps=4) == "two_level_async"
+
+    def test_auto_never_picks_async(self):
+        assert comm.resolve_hierarchy("auto", ("pod", "data"),
+                                      local_steps=4) == "two_level"
+        assert comm.resolve_hierarchy("auto", ("data",),
+                                      local_steps=4) == "flat"
+
+    def test_split_degrades_async_to_two_level(self):
+        assert comm.split_dp_axes(("pod", "data"), "two_level_async") == \
+            (("data",), ("pod",))
+
+
+class TestConfigValidation:
+    def test_local_steps_lower_bound(self):
+        with pytest.raises(ValueError, match="local_steps"):
+            TrainConfig(policy="orq-9", local_steps=0)
+
+    def test_local_steps_need_async_hierarchy(self):
+        with pytest.raises(ValueError, match="two_level_async"):
+            TrainConfig(policy="orq-9", hierarchy="two_level",
+                        local_steps=4)
+
+    def test_async_rejects_fsdp(self):
+        with pytest.raises(ValueError, match="replicated"):
+            TrainConfig(policy="orq-9", mode="fsdp",
+                        hierarchy="two_level_async", local_steps=4)
+
+    def test_async_rejects_per_leaf(self):
+        with pytest.raises(ValueError, match="fused_exchange"):
+            TrainConfig(policy="orq-9", mode="replicated",
+                        hierarchy="two_level_async", local_steps=4,
+                        fused_exchange=False)
+
+    def test_bad_outer_optimizer(self):
+        with pytest.raises(ValueError, match="outer_optimizer"):
+            TrainConfig(policy="orq-9", mode="replicated",
+                        hierarchy="two_level_async", local_steps=4,
+                        outer_optimizer="adamw")
+
+    def test_valid_async_config(self):
+        tcfg = TrainConfig(policy="orq-9", mode="replicated",
+                           hierarchy="two_level_async", local_steps=4)
+        assert tcfg.outer_optimizer == "nesterov"
+        assert tcfg.outer_lr == 0.7 and tcfg.outer_momentum == 0.9
+
+
+class TestSyncEveryAccounting:
+    def test_dcn_bytes_drop_exactly_h_fold(self):
+        qz = make_quantizer("orq-9", bucket_size=512)
+        n = 10_000_000
+        base = comm.link_stats(qz, n, n_intra=16, n_inter=2,
+                               two_level=True)
+        for h in (2, 4, 8):
+            st = comm.link_stats(qz, n, n_intra=16, n_inter=2,
+                                 two_level=True, sync_every=h)
+            assert st["dcn_q_bytes"] == pytest.approx(
+                base["dcn_q_bytes"] / h)
+            assert st["dcn_bytes"] == pytest.approx(
+                base["dcn_bytes"] / h)
+
+    def test_inner_fp_allreduce_lands_on_ici(self):
+        qz = make_quantizer("orq-9", bucket_size=512)
+        n, n_intra, h = 1_000_000, 16, 4
+        base = comm.link_stats(qz, n, n_intra=n_intra, n_inter=2,
+                               two_level=True)
+        st = comm.link_stats(qz, n, n_intra=n_intra, n_inter=2,
+                             two_level=True, sync_every=h)
+        inner = 8.0 * n * (n_intra - 1) / n_intra
+        assert st["ici_bytes"] == pytest.approx(
+            base["ici_bytes"] / h + inner)
+        assert st["launches"] == pytest.approx(base["launches"] / h + 1)
+
+    def test_sync_every_one_is_identity(self):
+        qz = make_quantizer("orq-9", bucket_size=512)
+        a = comm.link_stats(qz, 10_000, n_intra=4, n_inter=2,
+                            two_level=True)
+        b = comm.link_stats(qz, 10_000, n_intra=4, n_inter=2,
+                            two_level=True, sync_every=1)
+        assert a == b
+
+    def test_sync_every_validated(self):
+        qz = make_quantizer("orq-9", bucket_size=512)
+        with pytest.raises(ValueError, match="sync_every"):
+            comm.link_stats(qz, 100, n_intra=2, n_inter=2,
+                            two_level=True, sync_every=0)
+
+    def test_single_pod_inner_adds_no_ici(self):
+        # n_intra=1: there is no intra axis, so amortization divides
+        # everything and adds nothing
+        qz = make_quantizer("orq-9", bucket_size=512)
+        base = comm.link_stats(qz, 10_000, n_intra=1, n_inter=8,
+                               two_level=False)
+        st = comm.link_stats(qz, 10_000, n_intra=1, n_inter=8,
+                             two_level=False, sync_every=4)
+        assert st["ici_bytes"] == pytest.approx(base["ici_bytes"] / 4)
+        assert st["launches"] == pytest.approx(base["launches"] / 4)
+
+    def test_policy_link_stats_passthrough(self):
+        from repro.core import QuantPolicy
+        policy = QuantPolicy.parse("norm=fp,default=orq-9",
+                                   bucket_size=512)
+        ps = [("norm", 1000), ("w", 100_000)]
+        base, _ = comm.policy_link_stats(policy, ps, n_intra=4, n_inter=2,
+                                         two_level=True)
+        st, _ = comm.policy_link_stats(policy, ps, n_intra=4, n_inter=2,
+                                       two_level=True, sync_every=4)
+        assert st["dcn_q_bytes"] == pytest.approx(base["dcn_q_bytes"] / 4)
+
+
+COMMON = """
+import hashlib
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import get_smoke_config
+from repro.data import SyntheticLM
+from repro.models import LM
+from repro.optim.schedule import constant_lr
+from repro.train import AsyncTrainStep, TrainConfig, make_train_step
+from repro.train.step import init_state
+
+def digest(tree):
+    h = hashlib.sha256()
+    for leaf in jax.tree_util.tree_leaves(tree):
+        h.update(np.asarray(jax.device_get(leaf)).tobytes())
+    return h.hexdigest()
+
+cfg = get_smoke_config("lm-100m")
+model = LM(cfg)
+mesh = jax.make_mesh((2, 4), ("pod", "data"))
+data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=16, batch_size=8,
+                   seed=3)
+POLICY = "norm|bias=fp,default=orq-9"
+"""
+
+
+def test_async_h1_bit_identical_to_two_level():
+    """Acceptance: two_level_async(H=1) must be BIT-IDENTICAL to
+    two_level on the same (2, 4) pod x data mesh — same program (the
+    resolution collapses the degenerate window), same losses, same
+    params/opt/EF after several steps."""
+    run_devices(COMMON + """
+out = {}
+for hier, h in (("two_level", 1), ("two_level_async", 1)):
+    tcfg = TrainConfig(policy=POLICY, mode="replicated", hierarchy=hier,
+                       local_steps=h, error_feedback=True)
+    state = init_state(model, mesh, tcfg, jax.random.key(0))
+    step_fn, _ = make_train_step(model, mesh, tcfg, constant_lr(0.05))
+    assert not isinstance(step_fn, AsyncTrainStep), hier
+    losses = []
+    for i in range(4):
+        state, m = step_fn(state, data.batch(i), jax.random.key(42))
+        losses.append(float(m["loss"]))
+    out[hier] = (losses, digest((state.params, state.opt, state.ef)))
+assert out["two_level"] == out["two_level_async"], out
+print("H1-BITEXACT OK", out["two_level"][1][:12])
+""")
+
+
+def test_async_h4_window_divergence_and_sync():
+    """The H=4 window's contract on the stacked state: params diverge
+    across pods during inner steps (each pod optimizes locally), every
+    sync step makes them globally identical again AND equal to the new
+    outer anchor; anchor/momentum only move at sync steps; loss
+    decreases over the run."""
+    run_devices(COMMON + """
+H = 4
+tcfg = TrainConfig(policy=POLICY, mode="replicated",
+                   hierarchy="two_level_async", local_steps=H,
+                   error_feedback=True)
+state = init_state(model, mesh, tcfg, jax.random.key(0))
+step_fn, _ = make_train_step(model, mesh, tcfg, constant_lr(0.05))
+assert isinstance(step_fn, AsyncTrainStep)
+
+def pod_views(state):
+    # stacked leading worker axis: rows 0..3 = pod 0, rows 4..7 = pod 1
+    leaves = [np.asarray(jax.device_get(x))
+              for x in jax.tree_util.tree_leaves(state.params)]
+    return ([l[0] for l in leaves], [l[4] for l in leaves])
+
+losses = []
+for i in range(2 * H):
+    is_sync = step_fn.is_sync_step(int(state.step))
+    assert is_sync == ((i + 1) % H == 0), i
+    anchor_before = digest(state.outer.anchor)
+    state, m = step_fn(state, data.batch(i), jax.random.key(42))
+    losses.append(float(m["loss"]))
+    p0, p1 = pod_views(state)
+    diverged = any(not np.array_equal(a, b) for a, b in zip(p0, p1))
+    if is_sync:
+        assert not diverged, f"step {i}: pods differ AFTER sync"
+        # the agreed params ARE the new anchor (next window's start)
+        anchors = [np.asarray(jax.device_get(x)) for x in
+                   jax.tree_util.tree_leaves(state.outer.anchor)]
+        for a, p in zip(anchors, p0):
+            np.testing.assert_array_equal(a, p)
+        assert digest(state.outer.anchor) != anchor_before, i
+    else:
+        assert diverged, f"step {i}: pods identical mid-window"
+        assert digest(state.outer.anchor) == anchor_before, i
+assert losses[-1] < losses[0], losses
+print("H4-WINDOW OK", losses)
+""")
+
+
+def test_async_mid_window_checkpoint_resume_bit_exact():
+    """ISSUE satellite: save the full TrainState at inner step k < H,
+    restore it, and the next outer sync (and everything after) must be
+    bit-for-bit what the uninterrupted run produced."""
+    run_devices(COMMON + """
+from repro.checkpoint import load_checkpoint, save_checkpoint
+import os, tempfile
+
+H, SAVE_AT, TOTAL = 4, 6, 8     # save mid-window (position k=2 of 4)
+tcfg = TrainConfig(policy=POLICY, mode="replicated",
+                   hierarchy="two_level_async", local_steps=H,
+                   error_feedback=True)
+step_fn, _ = make_train_step(model, mesh, tcfg, constant_lr(0.05))
+
+def run(state, start, stop):
+    for i in range(start, stop):
+        state, _ = step_fn(state, data.batch(i), jax.random.key(42))
+    return state
+
+state = init_state(model, mesh, tcfg, jax.random.key(0))
+state = run(state, 0, SAVE_AT)
+with tempfile.TemporaryDirectory() as tmp:
+    path = os.path.join(tmp, "mid.npz")
+    save_checkpoint(path, state, step=int(state.step))
+    full = run(state, SAVE_AT, TOTAL)
+    # a FRESH state tree restored strictly from the mid-window snapshot
+    like = jax.eval_shape(
+        lambda k: init_state(model, mesh, tcfg, k), jax.random.key(0))
+    like = jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                  like)
+    restored, step = load_checkpoint(path, like=like)
+assert step == SAVE_AT and int(restored.step) == SAVE_AT
+resumed = run(restored, SAVE_AT, TOTAL)
+df = digest((full.params, full.opt, full.ef, full.outer))
+dr = digest((resumed.params, resumed.opt, resumed.ef, resumed.outer))
+assert df == dr, (df, dr)
+print("MID-WINDOW-RESUME OK", df[:12])
+""")
+
+
+def test_async_traced_collective_split():
+    """The temporal claim, pinned on the jaxprs themselves: the inner
+    step traces ZERO wire collectives (no all_to_all/all_gather/
+    reduce_scatter/psum_scatter on ANY axis — its only collectives are
+    psum means), while the sync step runs its quantized all_to_all on
+    the pod (DCN) axis ONLY, bracketed by intra scatter/gather."""
+    run_devices(COMMON + """
+from repro.utils.jaxpr import axis_collectives, collective_axis_counts
+
+tcfg = TrainConfig(policy=POLICY, mode="replicated",
+                   hierarchy="two_level_async", local_steps=4,
+                   error_feedback=True)
+state = jax.eval_shape(lambda k: init_state(model, mesh, tcfg, k),
+                       jax.random.key(0))
+step_fn, _ = make_train_step(model, mesh, tcfg, constant_lr(0.05))
+batch = data.batch(0)
+
+inner = collective_axis_counts(
+    jax.make_jaxpr(step_fn.inner_fn)(state, batch, jax.random.key(1)))
+wire = ("all_to_all", "all_gather", "reduce_scatter", "psum_scatter")
+for (p, ax), cnt in inner.items():
+    assert p not in wire, (p, ax, cnt)
+assert any(p == "psum" for (p, ax) in inner), inner
+
+sync = collective_axis_counts(
+    jax.make_jaxpr(step_fn.sync_fn)(state, batch, jax.random.key(1)))
+# one quantized group (default=orq-9): 2 a2a (words + levels) on pod
+assert axis_collectives(sync, "all_to_all", ("pod",)) == 2, sync
+for (p, ax), cnt in sync.items():
+    if p == "all_to_all":
+        assert ax == ("pod",), (p, ax, cnt)   # DCN only, ever
+print("TRACE-SPLIT OK inner:", dict(inner))
+print("TRACE-SPLIT OK sync a2a(pod):", 2)
+""")
